@@ -1,0 +1,61 @@
+"""Serving example: batched prefill + greedy decode on a small model.
+
+Exercises the inference path end to end — prefill writes the KV cache,
+serve_step extends it one token at a time — for three different cache
+families (dense GQA / RWKV state / hybrid attn+SSM).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.zoo import (
+    ShapeSpec,
+    build_params,
+    frontend_len,
+    init_kv_cache,
+    make_batch,
+    make_serve_step,
+)
+
+
+def serve(arch: str, batch: int = 2, prompt: int = 32, gen: int = 16) -> None:
+    from repro.models.zoo import _head, forward
+
+    cfg = get_config(arch, smoke=True)
+    params, _ = build_params(cfg, 0)
+    spec = ShapeSpec("s", prompt, batch, "prefill")
+    b = make_batch(cfg, spec, seed=0)
+    t_max = prompt + gen
+    fl = frontend_len(cfg, prompt)
+
+    @jax.jit
+    def prefill(params, b):
+        cache = init_kv_cache(cfg, batch, t_max, enc_len=fl, dtype=cfg.dtype)
+        h, cache, _ = forward(cfg, params, b, caches=cache, offset=jnp.int32(0),
+                              return_hidden=True)
+        return _head(cfg, params, h[:, -1:, :])[:, -1, :], cache
+
+    step = jax.jit(make_serve_step(cfg))
+    logits, cache = prefill(params, b)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [int(tok[0, 0])]
+    t0 = time.perf_counter()
+    for i in range(gen - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(prompt + i))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    dt = (time.perf_counter() - t0) / (gen - 1)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    print(f"{arch:22s} cache={sorted(init_kv_cache(cfg, 1, 8).keys())} "
+          f"{1e3*dt:6.1f} ms/tok  ids[:8]={out[:8]}")
+
+
+if __name__ == "__main__":
+    for arch in ("yi-9b", "rwkv6-1.6b", "hymba-1.5b", "seamless-m4t-medium"):
+        serve(arch)

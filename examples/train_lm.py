@@ -1,0 +1,83 @@
+"""End-to-end driver: train a width-reduced gemma2-family LM for a few
+hundred steps through the production code path — config zoo,
+compute-to-data embedding, AdamW + cosine schedule, token pipeline, async
+checkpointing, fault-tolerant driver.
+
+The default is a ~50M config that fits this container's single CPU core
+at a few seconds per step; ``--d-model 768 --layers 8`` gives the ~118M
+variant (same code path, ~3x the step time here, trivial on real HW).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import json
+import math
+import time
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt-train-lm")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.data import DataConfig
+    from repro.models.zoo import build_params, param_count
+    from repro.optim import AdamW, cosine_schedule
+    from repro.runtime import TrainDriver
+
+    d = args.d_model
+    cfg = get_config("gemma2-2b").replace(
+        name=f"gemma2-mini-d{d}", n_layers=args.layers, d_model=d,
+        n_heads=max(d // 64, 4), n_kv_heads=max(d // 128, 2),
+        head_dim=64, d_ff=4 * d, vocab=32_000, window=128,
+        embed_mult=math.sqrt(float(d)),
+        remat=False, attn_chunk=0, microbatch=1,
+    )
+    n = param_count(build_params(cfg, 0)[0])
+    print(f"config {cfg.name}: {n/1e6:.1f}M params")
+
+    driver = TrainDriver(
+        cfg,
+        ckpt_dir=args.ckpt_dir,
+        opt=AdamW(lr=cosine_schedule(6e-4, warmup_steps=30, total_steps=args.steps)),
+        data=DataConfig(
+            seq_len=args.seq_len, global_batch=args.global_batch, vocab=cfg.vocab
+        ),
+        ckpt_every=100,
+    )
+    t0 = time.time()
+    report = driver.run(args.steps)
+    k = max(len(report.losses) // 10, 1)
+    curve = [round(sum(report.losses[i:i+k])/len(report.losses[i:i+k]), 3)
+             for i in range(0, len(report.losses), k)]
+    out = {
+        "params_m": round(n / 1e6, 1),
+        "steps": report.steps_run,
+        "loss_curve": curve,
+        "first_loss": round(report.losses[0], 3),
+        "last_loss": round(report.losses[-1], 3),
+        "tokens_per_s": round(args.seq_len * args.global_batch / report.step_time_s),
+        "wall_min": round((time.time() - t0) / 60, 1),
+    }
+    print(json.dumps(out))
+    # the driver auto-resumes from any committed checkpoint in --ckpt-dir
+    # (that is the FT feature); only assert convergence for scratch runs
+    if report.steps_run == args.steps:
+        head = sum(report.losses[:10]) / 10
+        tail = sum(report.losses[-10:]) / 10
+        assert tail < head, f"loss must decrease ({head:.3f} -> {tail:.3f})"
+    else:
+        print(f"(resumed run: {report.steps_run}/{args.steps} fresh steps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Compiled-artifact analysis: HLO cost/collective parsing + roofline."""
+
+from .hlo import HloCost, analyze_hlo
+from .roofline import HW_V5E, RooflineReport, roofline
+
+__all__ = ["HW_V5E", "HloCost", "RooflineReport", "analyze_hlo", "roofline"]

@@ -1,0 +1,392 @@
+"""Loop-aware HLO text analysis: FLOPs, memory traffic, collective bytes.
+
+Why not ``compiled.cost_analysis()``?  XLA's HloCostAnalysis visits a
+``while`` body ONCE — a model scanned over 48 layers reports 1/48th of its
+real FLOPs (verified empirically; see EXPERIMENTS.md §Roofline
+methodology).  Since every model here scans its blocks (that is what keeps
+512-device compiles tractable), we parse the optimized post-partitioning
+HLO text ourselves and multiply loop bodies by their trip counts.
+
+Counting rules, per instruction:
+
+* ``dot``           2 * prod(output dims) * prod(lhs contracting dims)
+* ``convolution``   approximated via kernel-elements MACs
+* collectives       operand bytes, tagged by kind
+* memory traffic    operand bytes + output bytes at fusion boundaries
+                    (a fusion reads inputs / writes outputs exactly once —
+                    the HBM-traffic semantics we want); cheap bookkeeping
+                    ops (tuple/gte/bitcast/param/constant) contribute 0
+* ``while``         body cost x trip count (trip count = max integer
+                    constant in the condition computation — exact for
+                    lax.scan lowerings)
+* ``fusion``/calls  FLOPs and collectives recurse; bytes do not cross
+                    fusion boundaries
+
+All shapes in a post-SPMD module are PER-DEVICE shapes, so every number
+here is per-device; multiply by device count for machine totals.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "token": 0,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e8m0fnu": 1,
+    "u1": 1, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+_ZERO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "parameter(0)",
+    "rng-get-and-update-state", "opt-barrier", "domain", "token",
+}
+
+# async wrappers: the -done op carries no new traffic
+_ASYNC_SUFFIX = ("-start", "-done", "-update")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0  # pessimistic: every op at fusion grain
+    bytes_major: float = 0.0  # TPU-roofline: dots/gathers/scatters/colls
+    collective_bytes: float = 0.0
+    collective_by_kind: dict[str, float] = field(default_factory=dict)
+    collective_count: int = 0
+    dot_flops: float = 0.0
+    while_trip_counts: list[int] = field(default_factory=list)
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(
+            flops=self.flops * k,
+            bytes_accessed=self.bytes_accessed * k,
+            bytes_major=self.bytes_major * k,
+            collective_bytes=self.collective_bytes * k,
+            collective_by_kind={a: b * k for a, b in self.collective_by_kind.items()},
+            collective_count=int(self.collective_count * k),
+            dot_flops=self.dot_flops * k,
+            while_trip_counts=list(self.while_trip_counts),
+        )
+
+    def add(self, other: "HloCost") -> None:
+        self.flops += other.flops
+        self.bytes_accessed += other.bytes_accessed
+        self.bytes_major += other.bytes_major
+        self.collective_bytes += other.collective_bytes
+        for k, v in other.collective_by_kind.items():
+            self.collective_by_kind[k] = self.collective_by_kind.get(k, 0.0) + v
+        self.collective_count += other.collective_count
+        self.dot_flops += other.dot_flops
+        self.while_trip_counts.extend(other.while_trip_counts)
+
+
+# ops whose operand/output traffic survives perfect elementwise fusion on a
+# TPU: MXU reads/writes, HBM-resident gathers/scatters, layout changes, and
+# the wire.  The optimistic `bytes_major` sums traffic over these only —
+# the honest TPU memory-roofline term (`bytes_accessed` is the pessimistic
+# every-op bound, inflated by the CPU backend's weaker fusion).
+_MAJOR_OPS = {
+    "dot", "convolution", "gather", "scatter", "scatter-add",
+    "dynamic-slice", "dynamic-update-slice", "transpose", "sort",
+    "reduce-window", "select-and-scatter",
+}
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str  # everything after the operand list
+    line: str
+
+
+def _parse_instr(line: str) -> Instr | None:
+    s = _COMMENT_RE.sub("", line.strip())
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%") or "=" not in s:
+        return None
+    name, _, rhs = s.partition("=")
+    name = name.strip().lstrip("%")
+    rhs = rhs.strip()
+    # --- output type: tuple "(...)" or single "dtype[dims]{layout}"
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        type_str, rest = rhs[: i + 1], rhs[i + 1 :]
+    else:
+        m = re.match(r"(\w+\[[\d,]*\](?:\{[^}]*\})?)", rhs)
+        if not m:
+            return None
+        type_str, rest = m.group(1), rhs[m.group(1).__len__() :]
+    rest = rest.strip()
+    m = re.match(r"([\w\-]+)\(", rest)
+    if not m:
+        return None
+    opcode = m.group(1)
+    # --- operand list: matching parens from the opcode's '('
+    start = rest.index("(")
+    depth = 0
+    end = start
+    for i in range(start, len(rest)):
+        depth += rest[i] == "("
+        depth -= rest[i] == ")"
+        if depth == 0:
+            end = i
+            break
+    oper_str = rest[start + 1 : end]
+    attrs = rest[end + 1 :]
+    operands = [
+        o.strip().lstrip("%")
+        for o in _split_top(oper_str)
+        if o.strip().startswith("%") or re.match(r"^\s*[\w.\-]+\s*$", o)
+    ]
+    return Instr(name, type_str, opcode, operands, attrs, s)
+
+
+def _split_top(s: str) -> list[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+            continue
+        depth += ch in "([{"
+        depth -= ch in ")]}"
+        cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+
+def parse_module(text: str) -> tuple[dict[str, list[Instr]], str, dict[str, Instr]]:
+    """-> (computations, entry_name, global symbol table)."""
+    comps: dict[str, list[Instr]] = {}
+    symbols: dict[str, Instr] = {}
+    entry = ""
+    cur: str | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if s == "}":
+            cur = None
+            continue
+        m = _COMP_HDR.match(s)
+        if m and "=" not in s.split("(")[0]:
+            cur = m.group(1)
+            comps[cur] = []
+            if s.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        ins = _parse_instr(s)
+        if ins is not None:
+            comps[cur].append(ins)
+            symbols[ins.name] = ins
+    return comps, entry, symbols
+
+
+def _operand_bytes(ins: Instr, symbols: dict[str, Instr]) -> int:
+    total = 0
+    for o in ins.operands:
+        ref = symbols.get(o)
+        if ref is not None:
+            total += _shape_bytes(ref.type_str)
+    return total
+
+
+def _dot_flops(ins: Instr, symbols: dict[str, Instr]) -> float:
+    out_elems = 1
+    for d in _first_dims(ins.type_str):
+        out_elems *= d
+    lhs = symbols.get(ins.operands[0]) if ins.operands else None
+    lhs_dims = _first_dims(lhs.type_str) if lhs else []
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    contract = 1
+    if m and m.group(1):
+        for i in m.group(1).split(","):
+            idx = int(i)
+            if idx < len(lhs_dims):
+                contract *= lhs_dims[idx]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(ins: Instr, symbols: dict[str, Instr]) -> float:
+    out_dims = _first_dims(ins.type_str)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    ker = symbols.get(ins.operands[1]) if len(ins.operands) > 1 else None
+    k_elems = 1
+    for d in (_first_dims(ker.type_str) if ker else []):
+        k_elems *= d
+    out_feat = out_dims[-1] if out_dims else 1
+    return 2.0 * out_elems * max(k_elems // max(out_feat, 1), 1)
+
+
+def _trip_count(instrs: list[Instr]) -> int:
+    best = 1
+    for ins in instrs:
+        for m in re.finditer(r"constant\((\d+)\)", ins.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _attr_comp(ins: Instr, key: str) -> str | None:
+    m = re.search(rf"{key}=%?([\w.\-]+)", ins.attrs)
+    return m.group(1) if m else None
+
+
+def _attr_comps(ins: Instr, key: str) -> list[str]:
+    m = re.search(rf"{key}=\{{([^}}]*)\}}", ins.attrs)
+    if not m:
+        one = _attr_comp(ins, key)
+        return [one] if one else []
+    return [c.strip().lstrip("%") for c in m.group(1).split(",") if c.strip()]
+
+
+def _analyze_comp(
+    comp: str,
+    comps: dict[str, list[Instr]],
+    symbols: dict[str, Instr],
+    cache: dict[str, HloCost],
+) -> HloCost:
+    if comp in cache:
+        return cache[comp]
+    cache[comp] = HloCost()  # cycle guard
+    total = HloCost()
+    for ins in comps.get(comp, ()):
+        op = ins.opcode
+        base = op
+        for suf in _ASYNC_SUFFIX:
+            if base.endswith(suf):
+                base = base[: -len(suf)]
+                break
+        if op == "dot":
+            f = _dot_flops(ins, symbols)
+            total.flops += f
+            total.dot_flops += f
+        elif op == "convolution":
+            f = _conv_flops(ins, symbols)
+            total.flops += f
+            total.dot_flops += f
+        if base in COLLECTIVE_OPS and not op.endswith(("-done", "-update")):
+            b = _operand_bytes(ins, symbols)
+            if b == 0:
+                b = _shape_bytes(ins.type_str)
+            total.collective_bytes += b
+            total.collective_count += 1
+            total.collective_by_kind[base] = total.collective_by_kind.get(base, 0.0) + b
+        # ---- memory traffic at fusion boundaries
+        if op not in _ZERO_COST and not op.endswith(("-done", "-update")):
+            traffic = _shape_bytes(ins.type_str) + _operand_bytes(ins, symbols)
+            total.bytes_accessed += traffic
+            if op in _MAJOR_OPS or base in COLLECTIVE_OPS:
+                total.bytes_major += traffic
+        # ---- called computations
+        if op == "while":
+            body = _attr_comp(ins, "body")
+            cond = _attr_comp(ins, "condition")
+            trips = _trip_count(comps.get(cond, [])) if cond else 1
+            if body:
+                sub = _analyze_comp(body, comps, symbols, cache)
+                total.add(sub.scaled(trips))
+                total.while_trip_counts.append(trips)
+        elif op == "fusion":
+            callee = _attr_comp(ins, "calls")
+            if callee:
+                sub = _analyze_comp(callee, comps, symbols, cache)
+                total.flops += sub.flops
+                total.dot_flops += sub.dot_flops
+                # a fusion's real HBM traffic is its boundary traffic; the
+                # interior only decides whether it counts as "major"
+                if sub.bytes_major > 0:
+                    total.bytes_major += _shape_bytes(ins.type_str) + _operand_bytes(
+                        ins, symbols
+                    )
+                total.collective_bytes += sub.collective_bytes
+                total.collective_count += sub.collective_count
+                for k, v in sub.collective_by_kind.items():
+                    total.collective_by_kind[k] = (
+                        total.collective_by_kind.get(k, 0.0) + v
+                    )
+        elif op in ("call", "custom-call", "async-start"):
+            for key in ("to_apply", "calls", "called_computations"):
+                for name in _attr_comps(ins, key):
+                    if name in comps:
+                        sub = _analyze_comp(name, comps, symbols, cache)
+                        total.add(sub)
+        elif op == "conditional":
+            branches = _attr_comps(ins, "branch_computations")
+            if not branches:
+                branches = [
+                    c
+                    for key in ("true_computation", "false_computation")
+                    for c in _attr_comps(ins, key)
+                ]
+            worst = HloCost()
+            for b in branches:
+                sub = _analyze_comp(b, comps, symbols, cache)
+                if sub.flops + sub.bytes_accessed > worst.flops + worst.bytes_accessed:
+                    worst = sub
+            total.add(worst)
+    cache[comp] = total
+    return total
+
+
+def analyze_hlo(text: str) -> HloCost:
+    """Analyze an optimized (post-partitioning) HLO module from its entry."""
+    comps, entry, symbols = parse_module(text)
+    if not entry:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else ""
+    return _analyze_comp(entry, comps, symbols, {})

@@ -1,0 +1,179 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+Hardware model: TPU v5e (the assignment's target)::
+
+    peak bf16 compute   197 TFLOP/s per chip
+    HBM bandwidth       819 GB/s per chip
+    ICI                 ~50 GB/s per link; effective per-chip collective
+                        bandwidth modeled as ICI_EFF = 100 GB/s (2 usable
+                        links sustained on a 2-D torus slice)
+
+Terms (all in seconds, per step, per chip — the partitioned HLO module is
+already the per-device program):
+
+    compute    = flops_per_device / PEAK
+    memory     = bytes_per_device / HBM
+    collective = wire_bytes_per_device / ICI_EFF
+
+``wire_bytes`` scales each collective's operand bytes by its ring factor:
+all-reduce moves ~2x its payload per chip, all-gather/reduce-scatter
+(n-1)/n =~ 1x, all-to-all (n-1)/n =~ 1x, collective-permute 1x.
+
+The dominant term is the bottleneck; the roofline fraction we report for
+a compute-bound cell is compute / max(all terms) (an upper bound on
+achievable MFU for this program shape on this mesh).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .hlo import HloCost
+
+TFLOP = 1e12
+GB = 1e9
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float  # per chip, bf16
+    hbm_bw: float  # bytes/s per chip
+    ici_eff: float  # effective collective bytes/s per chip
+    hbm_bytes: float  # capacity per chip
+
+
+HW_V5E = Hardware(
+    name="tpu-v5e", peak_flops=197 * TFLOP, hbm_bw=819 * GB, ici_eff=100 * GB,
+    hbm_bytes=16 * GB,
+)
+
+_RING_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "ragged-all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "collective-broadcast": 1.0,
+}
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # raw per-device quantities
+    flops_per_dev: float
+    bytes_per_dev: float
+    wire_bytes_per_dev: float
+    # terms, seconds
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    # usefulness
+    model_flops: float  # 6*N*D analytic
+    hlo_total_flops: float
+    useful_ratio: float  # model_flops / hlo_total_flops
+    mfu_bound: float  # compute / max(term)
+    memory_per_dev_bytes: float = 0.0  # from memory_analysis (fits HBM?)
+    collective_by_kind: dict = field(default_factory=dict)
+    note: str = ""
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "devices": self.n_devices,
+            "t_compute_s": round(self.t_compute, 6),
+            "t_memory_s": round(self.t_memory, 6),
+            "t_collective_s": round(self.t_collective, 6),
+            "dominant": self.dominant,
+            "model_flops": f"{self.model_flops:.3e}",
+            "hlo_flops": f"{self.hlo_total_flops:.3e}",
+            "useful_ratio": round(self.useful_ratio, 3),
+            "mfu_bound": round(self.mfu_bound, 3),
+            "hbm_gb_per_dev": round(self.memory_per_dev_bytes / GB, 2),
+        }
+
+
+def wire_bytes(cost: HloCost) -> float:
+    return sum(
+        v * _RING_FACTOR.get(k, 1.0) for k, v in cost.collective_by_kind.items()
+    )
+
+
+def roofline(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_devices: int,
+    cost: HloCost,
+    model_flops: float,
+    hw: Hardware = HW_V5E,
+    memory_per_dev: float = 0.0,
+    note: str = "",
+) -> RooflineReport:
+    wb = wire_bytes(cost)
+    t_c = cost.flops / hw.peak_flops
+    # memory term from major-op traffic (dots/gathers/scatters/collectives)
+    # — the TPU bound assuming perfect elementwise fusion; bytes_accessed
+    # is the pessimistic every-op bound, reported alongside
+    t_m = (cost.bytes_major or cost.bytes_accessed) / hw.hbm_bw
+    t_x = wb / hw.ici_eff
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    hlo_total = cost.flops * n_devices
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        n_devices=n_devices,
+        flops_per_dev=cost.flops,
+        bytes_per_dev=cost.bytes_accessed,
+        wire_bytes_per_dev=wb,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        dominant=dominant,
+        model_flops=model_flops,
+        hlo_total_flops=hlo_total,
+        useful_ratio=model_flops / hlo_total if hlo_total else 0.0,
+        mfu_bound=t_c / max(max(terms.values()), 1e-30),
+        memory_per_dev_bytes=memory_per_dev,
+        collective_by_kind=dict(cost.collective_by_kind),
+        note=note,
+    )
+
+
+def model_flops_per_step(cfg, shape_kind: str, tokens: int) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D(tokens) train, 2*N_active decode/prefill.
+
+    N counts *active* parameters (MoE: topk/n_experts of expert params;
+    embedding table excluded, LM head included)."""
+    from repro.models.zoo import build_params
+    import jax
+    import numpy as np
+
+    params = jax.eval_shape(lambda: build_params(cfg)[0])
+    n_total = 0
+    n_embed = 0
+    n_expert = 0
+    for k, p in params.items():
+        n = int(np.prod(p.shape))
+        n_total += n
+        if k == "embed.tok":
+            n_embed = n
+        if ".we_" in k:
+            n_expert += n
+    n = n_total - n_embed
+    if cfg.tie_embeddings:
+        n += n_embed  # tied head matmul is real compute
+    if cfg.n_experts and cfg.topk:
+        n -= n_expert * (1 - cfg.topk / cfg.n_experts)
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * n * tokens

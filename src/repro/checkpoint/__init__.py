@@ -1,0 +1,10 @@
+"""Checkpointing: sharded .npz trees, async writer, integrity digests."""
+
+from .store import (
+    CheckpointStore,
+    latest_step,
+    restore_state,
+    save_state,
+)
+
+__all__ = ["CheckpointStore", "latest_step", "restore_state", "save_state"]

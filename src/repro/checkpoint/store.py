@@ -1,0 +1,197 @@
+"""Checkpoint store: per-leaf .npy shards + manifest, async, verifiable.
+
+Layout (one directory per step)::
+
+    ckpt_dir/step_000042/
+      MANIFEST.json    {leaf path -> {file, shape, dtype, sha256}}
+      params.embed.tok.npy ...
+      _COMMIT          written last — a directory without it is torn and
+                       ignored by restore (crash-during-write safety)
+
+Design points for the 1000-node story:
+* **Async**: ``CheckpointStore.save_async`` snapshots the state to host
+  memory (device_get) on the training thread, then writes on a background
+  thread — the step loop never blocks on disk.
+* **Integrity**: per-leaf sha256 in the manifest, verified on restore.
+* **Restore-with-reshard (elastic)**: leaves are saved UNSHARDED (gathered
+  to host), so a restore may apply *any* new sharding — the elastic path
+  after losing a host re-lays the same logical state onto a smaller mesh
+  (``runtime/elastic.py``).
+* **Retention**: keep the last ``keep`` checkpoints, delete older only
+  after a newer _COMMIT exists.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+COMMIT = "_COMMIT"
+MANIFEST = "MANIFEST.json"
+
+_UINT_OF_SIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _to_savable(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    """np.save cannot serialize ml_dtypes (bf16/f8) — store a uint view and
+    remember the logical dtype in the manifest."""
+    name = arr.dtype.name
+    try:
+        np.dtype(name)
+        if arr.dtype.kind != "V":
+            return arr, name
+    except TypeError:
+        pass
+    return arr.view(_UINT_OF_SIZE[arr.dtype.itemsize]), name
+
+
+def _from_saved(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if arr.dtype.name == dtype_name:
+        return arr
+    import ml_dtypes
+
+    return arr.view(getattr(ml_dtypes, dtype_name))
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
+    flat: dict[str, Any] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            flat.update(_flatten(tree[k], f"{prefix}{k}."))
+        return flat
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if len(leaves) == 1 and treedef.num_leaves == 1 and not isinstance(tree, dict):
+        flat[prefix.rstrip(".")] = leaves[0]
+        return flat
+    for i, leaf in enumerate(leaves):
+        flat[f"{prefix}{i}"] = leaf
+    return flat
+
+
+def save_state(path: str | Path, state: Any, step: int) -> Path:
+    """Synchronous save of a pytree-of-arrays (host-gathered, unsharded)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    out = Path(path) / f"step_{step:09d}"
+    tmp = out.with_suffix(".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    manifest: dict[str, dict] = {"__step__": step, "leaves": {}}
+    for keypath, leaf in flat:
+        name = jax.tree_util.keystr(keypath).strip("[]'\"").replace("']['", ".")
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"{hashlib.sha1(name.encode()).hexdigest()[:16]}.npy"
+        savable, dtype_name = _to_savable(arr)
+        np.save(tmp / fname, savable)
+        manifest["leaves"][name] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": dtype_name,
+            "sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
+        }
+    (tmp / MANIFEST).write_text(json.dumps(manifest, indent=1))
+    (tmp / COMMIT).write_text("ok")
+    if out.exists():
+        shutil.rmtree(out)
+    tmp.rename(out)
+    return out
+
+
+def latest_step(path: str | Path) -> int | None:
+    path = Path(path)
+    if not path.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in path.iterdir()
+        if p.name.startswith("step_") and (p / COMMIT).exists()
+    ]
+    return max(steps) if steps else None
+
+
+def restore_state(
+    path: str | Path,
+    like: Any,
+    step: int | None = None,
+    shardings: Any = None,
+    verify: bool = True,
+) -> tuple[Any, int]:
+    """Restore into the structure of ``like``; apply ``shardings`` if given
+    (the elastic restore path — any mesh works, leaves are unsharded on
+    disk)."""
+    path = Path(path)
+    step = latest_step(path) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint under {path}")
+    d = path / f"step_{step:09d}"
+    manifest = json.loads((d / MANIFEST).read_text())["leaves"]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    sflat = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else None
+    )
+    out = []
+    for i, (keypath, leaf) in enumerate(flat):
+        name = jax.tree_util.keystr(keypath).strip("[]'\"").replace("']['", ".")
+        meta = manifest.get(name)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        arr = _from_saved(np.load(d / meta["file"]), meta["dtype"])
+        if verify:
+            got = hashlib.sha256(arr.tobytes()).hexdigest()
+            if got != meta["sha256"]:
+                raise IOError(f"checksum mismatch for {name}")
+        if sflat is not None:
+            out.append(jax.device_put(arr, sflat[i]))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+class CheckpointStore:
+    """Async checkpointing with retention."""
+
+    def __init__(self, path: str | Path, keep: int = 3):
+        self.path = Path(path)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.saved: list[int] = []
+        self._err: BaseException | None = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def save_async(self, state: Any, step: int) -> None:
+        self.wait()  # one in flight at a time
+        host = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def work() -> None:
+            try:
+                save_state(self.path, host, step)
+                self.saved.append(step)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._err = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(p.name.split("_")[1])
+            for p in self.path.iterdir()
+            if p.name.startswith("step_") and (p / COMMIT).exists()
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.path / f"step_{s:09d}", ignore_errors=True)

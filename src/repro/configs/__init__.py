@@ -1,0 +1,73 @@
+"""Assigned architecture registry: ``--arch <id>`` resolution.
+
+Each module defines ``full()`` (the exact assigned config) and ``smoke()``
+(reduced same-family config for CPU tests).  The dry-run exercises full
+configs abstractly (ShapeDtypeStruct only); smoke tests run real steps.
+"""
+
+from __future__ import annotations
+
+from importlib import import_module
+
+from repro.models.common import ModelConfig
+from repro.models.zoo import SHAPES, ShapeSpec, cell_supported, input_specs
+
+ARCH_IDS: tuple[str, ...] = (
+    "rwkv6-1.6b",
+    "phi3.5-moe-42b-a6.6b",
+    "granite-moe-1b-a400m",
+    "internvl2-26b",
+    "starcoder2-15b",
+    "qwen2.5-14b",
+    "yi-9b",
+    "gemma2-2b",
+    "hymba-1.5b",
+    "seamless-m4t-medium",
+)
+
+_MODULES = {
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "granite-moe-1b-a400m": "granite_moe",
+    "internvl2-26b": "internvl2_26b",
+    "starcoder2-15b": "starcoder2_15b",
+    "qwen2.5-14b": "qwen25_14b",
+    "yi-9b": "yi_9b",
+    "gemma2-2b": "gemma2_2b",
+    "hymba-1.5b": "hymba_1_5b",
+    "seamless-m4t-medium": "seamless_m4t",
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.smoke() if smoke else mod.full()
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCH_IDS
+
+
+def all_cells() -> list[tuple[str, str, bool, str]]:
+    """Every (arch, shape) cell with its supported/skip-reason flag."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, spec in SHAPES.items():
+            ok, why = cell_supported(cfg, spec)
+            out.append((arch, sname, ok, why))
+    return out
+
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "ShapeSpec",
+    "all_cells",
+    "cell_supported",
+    "get_config",
+    "input_specs",
+    "list_archs",
+]

@@ -1,0 +1,43 @@
+"""gemma2-2b — local+global alternating, logit softcap [arXiv:2408.00118].
+
+26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000.
+256k vocab: the DAPC-iest embedding table — the c2d-vs-gather gap is
+largest here.  Alternating 4096-token sliding-window / global layers =>
+long_500k runs (global-layer KV is T-sharded; noted in DESIGN.md).
+Ties embeddings, softcaps attention (50) and final logits (30), scales
+embeddings by sqrt(d_model) — all per the tech report.
+"""
+
+import math
+
+from repro.models.common import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-2b",
+        family="dense",
+        n_layers=26,
+        d_model=2304,
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=256,
+        d_ff=9216,
+        vocab=256000,
+        window=4096,
+        global_every=2,      # even layers local, odd layers global
+        attn_softcap=50.0,
+        final_softcap=30.0,
+        tie_embeddings=True,
+        embed_mult=math.sqrt(2304.0),
+        act="gelu",
+        attn_chunk=1024,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(
+        name="gemma2-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab=512, window=16, embed_mult=8.0,
+        remat=False, attn_chunk=0,
+    )

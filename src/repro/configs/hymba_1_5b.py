@@ -1,0 +1,37 @@
+"""hymba-1.5b — parallel attn+mamba heads [arXiv:2411.13676].
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+Every block runs attention heads and an SSM head in parallel and
+mean-combines (models/ssm.py).  Sliding-window attention on most layers
+with periodic global layers (the Hymba recipe) + constant-size SSM state
+=> long_500k runs.  25 heads: the head-indivisible partition-plan cell.
+"""
+
+from repro.models.common import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b",
+        family="hybrid",
+        n_layers=32,
+        d_model=1600,
+        n_heads=25,
+        n_kv_heads=5,
+        head_dim=64,
+        d_ff=5504,
+        vocab=32001,
+        ssm_state=16,
+        ssm_chunk=32,    # chunked-matmul selective scan (kernels/ssm_scan math)
+        window=2048,
+        global_every=8,      # layers 7, 15, 23, 31 are global
+        attn_chunk=1024,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(
+        name="hymba-smoke", n_layers=2, d_model=64, n_heads=2, n_kv_heads=1,
+        head_dim=32, d_ff=128, vocab=512, ssm_state=8, window=16,
+        remat=False, attn_chunk=0,
+    )

@@ -1,0 +1,36 @@
+"""seamless-m4t-medium — enc-dec, multimodal [arXiv:2308.11596].
+
+12L(dec) + 12L(enc) d_model=1024 16H (kv=16: full MHA) d_ff=4096
+vocab=256206.  The audio frontend (conformer feature extractor) is a STUB
+per the brief: input_specs supplies precomputed frame embeddings
+(B, seq//4, D) as encoder input.  Full attention => long_500k skipped.
+"""
+
+from repro.models.common import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium",
+        family="encdec",
+        n_layers=12,
+        enc_layers=12,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=64,
+        d_ff=4096,
+        vocab=256206,
+        frontend="audio",
+        act="gelu",
+        mlp_gated=False,
+        attn_chunk=1024,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(
+        name="seamless-smoke", n_layers=2, enc_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, head_dim=16, d_ff=128, vocab=512, remat=False,
+        attn_chunk=0,
+    )

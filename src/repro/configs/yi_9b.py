@@ -1,0 +1,29 @@
+"""yi-9b — llama-arch GQA [arXiv:2403.04652].
+
+48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+Full attention => long_500k skipped.
+"""
+
+from repro.models.common import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="yi-9b",
+        family="dense",
+        n_layers=48,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=11008,
+        vocab=64000,
+        attn_chunk=1024,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(
+        name="yi-smoke", n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        head_dim=32, d_ff=256, vocab=512, remat=False, attn_chunk=0,
+    )

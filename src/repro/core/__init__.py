@@ -1,0 +1,74 @@
+"""Three-Chains core: code+data movement over a (simulated) RDMA fabric.
+
+Public API re-exports.  Layering:
+
+  transport  — fabric, endpoints, one-sided PUT/GET, wire models
+  frame      — message frames + truncation protocol (Figs. 2/3)
+  bitcode    — fat-bitcode archives over jax.export blobs (Sec. III-C)
+  cache      — SenderCache / TargetCodeCache (Sec. III-D, Fig. 4)
+  ifunc      — IFunc + PE runtime + action ABI
+  xrdma      — Chaser / ReturnResult / TSI / Spawner operations
+  cluster    — in-process cluster + deterministic scheduler
+  pointer_chase — DAPC miniapp + GBPC baseline (Secs. IV-C/D)
+"""
+
+from .bitcode import BitcodeSlice, FatBitcode, local_triple, platform_of
+from .cache import CacheStats, SenderCache, TargetCodeCache
+from .cluster import Cluster
+from .frame import Frame, FrameFlags, FrameKind, MAGIC, delivery_complete, peek_header, unpack
+from .ifunc import (
+    ACTION_WIDTH,
+    A_DONE,
+    A_FORWARD,
+    A_RETURN,
+    A_SPAWN,
+    IFunc,
+    ISAMismatch,
+    PE,
+    ProtocolError,
+    Toolchain,
+)
+from .pointer_chase import ChaseReport, PointerChaseApp, chase_ref, make_chain
+from .transport import Endpoint, EndpointDead, Fabric, WIRE_PROFILES, WireModel
+from .xrdma import make_chaser, make_return_result, make_spawner, make_tsi
+
+__all__ = [
+    "ACTION_WIDTH",
+    "A_DONE",
+    "A_FORWARD",
+    "A_RETURN",
+    "A_SPAWN",
+    "BitcodeSlice",
+    "CacheStats",
+    "ChaseReport",
+    "Cluster",
+    "Endpoint",
+    "EndpointDead",
+    "Fabric",
+    "FatBitcode",
+    "Frame",
+    "FrameFlags",
+    "FrameKind",
+    "IFunc",
+    "ISAMismatch",
+    "MAGIC",
+    "PE",
+    "PointerChaseApp",
+    "ProtocolError",
+    "SenderCache",
+    "TargetCodeCache",
+    "Toolchain",
+    "WIRE_PROFILES",
+    "WireModel",
+    "chase_ref",
+    "delivery_complete",
+    "local_triple",
+    "make_chain",
+    "make_chaser",
+    "make_return_result",
+    "make_spawner",
+    "make_tsi",
+    "peek_header",
+    "platform_of",
+    "unpack",
+]

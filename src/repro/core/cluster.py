@@ -1,0 +1,103 @@
+"""In-process cluster of processing elements (hosts + DPUs) on one fabric.
+
+Peer indexing convention: peers[0..n_servers-1] are the servers (DPU role),
+peers[n_servers] is the client (host role).  This index space is what
+X-RDMA action vectors use for ``dst``/``requester`` fields.
+
+The scheduler is a deterministic single-threaded round-robin poll loop
+(this container has one core; daemon-thread polling is supported by the
+same PE.poll API but benchmarks use the scheduler for reproducibility).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+from .ifunc import PE, Toolchain
+from .transport import Fabric, WireModel
+
+
+class Cluster:
+    def __init__(
+        self,
+        n_servers: int,
+        wire: WireModel | str = "ideal",
+        server_triple: str = "cpu-bf2",
+        client_triple: str = "cpu-host",
+        toolchain: Toolchain | None = None,
+    ) -> None:
+        self.fabric = Fabric(wire)
+        self.toolchain = toolchain or Toolchain()
+        self.n_servers = n_servers
+        names = [f"server{i}" for i in range(n_servers)] + ["client"]
+        self.servers = [
+            PE(n, self.fabric, triple=server_triple, toolchain=self.toolchain, peers=names)
+            for n in names[:-1]
+        ]
+        self.client = PE(
+            "client", self.fabric, triple=client_triple, toolchain=self.toolchain, peers=names
+        )
+
+    @property
+    def client_index(self) -> int:
+        return self.n_servers
+
+    def pes(self) -> list[PE]:
+        return [*self.servers, self.client]
+
+    def alive_pes(self) -> list[PE]:
+        return [pe for pe in self.pes() if pe.endpoint.alive]
+
+    # ------------------------------------------------------------- schedule
+    def run_until(
+        self,
+        pred: Callable[[], bool],
+        max_rounds: int = 1_000_000,
+    ) -> int:
+        """Round-robin poll all live PEs until ``pred()`` holds.
+
+        Returns the number of scheduler rounds.  Raises TimeoutError if the
+        cluster goes idle (no messages in flight) while ``pred`` is false —
+        that means a message was lost (e.g. a PE died), which is the fault
+        the runtime layer recovers from.
+        """
+        idle = 0
+        for rounds in range(max_rounds):
+            if pred():
+                return rounds
+            progress = sum(pe.poll() for pe in self.alive_pes())
+            if progress == 0:
+                idle += 1
+                if idle > 2:
+                    raise TimeoutError("cluster idle but predicate unsatisfied")
+            else:
+                idle = 0
+        raise TimeoutError("max_rounds exceeded")
+
+    def drain(self, max_rounds: int = 1_000_000) -> None:
+        """Poll until no traffic remains in flight."""
+        try:
+            self.run_until(lambda: False, max_rounds=max_rounds)
+        except TimeoutError:
+            pass
+
+    # ------------------------------------------------------- fault injection
+    def kill_server(self, idx: int) -> None:
+        self.fabric.kill(f"server{idx}")
+
+    def restart_server(self, idx: int) -> PE:
+        """Process restart: fresh endpoint, empty caches — every sender's
+        cache entry for this endpoint is now stale (tested by the runtime
+        layer, which invalidates via SenderCache.invalidate_endpoint)."""
+        name = f"server{idx}"
+        # PE() connects a fresh endpoint, displacing the dead one: fresh
+        # inbox, no regions, empty caches — exactly a restarted process.
+        pe = PE(
+            name,
+            self.fabric,
+            triple=self.servers[idx].triple,
+            toolchain=self.toolchain,
+            peers=self.servers[idx].peers,
+        )
+        self.servers[idx] = pe
+        return pe

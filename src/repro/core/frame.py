@@ -1,0 +1,196 @@
+"""ifunc message frames (paper Figs. 2 & 3) and the truncation protocol.
+
+Layout (bitcode mode, Fig. 3)::
+
+    HEADER | PAYLOAD | MAGIC | CODE | DEPS | MAGIC
+
+The frame is a single contiguous byte block. The *full* frame is always
+constructed; the sender controls what actually travels by passing a different
+*size* to the PUT (never by editing the frame): a cached send stops after the
+first MAGIC. The MAGIC sentinels double as delivery detection for one-sided
+PUTs — the receiver polls its buffer and considers the message delivered when
+the expected trailing MAGIC is present (Sec. III-D).
+
+Header fields::
+
+    magic4  version  kind  flags  name_len  payload_len  code_len  deps_len
+    digest(32B)  seq(8B)  name(name_len B)
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+from enum import IntEnum
+
+HDR_MAGIC = b"3CHN"
+MAGIC = b"\xabMAGIC\xba\x00"  # 8-byte delivery sentinel
+MAGIC_LEN = len(MAGIC)
+
+_HDR_FMT = "<4sBBBxHxxIII32sQ"
+_HDR_LEN = struct.calcsize(_HDR_FMT)
+
+
+class FrameKind(IntEnum):
+    BITCODE = 1  # fat-bitcode ifunc (Sec. III-C)
+    BINARY = 2  # binary ifunc (Sec. III-B): single-triple, no target JIT
+    ACTIVE_MESSAGE = 3  # pre-deployed handler, payload-only (baseline)
+    GET_RESPONSE = 4  # transport-internal: RDMA GET reply
+
+
+class FrameFlags(IntEnum):
+    NONE = 0
+    RESULT = 1  # carries a ReturnResult payload
+
+
+@dataclass
+class Frame:
+    """A parsed view of (or recipe for) one contiguous message frame."""
+
+    kind: FrameKind
+    name: str  # ifunc type name, e.g. "tsi" / "chaser"
+    payload: bytes
+    code: bytes = b""  # fat-bitcode archive (or single slice for BINARY)
+    deps: tuple[str, ...] = ()
+    digest: bytes = b"\x00" * 32  # sha256 of code section
+    seq: int = 0
+    flags: int = FrameFlags.NONE
+    version: int = 1
+
+    # ------------------------------------------------------------------ pack
+    def pack(self) -> bytes:
+        """Build the full contiguous frame (always includes the code)."""
+        name_b = self.name.encode()
+        deps_b = "\n".join(self.deps).encode()
+        hdr = struct.pack(
+            _HDR_FMT,
+            HDR_MAGIC,
+            self.version,
+            int(self.kind),
+            int(self.flags),
+            len(name_b),
+            len(self.payload),
+            len(self.code),
+            len(deps_b),
+            self.digest,
+            self.seq,
+        )
+        return b"".join(
+            [hdr, name_b, self.payload, MAGIC, self.code, deps_b, MAGIC]
+        )
+
+    # Sizes for the truncation protocol ------------------------------------
+    @property
+    def cached_nbytes(self) -> int:
+        """Wire size when the target already holds the code: up to MAGIC #1."""
+        return _HDR_LEN + len(self.name.encode()) + len(self.payload) + MAGIC_LEN
+
+    @property
+    def full_nbytes(self) -> int:
+        return (
+            self.cached_nbytes
+            + len(self.code)
+            + len("\n".join(self.deps).encode())
+            + MAGIC_LEN
+        )
+
+    def wire_bytes(self, cached: bool) -> bytes:
+        """What actually goes on the wire. The frame itself is never edited —
+        a cached send is a shorter PUT of the same buffer."""
+        full = self.pack()
+        return full[: self.cached_nbytes] if cached else full
+
+
+# ---------------------------------------------------------------- unpacking
+@dataclass
+class ParsedHeader:
+    kind: FrameKind
+    flags: int
+    name: str
+    payload_len: int
+    code_len: int
+    deps_len: int
+    digest: bytes
+    seq: int
+    header_len: int  # header + name bytes
+
+    @property
+    def cached_total(self) -> int:
+        return self.header_len + self.payload_len + MAGIC_LEN
+
+    @property
+    def full_total(self) -> int:
+        return self.cached_total + self.code_len + self.deps_len + MAGIC_LEN
+
+
+def peek_header(buf: bytes | bytearray | memoryview) -> ParsedHeader | None:
+    """Parse the header if enough bytes have been delivered, else None."""
+    if len(buf) < _HDR_LEN:
+        return None
+    magic4, version, kind, flags, name_len, payload_len, code_len, deps_len, digest, seq = struct.unpack_from(
+        _HDR_FMT, buf, 0
+    )
+    if magic4 != HDR_MAGIC:
+        raise ValueError("corrupt frame: bad header magic")
+    if len(buf) < _HDR_LEN + name_len:
+        return None
+    name = bytes(buf[_HDR_LEN : _HDR_LEN + name_len]).decode()
+    return ParsedHeader(
+        kind=FrameKind(kind),
+        flags=flags,
+        name=name,
+        payload_len=payload_len,
+        code_len=code_len,
+        deps_len=deps_len,
+        digest=digest,
+        seq=seq,
+        header_len=_HDR_LEN + name_len,
+    )
+
+
+def delivery_complete(buf: bytes | bytearray | memoryview, expect_code: bool) -> bool:
+    """MAGIC-based delivery detection (receiver side of one-sided PUT).
+
+    ``expect_code`` is decided by the *receiver's own registry*: if it has
+    already cached this ifunc type it only waits for the payload sentinel,
+    otherwise for the trailing sentinel after CODE|DEPS (Sec. III-D).
+    """
+    hdr = peek_header(buf)
+    if hdr is None:
+        return False
+    end = hdr.full_total if expect_code else hdr.cached_total
+    if len(buf) < end:
+        return False
+    return bytes(buf[end - MAGIC_LEN : end]) == MAGIC
+
+
+def unpack(buf: bytes | bytearray | memoryview, has_code: bool) -> Frame:
+    """Materialize a Frame from a delivered buffer."""
+    hdr = peek_header(buf)
+    assert hdr is not None
+    off = hdr.header_len
+    payload = bytes(buf[off : off + hdr.payload_len])
+    off += hdr.payload_len
+    if bytes(buf[off : off + MAGIC_LEN]) != MAGIC:
+        raise ValueError("corrupt frame: bad payload sentinel")
+    off += MAGIC_LEN
+    code = b""
+    deps: tuple[str, ...] = ()
+    if has_code:
+        code = bytes(buf[off : off + hdr.code_len])
+        off += hdr.code_len
+        deps_b = bytes(buf[off : off + hdr.deps_len])
+        off += hdr.deps_len
+        deps = tuple(d for d in deps_b.decode().split("\n") if d)
+        if bytes(buf[off : off + MAGIC_LEN]) != MAGIC:
+            raise ValueError("corrupt frame: bad code sentinel")
+    return Frame(
+        kind=hdr.kind,
+        name=hdr.name,
+        payload=payload,
+        code=code,
+        deps=deps,
+        digest=hdr.digest,
+        seq=hdr.seq,
+        flags=hdr.flags,
+    )

@@ -1,0 +1,460 @@
+"""ifuncs: injected functions — code that travels with the message.
+
+Source side, an :class:`IFunc` couples an entry function (a pure JAX
+function) with its fat-bitcode archive (``jax.export`` blobs for every
+toolchain target, Sec. III-C) and its dependency list (Sec. III-C ``.deps``).
+Target side, a :class:`PE` (processing element) polls its endpoint, installs
+arriving code (extract slice -> deserialize -> target-side JIT -> digest
+cache) and invokes it.
+
+ABI — how the runtime and injected code meet
+--------------------------------------------
+The paper's ifunc entry is ``main(payload, payload_size, target_ptr)`` and
+may call UCX itself (via remote dynamic linking) to recursively re-inject
+itself.  An XLA executable cannot call back into the transport mid-flight,
+so the TPU-idiomatic rendering keeps the *decision logic in the shipped
+code* and leaves only a fixed, function-agnostic action protocol in the
+runtime (the moral equivalent of the UCX API the paper's ifuncs link
+against):
+
+* ``update`` ABI — ``entry(payload, region) -> new_region``.  The runtime
+  stores the result back into the named memory region (TSI's counter).
+* ``xrdma`` ABI — ``entry(payload, *linked_deps) -> i64[ACTION_WIDTH]``
+  action vector::
+
+      [action, dst, plen, p0 .. p7]
+
+  ``action``: 0 DONE | 1 FORWARD (re-inject *this same ifunc*, code and
+  all, to peer ``dst`` with payload ``p[:plen]``) | 2 RETURN (send the
+  ifunc named by the ``returns:`` dep to ``dst``) | 3 SPAWN (send the
+  ifunc named by the ``spawn:`` dep — "generate new code").
+
+  Local recursion — the paper's "ifunc calls itself recursively" when the
+  next pointer is local — happens *inside* the shipped code as a
+  ``lax.while_loop``: the blob chases until the frontier leaves its shard,
+  then emits FORWARD.  One network action per locality break, exactly the
+  paper's DAPC behaviour.
+
+Dependency tags (the wire ``DEPS`` list, Sec. III-C):
+
+* ``abi:<update|xrdma|pure>`` — invoke convention.
+* ``region:<name>`` — link the PE's registered memory region as an argument.
+* ``cap:<name>``    — link a host capability (small constant array, e.g.
+  shard metadata) as an argument.
+* ``returns:<ifunc>`` / ``spawn:<ifunc>`` — ifunc types this code may emit;
+  resolved through the PE's source registry / toolchain at action time.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from .bitcode import DEFAULT_TOOLCHAIN_TARGETS, FatBitcode, platform_of
+from .cache import CachedExecutable, SenderCache, TargetCodeCache
+from .frame import Frame, FrameKind, peek_header, unpack
+from .transport import Fabric
+
+ACTION_WIDTH = 11  # [action, dst, plen, p0..p7]
+A_DONE, A_FORWARD, A_RETURN, A_SPAWN = 0, 1, 2, 3
+
+
+class ProtocolError(RuntimeError):
+    pass
+
+
+class ISAMismatch(RuntimeError):
+    """Binary ifunc landed on a PE whose triple it was not compiled for."""
+
+
+# ----------------------------------------------------------------- source
+@dataclass
+class IFunc:
+    """Source-side handle: name + fat-bitcode + deps (paper Fig. 1 register)."""
+
+    name: str
+    fat: FatBitcode
+    deps: tuple[str, ...]
+    abi: str
+    payload_aval: jax.ShapeDtypeStruct
+    kind: FrameKind = FrameKind.BITCODE
+
+    @property
+    def code_bytes(self) -> bytes:
+        return self.fat.to_bytes()
+
+    @property
+    def digest(self) -> bytes:
+        import hashlib
+
+        return hashlib.sha256(self.code_bytes).digest()
+
+    @classmethod
+    def build(
+        cls,
+        name: str,
+        fn: Callable[..., Any],
+        payload_aval: jax.ShapeDtypeStruct,
+        dep_avals: Sequence[jax.ShapeDtypeStruct] = (),
+        deps: Sequence[str] = (),
+        abi: str = "pure",
+        targets: Sequence[str] = DEFAULT_TOOLCHAIN_TARGETS,
+        kind: FrameKind = FrameKind.BITCODE,
+    ) -> "IFunc":
+        """Run the Three-Chains toolchain: cross-compile ``fn`` for every
+        target triple into a fat-bitcode archive.
+
+        ``kind=BINARY`` models Sec. III-B: the archive holds exactly one
+        slice (the source machine's own triple) and the target will refuse
+        a triple mismatch instead of re-lowering.
+        """
+        if kind == FrameKind.BINARY and len(targets) != 1:
+            raise ValueError("binary ifuncs are single-triple by definition")
+        fat = FatBitcode.build(fn, (payload_aval, *dep_avals), targets=targets)
+        wire_deps = (f"abi:{abi}", *deps)
+        return cls(
+            name=name,
+            fat=fat,
+            deps=wire_deps,
+            abi=abi,
+            payload_aval=payload_aval,
+            kind=kind,
+        )
+
+    def make_frame(self, payload: bytes, seq: int = 0) -> Frame:
+        return Frame(
+            kind=self.kind,
+            name=self.name,
+            payload=payload,
+            code=self.code_bytes,
+            deps=self.deps,
+            digest=self.digest,
+            seq=seq,
+        )
+
+
+class Toolchain:
+    """The shared filesystem of toolchain artifacts (paper Fig. 1: generated
+    files 'placed in a directory that can be located by Three-Chains').
+
+    Any PE may *register as a sender* from here — that is how a server that
+    received a Chaser can emit a ReturnResult it never received over the
+    wire, just as the paper's SPMD app binaries can register any ifunc
+    library present on their local disk.  What is NOT pre-deployed is the
+    target-side executable: code still travels in frames and installs via
+    the cache protocol.
+    """
+
+    def __init__(self) -> None:
+        self._artifacts: dict[str, IFunc] = {}
+
+    def publish(self, ifunc: IFunc) -> IFunc:
+        self._artifacts[ifunc.name] = ifunc
+        return ifunc
+
+    def lookup(self, name: str) -> IFunc:
+        return self._artifacts[name]
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self._artifacts))
+
+
+# ----------------------------------------------------------------- target
+@dataclass
+class PEStats:
+    msgs: int = 0
+    ifunc_installs: int = 0
+    invokes: int = 0
+    forwards: int = 0
+    returns: int = 0
+    spawns: int = 0
+    am_handled: int = 0
+    jit_ms_total: float = 0.0
+
+    def as_dict(self) -> dict[str, float]:
+        d = self.__dict__.copy()
+        d["jit_ms_total"] = round(self.jit_ms_total, 3)
+        return d
+
+
+class PE:
+    """A processing element: endpoint + ifunc runtime + caches + local state.
+
+    ``triple`` models the ISA/uarch (hosts are ``cpu-host`` Xeons, DPUs are
+    ``cpu-bf2`` BlueField Arm cores, A64FX nodes ``cpu-a64fx``); on this
+    container all execute on the CPU backend, but triple *mismatch logic* is
+    real: binary ifuncs require an exact triple, fat-bitcode falls back by
+    platform and re-optimizes locally (Sec. III-C).
+    """
+
+    def __init__(
+        self,
+        name: str,
+        fabric: Fabric,
+        triple: str = "cpu-host",
+        toolchain: Toolchain | None = None,
+        peers: Sequence[str] = (),
+    ) -> None:
+        platform_of(triple)  # validate
+        self.name = name
+        self.triple = triple
+        self.fabric = fabric
+        self.endpoint = fabric.connect(name)
+        self.toolchain = toolchain
+        self.peers: list[str] = list(peers)
+        self.target_cache = TargetCodeCache()
+        self.sender_cache = SenderCache()
+        self.source_registry: dict[str, IFunc] = {}
+        self.am_table: dict[str, Callable[["PE", bytes], None]] = {}
+        self.caps: dict[str, np.ndarray] = {}
+        self.completed: list[np.ndarray] = []
+        self.stats = PEStats()
+        self.caching_enabled = True  # benchmark switch: uncached mode
+        self._seq = 0
+        self._region_dev: dict[str, tuple[int, jax.Array]] = {}
+        self._region_ver: dict[str, int] = {}
+
+    # --- local state ------------------------------------------------------
+    def register_region(self, name: str, arr: np.ndarray) -> None:
+        self.endpoint.register_region(name, arr)
+        self._region_ver[name] = self._region_ver.get(name, 0) + 1
+
+    def region(self, name: str) -> np.ndarray:
+        return self.endpoint.regions[name]
+
+    def _region_device(self, name: str) -> jax.Array:
+        """Device-resident view of a region, cached until the region is
+        rewritten (read-mostly shards stay resident, like RDMA-registered
+        memory staying pinned)."""
+        ver = self._region_ver.get(name, 0)
+        hit = self._region_dev.get(name)
+        if hit is not None and hit[0] == ver:
+            return hit[1]
+        dev = jax.device_put(self.endpoint.regions[name])
+        self._region_dev[name] = (ver, dev)
+        return dev
+
+    def _write_region(self, name: str, value: np.ndarray) -> None:
+        np.copyto(self.endpoint.regions[name], value)
+        self._region_ver[name] = self._region_ver.get(name, 0) + 1
+
+    def register_cap(self, name: str, arr: np.ndarray) -> None:
+        self.caps[name] = np.asarray(arr)
+
+    # --- source side --------------------------------------------------------
+    def register_source(self, ifunc: IFunc) -> IFunc:
+        self.source_registry[ifunc.name] = ifunc
+        return ifunc
+
+    def _resolve_source(self, name: str) -> IFunc:
+        got = self.source_registry.get(name)
+        if got is None:
+            if self.toolchain is None:
+                raise ProtocolError(f"{self.name}: no source artifact for {name!r}")
+            got = self.register_source(self.toolchain.lookup(name))
+        return got
+
+    def send_ifunc(self, dst: str, name: str, payload: np.ndarray | bytes) -> int:
+        """Create and PUT an ifunc message; returns wire bytes sent."""
+        ifunc = self._resolve_source(name)
+        pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
+        self._seq += 1
+        frame = ifunc.make_frame(pay, seq=self._seq)
+        return self._put_frame(dst, frame)
+
+    def send_am(self, dst: str, name: str, payload: np.ndarray | bytes) -> int:
+        """Active Message baseline: payload-only frame, handler pre-deployed."""
+        pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
+        self._seq += 1
+        frame = Frame(kind=FrameKind.ACTIVE_MESSAGE, name=name, payload=pay, seq=self._seq)
+        wire = frame.wire_bytes(cached=True)  # AM never carries code
+        self.fabric.put(self.name, dst, wire)
+        return len(wire)
+
+    def _put_frame(self, dst: str, frame: Frame) -> int:
+        cached = self.caching_enabled and self.sender_cache.check_and_add(
+            dst, frame.name, len(frame.code)
+        )
+        wire = frame.wire_bytes(cached=cached)
+        self.fabric.put(self.name, dst, wire)
+        return len(wire)
+
+    # --- target side --------------------------------------------------------
+    def poll(self, max_msgs: int | None = None) -> int:
+        """Drain the endpoint buffer, installing and invoking arrivals.
+
+        This is the paper's 'UCX ifunc polling function' — ideally called
+        from a daemon thread; tests and the single-core benchmarks call it
+        from a round-robin scheduler (core.cluster).
+        """
+        n = 0
+        for buf in self.endpoint.drain():
+            self._handle(bytes(buf))
+            n += 1
+            self.stats.msgs += 1
+            if max_msgs is not None and n >= max_msgs:
+                break
+        return n
+
+    def _handle(self, buf: bytes) -> None:
+        hdr = peek_header(buf)
+        if hdr is None:
+            raise ProtocolError("short frame")
+        if hdr.kind == FrameKind.ACTIVE_MESSAGE:
+            frame = unpack(buf, has_code=False)
+            handler = self.am_table.get(frame.name)
+            if handler is None:
+                raise ProtocolError(f"{self.name}: no AM handler {frame.name!r}")
+            self.stats.am_handled += 1
+            handler(self, frame.payload)
+            return
+        # ifunc path: does this wire carry code? (sender truncates iff it
+        # believes we have it; len tells the truth, the registry must agree)
+        has_code = len(buf) >= hdr.full_total and hdr.code_len > 0
+        if not self.target_cache.has_name(hdr.name):
+            if not has_code:
+                raise ProtocolError(
+                    f"{self.name}: truncated frame for unregistered ifunc "
+                    f"{hdr.name!r} (stale sender cache — was this PE restarted?)"
+                )
+            frame = unpack(buf, has_code=True)
+            exe = self._install(frame)
+        else:
+            frame = unpack(buf, has_code=has_code)
+            exe = self.target_cache.lookup(hdr.name)
+            assert exe is not None
+        self._invoke(exe, frame.payload)
+
+    def _install(self, frame: Frame) -> CachedExecutable:
+        """Extract slice -> (ORC-)JIT -> digest cache (Sec. III-C/D).
+
+        A digest hit skips compilation entirely (ORC-JIT's internal symbol
+        cache, which the paper observed makes re-JIT of already-seen code
+        free) — only the name registration is new."""
+        hit = self.target_cache.lookup_digest(frame.digest.hex())
+        if hit is not None:
+            exe = CachedExecutable(
+                name=frame.name,
+                digest=hit.digest,
+                fn=hit.fn,
+                in_avals=hit.in_avals,
+                deps=frame.deps or hit.deps,
+                kind=int(frame.kind),
+                extras=dict(hit.extras),
+            )
+            self.target_cache.install(exe, jit_ms=0.0)
+            self.stats.ifunc_installs += 1
+            return exe
+        from .bitcode import BitcodeSlice  # noqa: F401  (documented type)
+
+        fat = FatBitcode.from_bytes(frame.code)
+        if frame.kind == FrameKind.BINARY:
+            # binary code is ISA/uarch-specific: exact triple or bust
+            if self.triple not in fat.slices:
+                raise ISAMismatch(
+                    f"binary ifunc {frame.name!r} built for {fat.triples()} "
+                    f"cannot run on {self.triple!r} (Sec. III-B problem; "
+                    f"ship bitcode instead)"
+                )
+            blob = fat.slices[self.triple]
+        else:
+            blob = fat.extract(self.triple).blob
+        t0 = time.perf_counter()
+        exported = jax.export.deserialize(blob)
+        compiled = jax.jit(exported.call).lower(*exported.in_avals).compile()
+        jit_ms = (time.perf_counter() - t0) * 1e3
+        abi = "pure"
+        for d in frame.deps:
+            if d.startswith("abi:"):
+                abi = d.split(":", 1)[1]
+        exe = CachedExecutable(
+            name=frame.name,
+            digest=frame.digest.hex(),
+            fn=compiled,
+            in_avals=tuple(exported.in_avals),
+            deps=frame.deps,
+            kind=int(frame.kind),
+            extras={"code": frame.code, "abi": abi},
+        )
+        self.target_cache.install(exe, jit_ms=jit_ms)
+        self.stats.ifunc_installs += 1
+        self.stats.jit_ms_total += jit_ms
+        return exe
+
+    # --- invoke -------------------------------------------------------------
+    def _decode_payload(self, exe: CachedExecutable, payload: bytes) -> np.ndarray:
+        aval = exe.in_avals[0]
+        arr = np.frombuffer(payload, dtype=aval.dtype)
+        return arr.reshape(aval.shape)
+
+    def _dep_args(self, exe: CachedExecutable) -> list[Any]:
+        args: list[Any] = []
+        for d in exe.deps:
+            tag, _, val = d.partition(":")
+            if tag == "region":
+                args.append(self._region_device(val))
+            elif tag == "cap":
+                args.append(self.caps[val])
+        return args
+
+    def _dep_named(self, exe: CachedExecutable, tag: str) -> str | None:
+        for d in exe.deps:
+            t, _, val = d.partition(":")
+            if t == tag:
+                return val
+        return None
+
+    def _invoke(self, exe: CachedExecutable, payload: bytes) -> None:
+        self.stats.invokes += 1
+        pay = self._decode_payload(exe, payload)
+        args = self._dep_args(exe)
+        out = exe.fn(pay, *args)
+        abi = exe.extras.get("abi", "pure")
+        if abi == "update":
+            region = self._dep_named(exe, "region")
+            assert region is not None, "update ABI requires a region dep"
+            self._write_region(region, np.asarray(out))
+        elif abi == "xrdma":
+            self._apply_action(exe, np.asarray(out))
+        else:  # pure
+            self.completed.append(np.asarray(out))
+
+    def _apply_action(self, exe: CachedExecutable, action: np.ndarray) -> None:
+        """The fixed X-RDMA action protocol (see module docstring)."""
+        code = int(action[0])
+        dst_idx = int(action[1])
+        plen = int(action[2])
+        pay = np.ascontiguousarray(action[3 : 3 + plen])
+        if code == A_DONE:
+            self.completed.append(pay)
+            return
+        dst = self.peers[dst_idx]
+        if code == A_FORWARD:
+            self.stats.forwards += 1
+            self._seq += 1
+            frame = Frame(
+                kind=FrameKind(exe.kind),
+                name=exe.name,
+                payload=pay.tobytes(),
+                code=exe.extras["code"],
+                deps=exe.deps,
+                digest=bytes.fromhex(exe.digest),
+                seq=self._seq,
+            )
+            self._put_frame(dst, frame)
+        elif code == A_RETURN:
+            self.stats.returns += 1
+            target = self._dep_named(exe, "returns")
+            assert target is not None, "RETURN requires a returns: dep"
+            self.send_ifunc(dst, target, pay)
+        elif code == A_SPAWN:
+            self.stats.spawns += 1
+            target = self._dep_named(exe, "spawn")
+            assert target is not None, "SPAWN requires a spawn: dep"
+            self.send_ifunc(dst, target, pay)
+        else:
+            raise ProtocolError(f"bad action code {code}")

@@ -1,0 +1,158 @@
+"""X-RDMA operations: Chaser, ReturnResult, TSI (paper Secs. IV-B/IV-C).
+
+An X-RDMA operation is an ifunc whose arrival *executes user code next to
+the data*, and whose code may re-inject itself (FORWARD), answer the
+requester (RETURN via ReturnResult), or generate new code (SPAWN).  The
+decision logic lives in the shipped code; see :mod:`repro.core.ifunc` for
+the fixed action ABI.
+
+All integer state is int32: tables up to 2^31 entries, which keeps the core
+independent of the global ``jax_enable_x64`` flag (the LM framework must
+stay bf16/f32-default).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .frame import FrameKind
+from .ifunc import (
+    ACTION_WIDTH,
+    A_DONE,
+    A_FORWARD,
+    A_RETURN,
+    A_SPAWN,
+    IFunc,
+)
+
+I32 = jnp.int32
+CHASER_PAYLOAD = 4  # [addr, depth, requester, slot]
+
+
+def _vec(*slots) -> jax.Array:
+    """Build a padded i32 action vector from (action, dst, plen, payload...)."""
+    out = jnp.zeros((ACTION_WIDTH,), I32)
+    for i, s in enumerate(slots):
+        out = out.at[i].set(jnp.asarray(s, I32))
+    return out
+
+
+# ------------------------------------------------------------------ Chaser
+def chaser_entry(payload: jax.Array, shard: jax.Array, meta: jax.Array) -> jax.Array:
+    """One X-RDMA Chaser hop (paper Sec. IV-C).
+
+    Chase locally (``lax.while_loop`` — the paper's in-process recursive
+    call) until the chase completes or the frontier leaves this shard; then
+    RETURN the result to the requester or FORWARD *this same code* to the
+    owner of the next entry.
+    """
+    addr0, depth0, requester, slot = payload[0], payload[1], payload[2], payload[3]
+    shard_id, shard_size = meta[0], meta[1]
+    base = shard_id * shard_size
+
+    def cond(c):
+        a, d = c
+        return (d > 0) & (a // shard_size == shard_id)
+
+    def body(c):
+        a, d = c
+        return shard[a - base], d - 1
+
+    addr, depth = lax.while_loop(cond, body, (addr0, depth0))
+    done = depth == 0
+    ret = _vec(A_RETURN, requester, 2, slot, addr)
+    fwd = _vec(A_FORWARD, addr // shard_size, 4, addr, depth, requester, slot)
+    return jnp.where(done, ret, fwd)
+
+
+def make_chaser(
+    shard_size: int,
+    targets: Sequence[str] = ("cpu-host", "cpu-bf2", "cpu-a64fx", "tpu-v5e"),
+    kind: FrameKind = FrameKind.BITCODE,
+    name: str = "chaser",
+) -> IFunc:
+    return IFunc.build(
+        name=name,
+        fn=chaser_entry,
+        payload_aval=jax.ShapeDtypeStruct((CHASER_PAYLOAD,), I32),
+        dep_avals=(
+            jax.ShapeDtypeStruct((shard_size,), I32),
+            jax.ShapeDtypeStruct((3,), I32),
+        ),
+        deps=("region:table_shard", "cap:shard_meta", "returns:return_result"),
+        abi="xrdma",
+        targets=targets,
+        kind=kind,
+    )
+
+
+# ------------------------------------------------------------ ReturnResult
+def return_result_entry(payload: jax.Array, results: jax.Array) -> jax.Array:
+    """Write ``value`` into the requester's result slot and bump the
+    completion counter (last element)."""
+    slot, value = payload[0], payload[1]
+    return results.at[slot].set(value).at[results.shape[0] - 1].add(1)
+
+
+def make_return_result(
+    max_slots: int,
+    targets: Sequence[str] = ("cpu-host", "cpu-bf2", "cpu-a64fx", "tpu-v5e"),
+    kind: FrameKind = FrameKind.BITCODE,
+) -> IFunc:
+    return IFunc.build(
+        name="return_result",
+        fn=return_result_entry,
+        payload_aval=jax.ShapeDtypeStruct((2,), I32),
+        dep_avals=(jax.ShapeDtypeStruct((max_slots + 1,), I32),),
+        deps=("region:results",),
+        abi="update",
+        targets=targets,
+        kind=kind,
+    )
+
+
+# --------------------------------------------------------------------- TSI
+def tsi_entry(payload: jax.Array, counter: jax.Array) -> jax.Array:
+    """Target-Side Increment (paper Sec. IV-B): counter += payload[0]."""
+    return counter + payload[0]
+
+
+def make_tsi(
+    targets: Sequence[str] = ("cpu-host", "cpu-bf2", "cpu-a64fx", "tpu-v5e"),
+    kind: FrameKind = FrameKind.BITCODE,
+    name: str = "tsi",
+) -> IFunc:
+    return IFunc.build(
+        name=name,
+        fn=tsi_entry,
+        payload_aval=jax.ShapeDtypeStruct((1,), I32),
+        dep_avals=(jax.ShapeDtypeStruct((1,), I32),),
+        deps=("region:counter",),
+        abi="update",
+        targets=targets,
+        kind=kind,
+    )
+
+
+# ------------------------------------------------------------------- Spawn
+def spawner_entry(payload: jax.Array) -> jax.Array:
+    """Demo of 'injected code generating new code' (paper Sec. I): arrival
+    spawns a TSI ifunc at peer ``payload[0]`` with increment ``payload[1]``."""
+    return _vec(A_SPAWN, payload[0], 1, payload[1])
+
+
+def make_spawner(
+    targets: Sequence[str] = ("cpu-host", "cpu-bf2", "cpu-a64fx", "tpu-v5e"),
+) -> IFunc:
+    return IFunc.build(
+        name="spawner",
+        fn=spawner_entry,
+        payload_aval=jax.ShapeDtypeStruct((2,), I32),
+        deps=("spawn:tsi",),
+        abi="xrdma",
+        targets=targets,
+    )

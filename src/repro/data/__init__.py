@@ -1,0 +1,5 @@
+"""Data pipeline."""
+
+from .pipeline import DataConfig, TokenPipeline, synthetic_corpus
+
+__all__ = ["DataConfig", "TokenPipeline", "synthetic_corpus"]

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each package holds ``kernel.py`` (pl.pallas_call + explicit BlockSpec VMEM
+tiling), optionally ``ops.py`` (the jit'd model-facing wrapper), and
+``ref.py`` (the pure-jnp oracle every kernel is swept against in
+tests/test_kernels.py, interpret=True on CPU):
+
+  flash_attention/  blockwise online-softmax attention -- grid
+                    (B, H, S/BQ, T/BK), GQA via K/V index_map, causal
+                    block skipping, running max/sum/acc in VMEM scratch
+  wkv6/             RWKV6 chunked linear attention -- the sequential
+                    recurrence as 4 MXU matmuls per chunk, (M, M) state
+                    in scratch across the sequential chunk axis
+  ssm_scan/         chunked diagonal selective scan (Mamba) -- channel
+                    tiles x chunk axis, (BD, N) state in scratch
+  chase/            DAPC batched pointer chase -- the shard slice streams
+                    through VMEM blocks, the frontier advances in
+                    lock-step (DESIGN.md section 2 hardware adaptation)
+  embed_lookup/     vocab-sharded lookup as a blocked one-hot MXU matmul
+                    (the TPU gather idiom); partial rows feed the c2d psum
+"""

@@ -1,0 +1,113 @@
+"""Batched shard-local pointer chase for TPU (Pallas).
+
+The DAPC hot loop (paper Sec. IV-C): given the shard slice of the pointer
+table and a frontier of B in-flight chases, advance every chase until it
+leaves the shard or exhausts its depth.  One chase is a serial dependence
+chain — intrinsic to the workload on ANY hardware (the paper's DPU cores
+hit the same wall); throughput comes from B chases advancing in lock-step,
+which is a (B,)-wide vectorized gather per hop.
+
+TPU adaptation (DESIGN.md §2): the shard slice is tiled into VMEM blocks
+along the grid's first axis; each grid step advances only the chases whose
+frontier currently lands in its block (others pass through).  ``rounds``
+sweeps the grid enough times that a chase hopping between blocks still
+makes progress — callers size blocks so a shard slice is 1-4 blocks.
+
+Frontier state (frontier, depth) lives in VMEM scratch across grid steps;
+the block sweep axis is innermost-sequential, so this is a legal TPU
+revisiting pattern (same discipline as the flash kernel's accumulator).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _chase_kernel(
+    lo_ref, table_ref, f_ref, d_ref, fo_ref, do_ref, f_scr, d_scr,
+    *, block: int, hops_per_visit: int, n_blocks: int, rounds: int,
+):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        f_scr[...] = f_ref[...]
+        d_scr[...] = d_ref[...]
+
+    blk = step % n_blocks
+    lo = lo_ref[0] + blk * block
+    tab = table_ref[...]  # (block,) this block's slice of the shard
+
+    def hop(_, carry):
+        f, d = carry
+        loc = f - lo
+        inside = (loc >= 0) & (loc < block) & (d > 0)
+        nxt = jnp.take(tab, jnp.clip(loc, 0, block - 1))
+        f = jnp.where(inside, nxt, f)
+        d = jnp.where(inside, d - 1, d)
+        return f, d
+
+    f, d = jax.lax.fori_loop(
+        0, hops_per_visit, hop, (f_scr[...], d_scr[...])
+    )
+    f_scr[...] = f
+    d_scr[...] = d
+
+    @pl.when(step == n_blocks * rounds - 1)
+    def _finish():
+        fo_ref[...] = f_scr[...]
+        do_ref[...] = d_scr[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "hops_per_visit", "rounds", "interpret")
+)
+def chase_shard(
+    table_shard: jax.Array,  # (N_loc,) int32 successor table (global ids)
+    frontier: jax.Array,  # (B,) int32 global addresses
+    depth: jax.Array,  # (B,) int32 hops remaining
+    lo: jax.Array,  # scalar int32: first global id of this shard
+    block: int = 2048,
+    hops_per_visit: int = 32,
+    rounds: int = 4,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    n_loc = table_shard.shape[0]
+    b = frontier.shape[0]
+    block = min(block, n_loc)
+    assert n_loc % block == 0, (n_loc, block)
+    n_blocks = n_loc // block
+    grid = (n_blocks * rounds,)
+    kern = functools.partial(
+        _chase_kernel, block=block, hops_per_visit=hops_per_visit,
+        n_blocks=n_blocks, rounds=rounds,
+    )
+    f, d = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block,), lambda i: (i % n_blocks,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b,), jnp.int32),
+            pltpu.VMEM((b,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(lo, jnp.int32).reshape(1), table_shard, frontier, depth)
+    return f, d

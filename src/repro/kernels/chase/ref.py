@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the batched shard-local pointer chase."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chase_ref(
+    table_shard: jax.Array,  # (N_loc,) int32 successors (global ids)
+    frontier: jax.Array,  # (B,) int32 global addresses
+    depth: jax.Array,  # (B,) int32 hops remaining per chase
+    lo: int,  # first global id owned by this shard
+    max_hops: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Advance each chase while it stays inside [lo, lo+N_loc) and has
+    depth left; returns (frontier', depth').  Mirrors the Chaser ifunc's
+    lax.while_loop (core/xrdma.py) as a batched lock-step frontier."""
+    n_loc = table_shard.shape[0]
+
+    def hop(carry, _):
+        f, d = carry
+        loc = f - lo
+        inside = (loc >= 0) & (loc < n_loc) & (d > 0)
+        nxt = jnp.take(table_shard, jnp.clip(loc, 0, n_loc - 1))
+        f = jnp.where(inside, nxt, f)
+        d = jnp.where(inside, d - 1, d)
+        return (f, d), None
+
+    (f, d), _ = jax.lax.scan(hop, (frontier, depth), None, length=max_hops)
+    return f, d

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the vocab-sharded embedding lookup."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embed_lookup_ref(
+    table_shard: jax.Array,  # (V_loc, D)
+    ids: jax.Array,  # (N,) int32 global token ids
+    lo: int,  # first vocab id owned by this shard
+) -> jax.Array:
+    """Partial lookup: rows for ids outside [lo, lo+V_loc) are zero (the
+    cross-shard psum completes them — models/embedding.embed_c2d)."""
+    v_loc = table_shard.shape[0]
+    loc = ids - lo
+    inside = (loc >= 0) & (loc < v_loc)
+    out = jnp.take(table_shard, jnp.clip(loc, 0, v_loc - 1), axis=0)
+    return jnp.where(inside[:, None], out, jnp.zeros((), out.dtype))

@@ -1,0 +1,132 @@
+"""Blockwise online-softmax attention for TPU (Pallas).
+
+Grid: (B, H, S/BQ, T/BK) — the T axis is innermost, so on TPU the kernel
+revisits the same output block sequentially while streaming K/V blocks
+HBM->VMEM; the running max/sum/accumulator live in VMEM scratch, which is
+exactly the flash-attention recurrence mapped onto the Pallas TPU grid
+model (sequential last axis + revisitable scratch).
+
+GQA without materializing repeated K/V: the K/V BlockSpec index_map sends
+query-head h to kv-head ``h // group`` — the MXU reads each K/V block
+once per group from the same HBM tiles.
+
+VMEM budget per step (bf16, BQ=BK=512, d=128):
+  q (512x128x2) + k,v (2x512x128x2) + acc/m/l f32 (512x129x4) = ~0.66 MiB
+well under the ~16 MiB/core VMEM of a v5e; BQ/BK are exposed for the
+shape sweep in tests and the §Perf block-shape iteration.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -2.0**30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, causal: bool, softcap: float | None, scale: float, bq: int, bk: int,
+    nk: int, causal_off: int,
+):
+    """``causal_off = T - S``: when the query block is a suffix of the key
+    sequence (prefill against prior context), query i may see keys up to
+    i + causal_off (end-aligned causal masking, matching the oracle)."""
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = qi * bq
+    k_lo = ki * bk
+    # skip fully-masked blocks (strictly above the causal diagonal)
+    run = (not causal) or (k_lo <= q_lo + causal_off + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)  # (BQ, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (BK, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (BQ, BK)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        if causal:
+            rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(cols <= rows + causal_off, s, NEG)
+        m_prev = m_scr[...]  # (BQ, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # (BQ, BK)
+        alpha = jnp.exp(m_prev - m_new)  # (BQ, 1)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "softcap", "scale", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, H, S, d)
+    k: jax.Array,  # (B, K, T, d)
+    v: jax.Array,  # (B, K, T, d)
+    causal: bool = True,
+    softcap: float | None = None,
+    scale: float | None = None,
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    assert h % kh == 0, (h, kh)
+    g = h // kh
+    bq = min(bq, s)
+    bk = min(bk, t)
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+    nk = t // bk
+    scale = 1.0 / math.sqrt(d) if scale is None else scale
+
+    grid = (b, h, s // bq, nk)
+    kern = functools.partial(
+        _flash_kernel, causal=causal, softcap=softcap, scale=scale,
+        bq=bq, bk=bk, nk=nk, causal_off=t - s,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,44 @@
+"""jit'd public wrapper: (B, S, H, d) layout adapter + CPU fallback.
+
+The model keeps (B, S, H, d); the kernel wants (B, H, S, d) so the MXU
+contraction dims are the last two.  On non-TPU backends the wrapper runs
+the kernel in interpret mode (tests) or falls back to the jnp oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import flash_attention_ref
+
+
+def attend_flash(
+    q: jax.Array,  # (B, S, H, d) — model layout
+    k: jax.Array,  # (B, T, K, d)
+    v: jax.Array,
+    causal: bool = True,
+    softcap: float | None = None,
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out = flash_attention(
+        qt, kt, vt, causal=causal, softcap=softcap, bq=bq, bk=bk,
+        interpret=interpret,
+    )
+    return jnp.swapaxes(out, 1, 2)
+
+
+def attend_ref(q, k, v, causal=True, softcap=None):
+    out = flash_attention_ref(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=causal, softcap=softcap,
+    )
+    return jnp.swapaxes(out, 1, 2)

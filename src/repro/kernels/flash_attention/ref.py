@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal, softcap)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG = -2.0**30
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, S, d)
+    k: jax.Array,  # (B, K, T, d)
+    v: jax.Array,  # (B, K, T, d)
+    *,
+    causal: bool = True,
+    softcap: float | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    assert h % kh == 0
+    g = h // kh
+    scale = 1.0 / math.sqrt(d) if scale is None else scale
+    qg = q.reshape(b, kh, g, s, d)
+    logits = jnp.einsum(
+        "bkgsd,bktd->bkgst", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    if causal:
+        mask = jnp.tril(jnp.ones((s, k.shape[2]), bool), k.shape[2] - s)
+        logits = jnp.where(mask, logits, NEG)
+    att = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", att.astype(v.dtype), v)
+    return out.reshape(b, h, s, d)

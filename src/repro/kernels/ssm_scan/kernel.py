@@ -1,0 +1,116 @@
+"""Chunked diagonal selective scan (Mamba) for TPU (Pallas).
+
+Same math as models/ssm.selective_scan_chunked (see the derivation there),
+tiled for VMEM: grid (B, D/BD, T/C) with the chunk axis innermost-
+sequential; each program owns a BD-channel slice (the recurrence is
+independent per channel — the Mamba-TP fact) and carries its (BD, N)
+state in scratch across chunk steps.
+
+VMEM per step (BD=128, C=32, N=16, f32):
+  x/dt/out (BD, C) x3 + b/c (C, N) x2 + cum/p/k/q (BD, C, N) x4
+  + scores (BD, C, C) + state (BD, N)  =~  1.6 MiB — comfortable.
+
+Numerics: per-chunk cumulative log-decay clamped at -60 (f32-safe); with
+the Mamba dt init (softplus +(-4.6) bias => dt in [1e-3, 1e-1]) a chunk of
+32 stays orders of magnitude inside that (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LOG_CLAMP = -60.0
+
+
+def _ssm_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, h_out_ref, h_scr, *, nc):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # (BD, C)
+    dt = dt_ref[0].astype(jnp.float32)  # (BD, C)
+    a = a_ref[0].astype(jnp.float32)  # (BD, N)
+    b = b_ref[0].astype(jnp.float32)  # (C, N)
+    c = c_ref[0].astype(jnp.float32)  # (C, N)
+    bd, ch = x.shape
+
+    log_a = dt[:, :, None] * a[:, None, :]  # (BD, C, N), negative
+    cum = jnp.maximum(jnp.cumsum(log_a, axis=1), LOG_CLAMP)  # inclusive
+    p = jnp.exp(cum)
+    drive = (dt * x)[:, :, None] * b[None, :, :]  # (BD, C, N)
+    k = drive * jnp.exp(-cum)
+    q = c[None, :, :] * p  # (BD, C, N)
+
+    s = jax.lax.dot_general(  # (BD, C, C) pairwise scores over the state dim
+        q, k, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bd, ch, ch), 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bd, ch, ch), 2)
+    y_intra = jnp.sum(jnp.where(cols <= rows, s, 0.0), axis=2)  # (BD, C)
+    h = h_scr[...]
+    y_inter = jnp.sum(q * h[:, None, :], axis=2)  # (BD, C)
+    o_ref[0] = (y_intra + y_inter).astype(o_ref.dtype)
+
+    h_new = jnp.exp(cum[:, -1, :]) * (h + jnp.sum(k, axis=1))
+    h_scr[...] = h_new
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        h_out_ref[0] = h_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bd", "interpret"))
+def ssm_scan_chunked(
+    x: jax.Array,  # (B, T, D)
+    dt: jax.Array,
+    a: jax.Array,  # (D, N)
+    b: jax.Array,  # (B, T, N)
+    c: jax.Array,
+    chunk: int = 32,
+    bd: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B, T, D), final state (B, D, N)). Zero initial state
+    (the decode path carries state through models/ssm instead)."""
+    bsz, t, d = x.shape
+    n = a.shape[-1]
+    chunk = min(chunk, t)
+    bd = min(bd, d)
+    assert t % chunk == 0 and d % bd == 0, (t, chunk, d, bd)
+    nc = t // chunk
+    # kernel layout: channels-major (B, D, T)
+    xt = jnp.swapaxes(x, 1, 2)
+    dtt = jnp.swapaxes(dt, 1, 2)
+
+    grid = (bsz, d // bd, nc)
+    chan_spec = pl.BlockSpec((1, bd, chunk), lambda bi, di, ci: (bi, di, ci))
+    seq_spec = pl.BlockSpec((1, chunk, n), lambda bi, di, ci: (bi, ci, 0))
+    y, h = pl.pallas_call(
+        functools.partial(_ssm_kernel, nc=nc),
+        grid=grid,
+        in_specs=[
+            chan_spec,
+            chan_spec,
+            pl.BlockSpec((1, bd, n), lambda bi, di, ci: (0, di, 0)),
+            seq_spec,
+            seq_spec,
+        ],
+        out_specs=[
+            chan_spec,
+            pl.BlockSpec((1, bd, n), lambda bi, di, ci: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, d, t), x.dtype),
+            jax.ShapeDtypeStruct((bsz, d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, a[None], b, c)
+    return jnp.swapaxes(y, 1, 2), h

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the selective-scan kernel: the sequential recurrence
+(mirror of models/ssm.selective_scan, kept self-contained)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssm_scan_ref(
+    x: jax.Array,  # (B, T, D)
+    dt: jax.Array,  # (B, T, D), positive
+    a: jax.Array,  # (D, N), negative
+    b: jax.Array,  # (B, T, N)
+    c: jax.Array,  # (B, T, N)
+    h0: jax.Array | None = None,  # (B, D, N)
+) -> tuple[jax.Array, jax.Array]:
+    bsz, t, d = x.shape
+    n = a.shape[-1]
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d, n), f32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(dt_t[..., None] * a[None])
+        drive = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = decay * h + drive
+        return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+    xs = tuple(jnp.moveaxis(v.astype(f32), 1, 0) for v in (x, dt, b, c))
+    h, ys = lax.scan(step, h0.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

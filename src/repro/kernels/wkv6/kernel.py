@@ -1,0 +1,128 @@
+"""Chunked WKV6 linear attention for TPU (Pallas).
+
+The sequential recurrence
+
+    out_t = r_t^T (S_t + diag(u) k_t v_t^T);   S_{t+1} = diag(w_t) S_t + k_t v_t^T
+
+is hostile to the MXU one step at a time.  The chunked reformulation
+(the same one the official RWKV CUDA/Triton kernels use, re-tiled for
+VMEM) turns a chunk of C steps into four MXU matmuls.  With
+P_t = prod_{s<t} w_s (within-chunk cumulative decay, P_0 = 1):
+
+    inter_t = (r_t . P_t) @ S_in                    — carry-in state
+    intra_t = sum_{s<t} (r_t.P_t · k_s/P_{s+1}) v_s — strict-causal matmul
+    bonus_t = (r_t · u · k_t) v_t                   — current token
+    S_out   = diag(P_C) S_in + (K ⊙ P_C/P_{s+1})^T V
+
+Grid: (B, H, T/C) with the chunk axis innermost-sequential; the (M, M)
+state lives in VMEM scratch across chunk steps.  Cumulative decays are
+computed in log space and clamped at -30 so the 1/P_{s+1} factors stay
+finite in f32 (the standard trick; C <= 64 keeps the dynamic range tame).
+
+VMEM per step (C=64, M=64): 4 x (C,M) f32 + (M,M) f32 + (C,C) f32
+=~ 100 KiB — tiny; many (B,H) programs pipeline over it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# exp(+/-60) stays finite/normal in f32; the clamp only guards pathological
+# all-channels-fully-decayed chunks (keep chunks <= 64 so the within-chunk
+# log-decay range stays well inside it for realistic RWKV decays)
+LOG_CLAMP = -60.0
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref, s_scr, *, nc):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)  # (C, M)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)  # (M,)
+    c = r.shape[0]
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))  # (C, M), <= 0
+    cum = jnp.cumsum(logw, axis=0)  # log prod_{s<=t}
+    log_p = jnp.maximum(cum - logw, LOG_CLAMP)  # log P_t = log prod_{s<t}
+    log_pc = jnp.maximum(cum[-1:], LOG_CLAMP)  # log P_C (full chunk)
+
+    r_dec = r * jnp.exp(log_p)  # r_t . P_t
+    k_inv = k * jnp.exp(-jnp.maximum(cum, LOG_CLAMP))  # k_s / P_{s+1}
+    k_rem = k * jnp.exp(log_pc - jnp.maximum(cum, LOG_CLAMP))  # k_s . P_C/P_{s+1}
+
+    s_in = s_scr[...]  # (M, M)
+    inter = jax.lax.dot_general(
+        r_dec, s_in, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, M)
+    a = jax.lax.dot_general(
+        r_dec, k_inv, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, C) scores
+    rows = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    a = jnp.where(cols < rows, a, 0.0)  # strictly causal
+    intra = jax.lax.dot_general(
+        a, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    bonus = jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True) * v
+    o_ref[0, 0] = (inter + intra + bonus).astype(o_ref.dtype)
+
+    s_new = jnp.exp(log_pc).T * s_in + jax.lax.dot_general(
+        k_rem, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s_scr[...] = s_new
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        s_out_ref[0, 0] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_chunked(
+    r: jax.Array,  # (B, T, H, M)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,  # (H, M)
+    chunk: int = 16,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (out (B, T, H, M), final state (B, H, M, M))."""
+    b, t, h, m = r.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    # kernel layout: (B, H, T, M)
+    rt, kt, vt, wt = (jnp.swapaxes(x, 1, 2) for x in (r, k, v, w))
+
+    grid = (b, h, nc)
+    spec = pl.BlockSpec((1, 1, chunk, m), lambda bi, hi, ci: (bi, hi, ci, 0))
+    out, s_out = pl.pallas_call(
+        functools.partial(_wkv6_kernel, nc=nc),
+        grid=grid,
+        in_specs=[
+            spec, spec, spec, spec,
+            pl.BlockSpec((1, m), lambda bi, hi, ci: (hi, 0)),
+        ],
+        out_specs=[
+            spec,
+            pl.BlockSpec((1, 1, m, m), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, m), r.dtype),
+            jax.ShapeDtypeStruct((b, h, m, m), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((m, m), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, u)
+    return jnp.swapaxes(out, 1, 2), s_out

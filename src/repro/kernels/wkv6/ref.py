@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the WKV6 kernel: the sequential recurrence.
+
+Identical math to models/rwkv.wkv6_scan (kept separate so the kernel
+package is self-contained):
+
+    out_t = r_t^T (S_t + diag(u) k_t v_t^T)
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv6_ref(
+    r: jax.Array,  # (B, T, H, M)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # decay factors in (0, 1)
+    u: jax.Array,  # (H, M)
+    state: jax.Array | None = None,  # (B, H, M, M)
+) -> tuple[jax.Array, jax.Array]:
+    b, t, h, m = r.shape
+    f32 = jnp.float32
+    if state is None:
+        state = jnp.zeros((b, h, m, m), f32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        bonus = jnp.sum(r_t * u[None] * k_t, axis=-1, keepdims=True) * v_t
+        out = jnp.einsum("bhm,bhmn->bhn", r_t, S) + bonus
+        S = w_t[..., :, None] * S + k_t[..., :, None] * v_t[..., None, :]
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a.astype(f32), 1, 0) for a in (r, k, v, w))
+    state, outs = lax.scan(step, state, xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), state

@@ -1,0 +1,250 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax import (jax locks the device
+count at first init), and must never run from conftest/pyproject — smoke
+tests see 1 device, this process sees 512 placeholders.
+
+Per cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs ShapeDtypeStruct stand-ins for every input (no allocation),
+  3. jit(step, in_shardings, out_shardings).lower(...).compile(),
+  4. records memory_analysis() (fits-HBM proof), cost_analysis(),
+     the loop-corrected HLO analysis (analysis/hlo.py), and the roofline
+     terms (analysis/roofline.py) as one JSON row.
+
+Single-cell mode (the default) keeps each XLA compile in its own process;
+``--all`` drives every cell through subprocesses so one OOM/sharding bug
+cannot take down the sweep.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --out artifacts/dryrun.jsonl
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+
+def _build_cell(arch: str, shape_name: str, mesh_kind: str, opts) -> dict:
+    from repro.analysis.hlo import analyze_hlo
+    from repro.analysis.roofline import HW_V5E, model_flops_per_step, roofline
+    from repro.configs import SHAPES, cell_supported, get_config
+    from repro.launch.mesh import make_production_mesh, mesh_name, n_devices
+    from repro.models.zoo import (
+        build_params,
+        init_kv_cache,
+        input_specs,
+        frontend_len,
+        make_prefill_step,
+        make_serve_step,
+        make_train_step,
+    )
+    from repro.optim import AdamW
+    from repro.optim.adamw import OptState
+    from repro.sharding.partition import (
+        SERVE_RULES,
+        batch_shardings,
+        cache_shardings,
+        param_shardings,
+        rules_for_train,
+        state_shardings,
+    )
+
+    cfg = get_config(arch)
+    if opts.embed_mode:
+        cfg = cfg.replace(c2d_embedding=opts.embed_mode == "c2d")
+    if opts.remat is not None:
+        cfg = cfg.replace(remat=opts.remat)
+    spec = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, spec)
+    row: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "kind": spec.kind,
+        "embed_mode": "c2d" if cfg.c2d_embedding else "gather",
+        "zero1": bool(opts.zero1),
+        "fsdp": bool(opts.fsdp),
+    }
+    if not ok:
+        row.update(status="skipped", reason=why)
+        return row
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    ndev = n_devices(mesh)
+    row["mesh_shape"] = mesh_name(mesh)
+    row["devices"] = ndev
+
+    params_sds, axes = build_params(cfg, abstract=True)
+    # serving stores weights 2-D sharded (TP x data) so the big archs fit
+    # without optimizer headroom; training picks per-arch rules
+    p_sh = param_shardings(params_sds, axes, mesh, rules=SERVE_RULES)
+    sds = jax.ShapeDtypeStruct
+    t0 = time.perf_counter()
+
+    if spec.kind == "train":
+        opt = AdamW()
+        f32 = jnp.float32
+        opt_sds = OptState(
+            m={k: sds(p.shape, f32) for k, p in params_sds.items()},
+            v={k: sds(p.shape, f32) for k, p in params_sds.items()},
+            count=sds((), jnp.int32),
+        )
+        state_sds = {"params": params_sds, "opt": opt_sds, "step": sds((), jnp.int32)}
+        st_sh = state_shardings(
+            params_sds, axes, mesh, rules=rules_for_train(cfg, mesh),
+            zero1=opts.zero1, fsdp=opts.fsdp,
+        )
+        batch_sds = input_specs(cfg, spec)
+        b_sh = batch_shardings(batch_sds, mesh)
+        step = make_train_step(cfg, opt, mesh=mesh, fsdp=opts.fsdp)
+        jitted = jax.jit(
+            step,
+            in_shardings=(st_sh, b_sh),
+            out_shardings=(st_sh, None),
+            donate_argnums=(0,),
+        )
+        args = (state_sds, batch_sds)
+        step_tokens = spec.tokens
+    elif spec.kind == "prefill":
+        batch_sds = input_specs(cfg, spec)
+        b_sh = batch_shardings(batch_sds, mesh)
+        step = make_prefill_step(cfg, mesh=mesh)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+        args = (params_sds, batch_sds)
+        step_tokens = spec.tokens
+    else:  # decode
+        specs = input_specs(cfg, spec)
+        cache_sds = specs["cache"]
+        c_sh = cache_shardings(cache_sds, mesh)
+        tok_sh = batch_shardings({"tokens": specs["tokens"]}, mesh)["tokens"]
+        pos_sh = batch_shardings({"pos": specs["pos"]}, mesh)["pos"]
+        step = make_serve_step(cfg, mesh=mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+            out_shardings=(None, c_sh),
+            donate_argnums=(1,),
+        )
+        args = (params_sds, cache_sds, specs["tokens"], specs["pos"])
+        step_tokens = spec.global_batch  # one token per sequence per step
+
+    lowered = jitted.lower(*args)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    hc = analyze_hlo(text)
+    mf = model_flops_per_step(cfg, spec.kind, step_tokens)
+    mem_per_dev = (
+        mem.argument_size_in_bytes
+        + mem.temp_size_in_bytes
+        + mem.output_size_in_bytes
+        - mem.alias_size_in_bytes
+    )
+    rep = roofline(
+        arch, shape_name, mesh_kind, ndev, hc, mf, HW_V5E, memory_per_dev=mem_per_dev
+    )
+    row.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        arg_bytes=mem.argument_size_in_bytes,
+        temp_bytes=mem.temp_size_in_bytes,
+        out_bytes=mem.output_size_in_bytes,
+        alias_bytes=mem.alias_size_in_bytes,
+        peak_bytes_per_dev=mem_per_dev,
+        fits_hbm=bool(mem_per_dev <= HW_V5E.hbm_bytes),
+        xla_flops_per_dev=xla_cost.get("flops", 0.0),
+        hlo_flops_per_dev=hc.flops,
+        hlo_bytes_per_dev=hc.bytes_accessed,
+        hlo_bytes_major_per_dev=hc.bytes_major,
+        collective_bytes_per_dev=hc.collective_bytes,
+        collective_by_kind={k: round(v) for k, v in hc.collective_by_kind.items()},
+        collective_count=hc.collective_count,
+        while_trips=hc.while_trip_counts[:8],
+        model_flops=mf,
+        t_compute_s=rep.t_compute,
+        t_memory_s=rep.t_memory,
+        t_collective_s=rep.t_collective,
+        dominant=rep.dominant,
+        useful_ratio=round(rep.useful_ratio, 4),
+        mfu_bound=round(rep.mfu_bound, 4),
+    )
+    return row
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, opts) -> dict:
+    try:
+        return _build_cell(arch, shape_name, mesh_kind, opts)
+    except Exception as e:  # a failing cell is a bug in our sharding
+        return {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_kind,
+            "status": "error",
+            "error": f"{type(e).__name__}: {e}",
+            "trace": traceback.format_exc()[-2000:],
+        }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--embed-mode", choices=["c2d", "gather"], default=None)
+    ap.add_argument("--zero1", action=argparse.BooleanOptionalAction, default=True)
+    ap.add_argument("--fsdp", action=argparse.BooleanOptionalAction, default=True)
+    ap.add_argument("--remat", action=argparse.BooleanOptionalAction, default=None)
+    ap.add_argument("--timeout", type=int, default=1800)
+    opts = ap.parse_args()
+
+    if opts.all:
+        from repro.configs import ARCH_IDS, SHAPES
+
+        fails = 0
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mesh_kind in ("single", "multi"):
+                    cmd = [
+                        sys.executable, "-m", "repro.launch.dryrun",
+                        "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                    ]
+                    if opts.out:
+                        cmd += ["--out", opts.out]
+                    if opts.embed_mode:
+                        cmd += ["--embed-mode", opts.embed_mode]
+                    if not opts.zero1:
+                        cmd += ["--no-zero1"]
+                    r = subprocess.run(cmd, timeout=opts.timeout)
+                    fails += r.returncode != 0
+        return 1 if fails else 0
+
+    assert opts.arch and opts.shape, "--arch and --shape required (or --all)"
+    row = run_cell(opts.arch, opts.shape, opts.mesh, opts)
+    print(json.dumps(row))
+    if opts.out:
+        with open(opts.out, "a") as f:
+            f.write(json.dumps(row) + "\n")
+    return 0 if row.get("status") in ("ok", "skipped") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,12 @@
+"""Model zoo: the 10 assigned architectures as one composable LM substrate.
+
+Families: dense GQA transformers, MoE transformers (EP token dispatch =
+X-RDMA compute-to-data at tensor scale), RWKV6 linear attention, hybrid
+attn+SSM (Hymba), encoder-decoder (Seamless backbone), VLM/audio backbones
+with stub modality frontends.
+"""
+
+from .common import ModelConfig
+from .zoo import build_params, init_kv_cache, input_specs, make_steps
+
+__all__ = ["ModelConfig", "build_params", "init_kv_cache", "input_specs", "make_steps"]

@@ -1,0 +1,220 @@
+"""Grouped-query attention: train/prefill (full-sequence) and decode paths.
+
+One einsum-based implementation covers all assigned archs: MHA (seamless,
+kv=heads), GQA (kv<heads), sliding-window local layers + logit softcapping
+(gemma2), QKV bias (qwen2.5).  Head grouping is explicit — q is reshaped to
+(batch, seq, kv_heads, group, head_dim) so the contraction never repeats K/V
+(repeat-free GQA keeps HLO bytes honest for the roofline).
+
+The XLA-native einsum path is the default (visible to cost_analysis, GSPMD-
+shardable); the Pallas flash kernel (repro.kernels.flash_attention) is an
+opt-in for TPU prefill hot spots and is validated against this module.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import softcap
+
+NEG = -2.0**30  # mask value safe in bf16/f32
+
+LOGITS_BUDGET = 512 * 1024 * 1024  # max live (chunk x T) f32 logits block
+
+
+def auto_chunk(b: int, h: int, s: int, t: int, cap: int) -> int:
+    """Largest power-of-2 q-chunk that divides ``s``, respects ``cap``, and
+    keeps the (B, H, chunk, T) f32 logits block under LOGITS_BUDGET —
+    chunk=1024 is right at T=4k but 10x over budget at T=32k."""
+    limit = max(LOGITS_BUDGET // max(b * h * t * 4, 1), 128)
+    c = 16
+    while c * 2 <= min(cap, limit, s) and s % (c * 2) == 0:
+        c *= 2
+    return c
+
+
+def _grouped(q: jax.Array, n_kv: int) -> jax.Array:
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def attend(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, T, K, hd)
+    v: jax.Array,  # (B, T, K, hd)
+    *,
+    q_pos: jax.Array,  # (S,) or (B, S) query positions
+    k_pos: jax.Array,  # (T,) or (B, T) key positions
+    causal: bool = True,
+    window: jax.Array | int | None = None,  # 0 / None => global
+    cap: float | None = None,
+    k_valid: jax.Array | None = None,  # (B, T) cache-slot validity
+    scale: float | None = None,
+) -> jax.Array:
+    """Returns (B, S, H, hd). Mask semantics: attend iff
+    k_pos <= q_pos (causal) and q_pos - k_pos < window (local layers) and
+    k_valid (decode: slot is filled)."""
+    b, s, h, d = q.shape
+    n_kv = k.shape[2]
+    qg = _grouped(q, n_kv)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32)
+    logits = softcap(logits * scale, cap)
+
+    qp = q_pos if q_pos.ndim == 2 else q_pos[None, :]  # (B|1, S)
+    kp = k_pos if k_pos.ndim == 2 else k_pos[None, :]  # (B|1, T)
+    mask = jnp.ones((qp.shape[0], s, kp.shape[-1]), bool)
+    if causal:
+        mask &= kp[:, None, :] <= qp[:, :, None]
+    if window is not None:
+        w = jnp.asarray(window)
+        local = qp[:, :, None] - kp[:, None, :] < w
+        mask &= jnp.where(w > 0, local, True)
+    if k_valid is not None:
+        mask &= k_valid[:, None, :]
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG)
+
+    att = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", att, v)
+    return out.reshape(b, s, h, d)
+
+
+def attend_chunked(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, T, K, hd)
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,  # (S,)
+    k_pos: jax.Array,  # (T,)
+    chunk: int,
+    causal: bool = True,
+    window: jax.Array | int | None = None,
+    cap: float | None = None,
+    k_valid: jax.Array | None = None,
+) -> jax.Array:
+    """Query-chunked attention: identical math to :func:`attend`, but the
+    live logits block is (chunk x T) instead of (S x T).  This is the
+    XLA-native memory shape of flash attention (the Pallas kernel
+    additionally tiles T through VMEM); it is what makes 32k prefill fit.
+
+    Requires S % chunk == 0 and 1-D q_pos (prefill/train, not ragged).
+    """
+    b, s, h, d = q.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    qc = jnp.moveaxis(q.reshape(b, nc, chunk, h, d), 1, 0)  # (nc, B, C, H, hd)
+    pc = q_pos.reshape(nc, chunk)
+
+    def body(_, xs):
+        q_i, pos_i = xs
+        o_i = attend(
+            q_i, k, v, q_pos=pos_i, k_pos=k_pos, causal=causal,
+            window=window, cap=cap, k_valid=k_valid,
+        )
+        return None, o_i
+
+    _, out = jax.lax.scan(body, None, (qc, pc))
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, d)
+
+
+def attend_sp(
+    q: jax.Array,  # (B, S, H, hd) — S sharded over `axis`
+    k: jax.Array,  # (B, S, K, hd) — S sharded over `axis`
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,  # (S,) full positions
+    k_pos: jax.Array,  # (S,)
+    mesh,
+    axis: str = "model",
+    batch_axes: tuple[str, ...] = (),
+    chunk: int = 0,
+    causal: bool = True,
+    window: jax.Array | int | None = None,
+    cap: float | None = None,
+) -> jax.Array:
+    """Sequence-parallel attention as an explicit shard_map.
+
+    For archs whose head count does not divide the TP axis (qwen 40H,
+    hymba 25H, gemma2 8H), the residual stream is S-sharded and heads
+    cannot shard — so each rank keeps its S/|axis| queries, all-gathers
+    the (small, GQA) K/V, and runs q-chunked attention locally.  The only
+    collective is the K/V gather; GSPMD's alternative (resharding q/k/v
+    per layer) measured 25x the bytes on qwen (EXPERIMENTS.md §Perf).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    b, s, h, d = q.shape
+    m = mesh.shape[axis]
+    assert s % m == 0, (s, m)
+    s_loc = s // m
+    bspec = (tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]) if batch_axes else None
+    win = jnp.asarray(0 if window is None else window, jnp.int32)
+
+    def body(q_l, k_l, v_l, q_pos_f, k_pos_f, win_s):
+        me = jax.lax.axis_index(axis)
+        k_full = jax.lax.all_gather(k_l, axis, axis=1, tiled=True)
+        v_full = jax.lax.all_gather(v_l, axis, axis=1, tiled=True)
+        pos_l = jax.lax.dynamic_slice_in_dim(q_pos_f, me * s_loc, s_loc)
+        kw = dict(
+            q_pos=pos_l, k_pos=k_pos_f, causal=causal, window=win_s, cap=cap
+        )
+        c = auto_chunk(q_l.shape[0], h, s_loc, s, cap=chunk or s_loc)
+        if c < s_loc:
+            return attend_chunked(q_l, k_full, v_full, chunk=c, **kw)
+        return attend(q_l, k_full, v_full, **kw)
+
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, axis, None, None),
+            P(bspec, axis, None, None),
+            P(bspec, axis, None, None),
+            P(None),
+            P(None),
+            P(),
+        ),
+        out_specs=P(bspec, axis, None, None),
+        check_vma=False,
+    )(q, k, v, q_pos, k_pos, win)
+
+
+def qkv_proj(
+    x: jax.Array,
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    bq: jax.Array | None = None,
+    bk: jax.Array | None = None,
+    bv: jax.Array | None = None,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    q = x @ wq
+    k = x @ wk
+    v = x @ wv
+    if bq is not None:
+        q, k, v = q + bq, k + bk, v + bv
+    return (
+        q.reshape(b, s, n_heads, head_dim),
+        k.reshape(b, s, n_kv, head_dim),
+        v.reshape(b, s, n_kv, head_dim),
+    )
+
+
+def update_kv_cache(
+    k_cache: jax.Array,  # (B, T, K, hd)
+    v_cache: jax.Array,
+    k_new: jax.Array,  # (B, S, K, hd)
+    v_new: jax.Array,
+    offset: jax.Array,  # scalar: number of tokens already cached
+) -> tuple[jax.Array, jax.Array]:
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), offset, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), offset, 1)
+    return k_cache, v_cache

@@ -1,0 +1,253 @@
+"""Shared model substrate: config, parameter factory, norms, MLP, RoPE, loss.
+
+Parameters are a *flat* dict ``{"path.to.leaf": jax.Array}`` with a parallel
+dict of logical-axis tuples (``{"path.to.leaf": ("layers","embed","q_dim")}``)
+produced by the same factory.  Flat dicts keep sharding-spec derivation,
+checkpointing, and compression hooks trivial, and stacked leading ``layers``
+dims make ``lax.scan`` over blocks natural (small HLO => tractable 512-device
+compiles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, jax.Array]
+Axes = dict[str, tuple[str | None, ...]]
+
+VOCAB_PAD_MULTIPLE = 2048  # 16-way vocab shards stay 128-lane aligned
+
+
+def pad_vocab(v: int) -> int:
+    return -(-v // VOCAB_PAD_MULTIPLE) * VOCAB_PAD_MULTIPLE
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One architecture. Fields follow the assignment table verbatim."""
+
+    name: str = "tiny"
+    family: str = "dense"  # dense | moe | rwkv | hybrid | encdec
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 256
+    vocab: int = 512
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    window: int | None = None  # sliding-window size for local layers
+    global_every: int = 0  # k>0: every k-th layer is global, rest local
+    norm_eps: float = 1e-6
+    act: str = "silu"  # silu | gelu
+    mlp_gated: bool = True  # SwiGLU/GeGLU (3 mats) vs plain act-MLP (2 mats)
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    topk: int = 0
+    # recurrent state
+    ssm_state: int = 0  # hymba mamba-head state size
+    rwkv_head_dim: int = 64
+    # 0 = sequential scan (reference); >0 = chunked matmul formulation of
+    # the WKV6 recurrence (the Pallas kernel's math — 4 MXU matmuls per
+    # chunk instead of C tiny steps; the train-path perf lever)
+    rwkv_chunk: int = 0
+    # same lever for the selective (Mamba) scan in hybrid blocks
+    ssm_chunk: int = 0
+    # encoder-decoder
+    enc_layers: int = 0
+    # stub modality frontend (vlm patch embeds / audio frames via input_specs)
+    frontend: str | None = None  # None | "patch" | "audio"
+    # numerics / training
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # compute-to-data embedding (paper's technique at tensor scale)
+    c2d_embedding: bool = True
+    embed_mult: float = 1.0  # gemma multiplies embeddings by sqrt(d_model)
+    # q-chunked attention: bound the live logits block to (chunk x T) when
+    # S > chunk (XLA-native flash; the Pallas kernel is the TPU hot path)
+    attn_chunk: int = 0
+    # gradient-accumulation microbatches for train_step (memory lever for
+    # the 15-42B archs whose activations exceed HBM at the assigned batch)
+    microbatch: int = 1
+
+    @property
+    def vocab_padded(self) -> int:
+        return pad_vocab(self.vocab)
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.enc_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "rwkv"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch decode at 500k context? (SSM / windowed hybrids.)"""
+        return self.family in ("rwkv", "hybrid") or self.global_every > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def layer_is_global(self, i: int) -> bool:
+        if self.global_every <= 0:
+            return True
+        return (i % self.global_every) == (self.global_every - 1)
+
+
+# ------------------------------------------------------------------ factory
+class ParamFactory:
+    """Builds the flat param dict + logical axes; one RNG stream per leaf."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32, abstract: bool = False):
+        self.key = key
+        self.dtype = dtype
+        self.abstract = abstract  # ShapeDtypeStruct-only (dry-run, no alloc)
+        self.params: Params = {}
+        self.axes: Axes = {}
+
+    def _next(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def add(
+        self,
+        name: str,
+        shape: tuple[int, ...],
+        axes: tuple[str | None, ...],
+        init: str = "normal",
+        scale: float | None = None,
+    ) -> None:
+        assert len(shape) == len(axes), (name, shape, axes)
+        if self.abstract:
+            self.params[name] = jax.ShapeDtypeStruct(shape, self.dtype)
+            self.axes[name] = axes
+            return
+        if init == "zeros":
+            arr = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            arr = jnp.ones(shape, self.dtype)
+        elif init == "const":
+            arr = jnp.full(shape, scale, self.dtype)
+        else:  # truncated-normal fan-in scaling
+            if scale is None:
+                fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                scale = 1.0 / math.sqrt(max(fan_in, 1))
+            arr = (
+                jax.random.truncated_normal(self._next(), -2.0, 2.0, shape, jnp.float32)
+                * scale
+            ).astype(self.dtype)
+        self.params[name] = arr
+        self.axes[name] = axes
+
+    def done(self) -> tuple[Params, Axes]:
+        return self.params, self.axes
+
+
+# ------------------------------------------------------------------- layers
+def rms_norm(x: jax.Array, gain: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + gain.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def mlp(x: jax.Array, wi: jax.Array, wg: jax.Array | None, wo: jax.Array, act: str) -> jax.Array:
+    """SwiGLU when wg is present, plain act-MLP otherwise."""
+    h = x @ wi
+    a = jax.nn.silu(h) if act == "silu" else jax.nn.gelu(h)
+    if wg is not None:
+        a = a * (x @ wg)
+    return a @ wo
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embeddings. x: [..., seq, heads, head_dim], positions: [..., seq]."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# ------------------------------------------------------------ chunked scan
+def scan_chunked_remat(step, carry, xs, chunk: int, enabled: bool = True):
+    """lax.scan over T with sqrt-T memory for reverse-mode AD.
+
+    Differentiating a T-step scan saves T carries; training a 4096-token
+    RWKV layer would checkpoint 4096 (B,H,M,M) states (~34 GB/device).
+    Scanning T/C chunks with a remat'd inner C-step scan keeps only
+    (T/C + C) carries — minimized at C ~ sqrt(T) — at the cost of one
+    extra forward over each chunk in the backward pass (the standard
+    recurrent-remat trade; the Pallas WKV6 kernel replaces the inner scan
+    entirely on TPU).
+    """
+    leaves = jax.tree_util.tree_leaves(xs)
+    t = leaves[0].shape[0]
+    if not enabled or chunk <= 0 or t % chunk or t <= chunk:
+        return jax.lax.scan(step, carry, xs)
+    n = t // chunk
+
+    def split(a):
+        return a.reshape(n, chunk, *a.shape[1:])
+
+    xs_c = jax.tree_util.tree_map(split, xs)
+
+    @jax.checkpoint
+    def chunk_body(c, x_c):
+        return jax.lax.scan(step, c, x_c)
+
+    carry, ys_c = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape(t, *a.shape[2:]), ys_c
+    )
+    return carry, ys
+
+
+# --------------------------------------------------------------------- loss
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, vocab: int, mask: jax.Array | None = None
+) -> jax.Array:
+    """Mean NLL over valid positions; padded-vocab slots are masked to -inf
+    (the padded one-hot-matmul embedding never *writes* them, but the LM head
+    produces garbage logits there)."""
+    v = logits.shape[-1]
+    if v > vocab:
+        neg = jnp.asarray(-1e9, logits.dtype)
+        logits = jnp.where(jnp.arange(v) < vocab, logits, neg)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

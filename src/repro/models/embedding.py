@@ -1,0 +1,111 @@
+"""Token embedding + LM head: compute-to-data (c2d) vs. gather baselines.
+
+This is the paper's DAPC-vs-GBPC dichotomy rendered at tensor scale
+(DESIGN.md §2).  The vocabulary table is sharded over the ``model`` mesh
+axis.  To look up a token you either:
+
+* **c2d** (ship the indices — X-RDMA style): every shard looks up the ids
+  that fall inside its own vocab slice (masked local take) and the partial
+  (B, S, D) results are ``psum``-combined.  Wire cost per token: one D-dim
+  vector reduce — independent of vocab size.  Implemented with
+  ``shard_map`` so the collective is explicit and auditable in the HLO.
+
+* **gather** (ship the data — GET/GBPC style): replicate (all-gather) the
+  table, then take locally.  Wire cost per step: the whole table
+  (vocab × D), the analogue of GBPC pulling entries to the client.
+
+* **auto**: plain ``jnp.take`` under GSPMD — whatever the partitioner
+  picks.  Kept as a reference point for §Perf.
+
+The LM head is the transpose problem: h @ W produces vocab-sharded logits
+(softmax over a sharded axis — GSPMD inserts the max/sum all-reduces, which
+are D-free and cheap).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def embed_plain(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Single-device / smoke-test path."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embed_auto(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """GSPMD-native gather: the partitioner decides the collective."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embed_gather(table: jax.Array, ids: jax.Array, mesh: Mesh | None) -> jax.Array:
+    """GET-style baseline: force table replication before the local take."""
+    if mesh is not None:
+        table = jax.lax.with_sharding_constraint(
+            table, NamedSharding(mesh, P(None, None))
+        )
+    return jnp.take(table, ids, axis=0)
+
+
+def embed_c2d(
+    table: jax.Array,
+    ids: jax.Array,
+    mesh: Mesh,
+    vocab_axis: str = "model",
+    batch_axes: tuple[str, ...] = ("data",),
+) -> jax.Array:
+    """Ship-the-indices lookup over a vocab-sharded table.
+
+    table: (Vp, D) sharded P("model", None); ids: (B, S) sharded over batch.
+    Each shard takes ids falling in [lo, hi) from its local slice, zeroes
+    the rest, and the partials are psum'd over the vocab axis — the Chaser
+    pattern: the table never moves, D-sized results do.
+    """
+    n_shards = mesh.shape[vocab_axis]
+    vp = table.shape[0]
+    assert vp % n_shards == 0, (vp, n_shards)
+    local_v = vp // n_shards
+
+    def local_lookup(tab: jax.Array, ids_l: jax.Array) -> jax.Array:
+        shard = jax.lax.axis_index(vocab_axis)
+        lo = shard * local_v
+        loc = ids_l - lo
+        inside = (loc >= 0) & (loc < local_v)
+        loc = jnp.clip(loc, 0, local_v - 1)
+        part = jnp.take(tab, loc, axis=0)
+        part = jnp.where(inside[..., None], part, jnp.zeros((), part.dtype))
+        return jax.lax.psum(part, vocab_axis)
+
+    b = tuple(batch_axes) if batch_axes else None
+    return jax.shard_map(
+        local_lookup,
+        mesh=mesh,
+        in_specs=(P(vocab_axis, None), P(b, None)),
+        out_specs=P(b, None, None),
+        check_vma=False,
+    )(table, ids)
+
+
+def embed_tokens(
+    table: jax.Array,
+    ids: jax.Array,
+    mode: str = "plain",
+    mesh: Mesh | None = None,
+    vocab_axis: str = "model",
+    batch_axes: tuple[str, ...] = ("data",),
+) -> jax.Array:
+    if mode == "c2d" and mesh is not None:
+        return embed_c2d(table, ids, mesh, vocab_axis, batch_axes)
+    if mode == "gather":
+        return embed_gather(table, ids, mesh)
+    if mode == "auto":
+        return embed_auto(table, ids)
+    return embed_plain(table, ids)
+
+
+def lm_head(h: jax.Array, w: jax.Array) -> jax.Array:
+    """h: (B, S, D) @ w: (D, Vp) -> vocab-sharded logits (B, S, Vp)."""
+    return jnp.einsum("bsd,dv->bsv", h, w)

@@ -1,0 +1,194 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The audio frontend (conformer feature extractor) is a STUB per the brief:
+``input_specs()`` supplies precomputed frame embeddings (B, S_enc, D).  The
+backbone is real: a bidirectional self-attention encoder and a causal
+decoder with cross-attention, both scanned over layers.
+
+Decode path: self-attention KV cache grows with generated tokens; the
+cross-attention K/V are computed once from the encoder output at prefill
+and stay frozen in the cache (xk/xv) — generation never re-touches the
+encoder.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .attention import attend, qkv_proj, update_kv_cache
+from .common import ModelConfig, ParamFactory, mlp, rms_norm, rope
+from .transformer import add_attn_params, add_mlp_params, attn_sublayer
+
+Params = dict[str, jax.Array]
+
+
+def add_encdec_params(f: ParamFactory, cfg: ModelConfig) -> None:
+    E = cfg.enc_layers
+    # encoder blocks
+    f.add("enc.ln1", (E, cfg.d_model), ("layers", "embed"), init="zeros")
+    f.add("enc.ln2", (E, cfg.d_model), ("layers", "embed"), init="zeros")
+    add_attn_params(f, cfg, "enc", n_layers=E)
+    add_mlp_params(f, cfg, "enc", n_layers=E)
+    f.add("enc.final_ln", (cfg.d_model,), ("embed",), init="zeros")
+    # decoder blocks: self-attn + cross-attn + mlp
+    L = cfg.n_layers
+    f.add("blocks.ln1", (L, cfg.d_model), ("layers", "embed"), init="zeros")
+    f.add("blocks.lnx", (L, cfg.d_model), ("layers", "embed"), init="zeros")
+    f.add("blocks.ln2", (L, cfg.d_model), ("layers", "embed"), init="zeros")
+    add_attn_params(f, cfg, "blocks")
+    add_attn_params(f, cfg, "blocks", tag="_x")  # cross-attention projections
+    add_mlp_params(f, cfg, "blocks")
+
+
+def _strip(p: Params, prefix: str) -> dict:
+    pl = len(prefix) + 1
+    return {k[pl:]: v for k, v in p.items() if k.startswith(prefix + ".")}
+
+
+# ------------------------------------------------------------------ encoder
+def encode(cfg: ModelConfig, params: Params, x: jax.Array, mesh=None) -> jax.Array:
+    """x: (B, S_enc, D) frame embeddings -> (B, S_enc, D) encoder states."""
+    enc_p = _strip(params, "enc")
+    final_ln = enc_p.pop("final_ln")
+    pos = jnp.arange(x.shape[1])
+
+    def body(h, p_l):
+        if mesh is not None:
+            from repro.sharding.partition import sp_constrain
+
+            h = sp_constrain(h, mesh)
+        a = rms_norm(h, p_l["ln1"], cfg.norm_eps)
+        att, _ = attn_sublayer(
+            a, p_l, cfg, pos=pos, window=jnp.int32(0), cache=None, offset=None,
+            causal=False, mesh=mesh,
+        )
+        h = h + att
+        a = rms_norm(h, p_l["ln2"], cfg.norm_eps)
+        h = h + mlp(a, p_l["wi"], p_l.get("wg"), p_l["wo2"], cfg.act)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, enc_p)
+    return rms_norm(x, final_ln, cfg.norm_eps)
+
+
+# ----------------------------------------------------------- cross-attention
+def cross_attend(
+    h: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    xk: jax.Array,  # (B, S_enc, K, hd) precomputed enc keys
+    xv: jax.Array,
+    mesh=None,
+) -> jax.Array:
+    from .attention import attend_chunked, auto_chunk
+
+    b, s, _ = h.shape
+    q = (h @ p["wq_x"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    # cross-attention is position-free (no RoPE), never causal
+    kw = dict(
+        q_pos=jnp.arange(s), k_pos=jnp.arange(xk.shape[1]), causal=False,
+        window=None, cap=None,
+    )
+    b_loc, h_loc = b, cfg.n_heads
+    if mesh is not None:
+        from repro.sharding.partition import axis_size, data_axes
+
+        d = data_axes(mesh)
+        if d and b_loc % axis_size(mesh, d) == 0:
+            b_loc //= axis_size(mesh, d)
+        m = mesh.shape.get("model", 1)
+        if h_loc % m == 0:
+            h_loc //= m
+    c = auto_chunk(b_loc, h_loc, s, xk.shape[1], cap=cfg.attn_chunk or s)
+    if cfg.attn_chunk and c < s:
+        out = attend_chunked(
+            q, xk.astype(q.dtype), xv.astype(q.dtype), chunk=c, **kw
+        )
+    else:
+        out = attend(q, xk.astype(q.dtype), xv.astype(q.dtype), **kw)
+    return out.reshape(b, s, -1) @ p["wo_x"]
+
+
+def cross_kv(cfg: ModelConfig, p_l: dict, enc_out: jax.Array):
+    """Per-layer cross K/V from encoder states. p_l keys: wk_x, wv_x."""
+    b, t, _ = enc_out.shape
+    k = (enc_out @ p_l["wk_x"]).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ p_l["wv_x"]).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+# ------------------------------------------------------------------ decoder
+def decoder_block(
+    h: jax.Array,
+    p_l: dict,
+    cfg: ModelConfig,
+    *,
+    pos: jax.Array,
+    xk: jax.Array,
+    xv: jax.Array,
+    cache: dict | None,
+    offset: jax.Array | None,
+    mesh=None,
+):
+    a = rms_norm(h, p_l["ln1"], cfg.norm_eps)
+    kv = None if cache is None else (cache["k"], cache["v"])
+    att, new_kv = attn_sublayer(
+        a, p_l, cfg, pos=pos, window=jnp.int32(0), cache=kv, offset=offset,
+        mesh=mesh,
+    )
+    h = h + att
+    a = rms_norm(h, p_l["lnx"], cfg.norm_eps)
+    h = h + cross_attend(a, p_l, cfg, xk, xv, mesh=mesh)
+    a = rms_norm(h, p_l["ln2"], cfg.norm_eps)
+    h = h + mlp(a, p_l["wi"], p_l.get("wg"), p_l["wo2"], cfg.act)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = new_kv
+    return h, new_cache
+
+
+def run_decoder(
+    cfg: ModelConfig,
+    params: Params,
+    x: jax.Array,  # (B, S_dec, D) token embeddings
+    *,
+    enc_out: jax.Array | None = None,  # (B, S_enc, D); None => use cached xk/xv
+    pos: jax.Array,
+    caches: dict | None = None,  # leading-L pytree {k, v, xk, xv}
+    offset: jax.Array | None = None,
+    mesh=None,
+):
+    dec_p = _strip(params, "blocks")
+
+    def body(h, xs):
+        p_l, cache_l = xs
+        if mesh is not None:
+            from repro.sharding.partition import sp_constrain
+
+            h = sp_constrain(h, mesh)
+        if enc_out is not None:
+            xk, xv = cross_kv(cfg, p_l, enc_out)
+            if cache_l is not None:
+                cache_l = dict(cache_l)
+                cache_l["xk"], cache_l["xv"] = (
+                    xk.astype(cache_l["xk"].dtype),
+                    xv.astype(cache_l["xv"].dtype),
+                )
+        else:
+            assert cache_l is not None, "decode without enc_out needs cached xk/xv"
+            xk, xv = cache_l["xk"], cache_l["xv"]
+        h, new_cache = decoder_block(
+            h, p_l, cfg, pos=pos, xk=xk, xv=xv, cache=cache_l, offset=offset,
+            mesh=mesh,
+        )
+        return h, new_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, new_caches = lax.scan(body, x, (dec_p, caches))
+    return x, new_caches

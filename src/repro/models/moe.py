@@ -1,0 +1,304 @@
+"""Mixture-of-Experts: top-k routing with expert-parallel dispatch.
+
+This layer is the paper's technique at tensor scale: *ship the tokens to
+the shard that owns their expert* (the X-RDMA Chaser — indices+payload
+travel, tables stay put), vs. *replicate the experts* (the GET baseline).
+
+Dispatch modes:
+
+* ``a2a`` (compute-to-data, production path) — explicit ``shard_map``:
+  tokens are bucketed by destination EP rank, exchanged with
+  ``lax.all_to_all`` over the ``model`` axis, processed by the local
+  experts, and returned by a second all_to_all.  Wire cost per token:
+  2 x topk x D x capacity-slack — independent of expert count.  This is
+  the exact collective the paper's DAPC maps to; the naive scatter
+  formulation (kept below as ``scatter`` for ablation) lowers under GSPMD
+  to (E*C, D)-sized all-reduces per topk slot — measured 40x more
+  collective bytes (EXPERIMENTS.md §Perf).
+
+* ``eplocal`` — every rank runs its E_loc experts over all tokens,
+  gate-masked, one psum of (N, D) partials.  Compute-inflated by E/topk
+  over the useful work, but comm is one small psum: the right trade for
+  S=1 decode steps.  Used automatically when tokens cannot shard over the
+  EP axis.
+
+* ``replicated`` (move-data-to-compute, the GET/GBPC baseline) — every
+  device evaluates all experts over its tokens; expert weights replicated.
+
+* ``scatter`` — the original capacity-buffer scatter/gather formulation
+  (single-device reference semantics; the oracle the a2a path is tested
+  against).
+
+Router: softmax -> top-k (renormalized) + Shazeer load-balance aux loss.
+Overflow beyond capacity is dropped (residual passes through), the
+Switch/GShard scheme.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def moe_capacity(n_tokens: int, n_experts: int, topk: int, factor: float = 1.25) -> int:
+    c = int(n_tokens * topk * factor / n_experts)
+    return max(8, -(-c // 8) * 8)  # multiple of 8, at least 8
+
+
+def route(x: jax.Array, w_router: jax.Array, topk: int):
+    """x: (N, D) -> gates (N, k), idx (N, k), aux load-balance loss."""
+    logits = (x.astype(jnp.float32)) @ w_router.astype(jnp.float32)  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, topk)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    e = w_router.shape[-1]
+    onehot = jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)  # primary expert
+    aux = e * jnp.mean(jnp.mean(onehot, axis=0) * jnp.mean(probs, axis=0))
+    return gates.astype(x.dtype), idx, aux
+
+
+def _bucket_positions(dst: jax.Array, n_buckets: int, capacity: int):
+    """Rank of each element within its destination bucket (cumsum, no sort).
+
+    dst: (M,) int32 bucket ids. Returns (slot, keep): slot in
+    [0, n_buckets*capacity), keep=False for overflow drops.
+    """
+    onehot = jax.nn.one_hot(dst, n_buckets, dtype=jnp.int32)  # (M, B)
+    ranks = jnp.cumsum(onehot, axis=0) - 1
+    pos = jnp.take_along_axis(ranks, dst[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    slot = dst * capacity + jnp.minimum(pos, capacity - 1)
+    return slot, keep
+
+
+def expert_ffn(buf: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array) -> jax.Array:
+    """(E, C, D) x per-expert SwiGLU -> (E, C, D)."""
+    h = jnp.einsum("ecd,edf->ecf", buf, wi)
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    a = jax.nn.silu(h) * g
+    return jnp.einsum("ecf,efd->ecd", a, wo)
+
+
+# --------------------------------------------------------- scatter reference
+def moe_block_scatter(
+    x: jax.Array,  # (B, S, D)
+    w_router: jax.Array,  # (D, E)
+    wi: jax.Array,  # (E, D, F)
+    wg: jax.Array,
+    wo: jax.Array,
+    topk: int,
+    capacity_factor: float = 1.25,
+):
+    """Capacity-buffer scatter/gather (single-device reference semantics)."""
+    b, s, d = x.shape
+    e = w_router.shape[-1]
+    n = b * s
+    xt = x.reshape(n, d)
+    gates, idx, aux = route(xt, w_router, topk)
+    cap = moe_capacity(n, e, topk, capacity_factor)
+    slot, keep = _bucket_positions(idx.reshape(-1), e, cap)
+    slot, keep = slot.reshape(n, topk), keep.reshape(n, topk)
+
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    contrib = jnp.where(keep[..., None], 1.0, 0.0).astype(x.dtype)
+    for j in range(topk):  # topk is tiny (2 or 8); unrolled adds stay fusable
+        buf = buf.at[slot[:, j]].add(xt * contrib[:, j])
+    y_buf = expert_ffn(buf.reshape(e, cap, d), wi, wg, wo).reshape(e * cap, d)
+    y = jnp.zeros_like(xt)
+    for j in range(topk):
+        y = y + y_buf[slot[:, j]] * (gates[:, j] * keep[:, j])[:, None]
+    return y.reshape(b, s, d), aux
+
+
+# ----------------------------------------------------- a2a production path
+def moe_block_a2a(
+    x: jax.Array,  # (B, S, D) sharded P(data, None, None)
+    w_router: jax.Array,
+    wi: jax.Array,  # (E, D, F) sharded P(model/EP, None, None)
+    wg: jax.Array,
+    wo: jax.Array,
+    topk: int,
+    mesh: Mesh,
+    ep_axis: str = "model",
+    capacity_factor: float = 1.25,
+):
+    """Token dispatch by explicit all_to_all over the EP axis (shard_map).
+
+    Per device: bucket local tokens by destination rank (cumsum, capacity
+    C_pair per (src,dst) pair), all_to_all the (M, C_pair, D) buckets,
+    run the E_loc local experts gate-masked over the received tokens,
+    all_to_all back, combine at the source slots.
+    """
+    b, s, d = x.shape
+    e = w_router.shape[-1]
+    m = mesh.shape[ep_axis]
+    assert e % m == 0, (e, m)
+    e_loc = e // m
+    from repro.sharding.partition import data_axes
+
+    d_axes = data_axes(mesh)
+    d_spec = (d_axes if len(d_axes) > 1 else d_axes[0]) if d_axes else None
+    b_div = d_axes and b % _axes_size(mesh, d_axes) == 0
+    b_spec = d_spec if b_div else None
+    s_div = s % m == 0 and s >= m
+    if not s_div:
+        # tokens cannot shard over the EP axis (decode S=1): eplocal mode
+        return _moe_eplocal(
+            x, w_router, wi, wg, wo, topk, mesh, ep_axis, b_spec
+        )
+
+    n_loc = (b // _axes_size(mesh, d_axes) if b_div else b) * (s // m)
+    c_pair = max(8, -(-int(n_loc * topk * capacity_factor / m) // 8) * 8)
+
+    def body(x_l, wr, wi_l, wg_l, wo_l):
+        bl, sl, _ = x_l.shape
+        n = bl * sl
+        xt = x_l.reshape(n, d)
+        gates, idx, aux = route(xt, wr, topk)
+        dst = (idx // e_loc).reshape(-1)  # destination EP rank per choice
+        e_local_id = (idx % e_loc).reshape(-1)
+        slot, keep = _bucket_positions(dst, m, c_pair)
+        contrib = jnp.where(keep[:, None], 1.0, 0.0).astype(x_l.dtype)
+        xk = jnp.repeat(xt, topk, axis=0)  # (n*k, D) choice-major payloads
+        send = jnp.zeros((m * c_pair, d), x_l.dtype).at[slot].add(xk * contrib)
+        meta = jnp.full((m * c_pair,), e_loc, jnp.int32)  # e_loc = invalid
+        meta = meta.at[slot].set(jnp.where(keep, e_local_id, e_loc))
+
+        recv = jax.lax.all_to_all(
+            send.reshape(m, c_pair, d), ep_axis, split_axis=0, concat_axis=0,
+            tiled=False,
+        ).reshape(m * c_pair, d)
+        meta_r = jax.lax.all_to_all(
+            meta.reshape(m, c_pair), ep_axis, split_axis=0, concat_axis=0,
+            tiled=False,
+        ).reshape(m * c_pair)
+
+        # local experts, gate-masked over received tokens (E_loc is 1-2)
+        y_r = jnp.zeros_like(recv)
+        for el in range(e_loc):
+            mask = (meta_r == el)[:, None].astype(recv.dtype)
+            h = (recv * mask) @ wi_l[el]
+            g = (recv * mask) @ wg_l[el]
+            y_r = y_r + (jax.nn.silu(h) * g) @ wo_l[el] * mask
+
+        back = jax.lax.all_to_all(
+            y_r.reshape(m, c_pair, d), ep_axis, split_axis=0, concat_axis=0,
+            tiled=False,
+        ).reshape(m * c_pair, d)
+        y_fl = back[slot] * (gates.reshape(-1) * keep).astype(x_l.dtype)[:, None]
+        y = jnp.sum(y_fl.reshape(n, topk, d), axis=1)
+        aux = jax.lax.pmean(aux, ep_axis)
+        for ax in d_axes:
+            aux = jax.lax.pmean(aux, ax)
+        return y.reshape(bl, sl, d), aux
+
+    y, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(b_spec, ep_axis, None),
+            P(None, None),
+            P(ep_axis, None, None),
+            P(ep_axis, None, None),
+            P(ep_axis, None, None),
+        ),
+        out_specs=(P(b_spec, ep_axis, None), P()),
+        check_vma=False,
+    )(x, w_router, wi, wg, wo)
+    return y, aux
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _moe_eplocal(x, w_router, wi, wg, wo, topk, mesh, ep_axis, b_spec):
+    """Each rank: its E_loc experts over ALL tokens, gate-masked, one psum.
+
+    Right for S=1 decode (tokens can't shard over EP; compute is tiny)."""
+    b, s, d = x.shape
+    e = w_router.shape[-1]
+    m = mesh.shape[ep_axis]
+    e_loc = e // m
+
+    def body(x_l, wr, wi_l, wg_l, wo_l):
+        bl, sl, _ = x_l.shape
+        n = bl * sl
+        xt = x_l.reshape(n, d)
+        gates, idx, aux = route(xt, wr, topk)
+        me = jax.lax.axis_index(ep_axis)
+        y = jnp.zeros_like(xt)
+        for el in range(e_loc):
+            ge = me * e_loc + el  # global expert id owned by this rank
+            gate_e = jnp.sum(
+                jnp.where(idx == ge, gates, jnp.zeros((), gates.dtype)), axis=-1
+            )  # (n,)
+            h = xt @ wi_l[el]
+            g = xt @ wg_l[el]
+            y = y + (jax.nn.silu(h) * g) @ wo_l[el] * gate_e[:, None]
+        y = jax.lax.psum(y, ep_axis)
+        aux = jax.lax.pmean(aux, ep_axis)
+        return y.reshape(bl, sl, d), aux
+
+    y, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(b_spec, None, None),
+            P(None, None),
+            P(ep_axis, None, None),
+            P(ep_axis, None, None),
+            P(ep_axis, None, None),
+        ),
+        out_specs=(P(b_spec, None, None), P()),
+        check_vma=False,
+    )(x, w_router, wi, wg, wo)
+    return y, aux
+
+
+# ------------------------------------------------------ replicated baseline
+def moe_block_replicated(
+    x: jax.Array,
+    w_router: jax.Array,
+    wi: jax.Array,
+    wg: jax.Array,
+    wo: jax.Array,
+    topk: int,
+):
+    """GET-style baseline: all experts run over all tokens, gate-masked.
+
+    Compute cost E/topk x the dispatch path; expert weights replicated
+    (all-gathered under GSPMD) — the paper's GBPC analogue."""
+    b, s, d = x.shape
+    n = b * s
+    xt = x.reshape(n, d)
+    gates, idx, aux = route(xt, w_router, topk)
+    e = w_router.shape[-1]
+    dense_gates = jnp.zeros((n, e), x.dtype)
+    for j in range(topk):
+        dense_gates = dense_gates.at[jnp.arange(n), idx[:, j]].add(gates[:, j])
+    h = jnp.einsum("nd,edf->enf", xt, wi)
+    g = jnp.einsum("nd,edf->enf", xt, wg)
+    y_all = jnp.einsum("enf,efd->end", jax.nn.silu(h) * g, wo)
+    y = jnp.einsum("end,ne->nd", y_all, dense_gates)
+    return y.reshape(b, s, d), aux
+
+
+def moe_block(x, w_router, wi, wg, wo, topk, mode: str = "c2d", mesh=None):
+    e = w_router.shape[-1]
+    if mode == "replicated":
+        return moe_block_replicated(x, w_router, wi, wg, wo, topk)
+    if (
+        mode == "c2d"
+        and mesh is not None
+        and "model" in mesh.axis_names
+        and e % mesh.shape["model"] == 0
+    ):
+        return moe_block_a2a(x, w_router, wi, wg, wo, topk, mesh)
+    return moe_block_scatter(x, w_router, wi, wg, wo, topk)

@@ -1,0 +1,227 @@
+"""RWKV6 "Finch": attention-free time mixing with data-dependent decay.
+
+The defining Finch feature — the per-channel, per-timestep decay
+``w_t = exp(-exp(w0 + tanh(x_w A) B))`` (a low-rank data-dependent function
+of the shifted input) — is implemented exactly.  The static token-shift
+interpolations use plain learned ``mu`` vectors (the paper's second-order
+ddlerp LoRA on r/k/v/g is an accuracy refinement orthogonal to the systems
+behaviour; noted in DESIGN.md).
+
+The recurrence per head (head_dim M, state S in R^{MxM}) is::
+
+    out_t = r_t^T (S_t + diag(u) k_t v_t^T)
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T
+
+Train path: ``lax.scan`` over time, vectorized over (batch, heads) — an XLA
+while loop (serial in T, parallel everywhere else).  The Pallas WKV6 kernel
+(repro.kernels.wkv6) implements the same recurrence blocked in VMEM for the
+TPU target and is validated against :func:`wkv6_scan`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ModelConfig, ParamFactory, rms_norm, scan_chunked_remat
+
+LORA_DIM = 64  # decay LoRA bottleneck
+WKV_CHUNK = 64  # sqrt-T remat chunking for the train-time recurrence
+
+
+def wkv6_scan(
+    r: jax.Array,  # (B, T, H, M)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # (B, T, H, M) decay factors in (0, 1)
+    u: jax.Array,  # (H, M) current-token bonus
+    state: jax.Array | None = None,  # (B, H, M, M)
+) -> tuple[jax.Array, jax.Array]:
+    b, t, h, m = r.shape
+    f32 = jnp.float32
+    if state is None:
+        state = jnp.zeros((b, h, m, m), f32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, M) each
+        bonus = jnp.sum(r_t * u[None] * k_t, axis=-1, keepdims=True) * v_t
+        out = jnp.einsum("bhm,bhmn->bhn", r_t, S) + bonus
+        S = w_t[..., :, None] * S + k_t[..., :, None] * v_t[..., None, :]
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a.astype(f32), 1, 0) for a in (r, k, v, w))
+    state, outs = scan_chunked_remat(step, state, xs, WKV_CHUNK)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), state
+
+
+def wkv6_chunked(
+    r: jax.Array,  # (B, T, H, M)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,  # (H, M)
+    state: jax.Array | None = None,  # (B, H, M, M)
+    chunk: int = 32,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked matmul formulation of the WKV6 recurrence — the same math
+    as kernels/wkv6 (see that module for the derivation), expressed in
+    batched jnp so the dry-run/CPU path gets the MXU-friendly program
+    shape: T/C chunk steps of 4 matmuls instead of T scalar-ish steps.
+    Validated against :func:`wkv6_scan` in tests."""
+    b, t, h, m = r.shape
+    f32 = jnp.float32
+    chunk = min(chunk, t)
+    if t % chunk:
+        return wkv6_scan(r, k, v, w, u, state)
+    nc = t // chunk
+    if state is None:
+        state = jnp.zeros((b, h, m, m), f32)
+
+    def split(a):  # (B, T, H, M) -> (nc, B, H, C, M)
+        return jnp.moveaxis(
+            a.astype(f32).reshape(b, nc, chunk, h, m), (1, 3), (0, 2)
+        )
+
+    rs, ks, vs, ws = split(r), split(k), split(v), split(w)
+    rows = jnp.arange(chunk)[:, None]
+    cols = jnp.arange(chunk)[None, :]
+    strict = (cols < rows).astype(f32)
+
+    @jax.checkpoint
+    def body(S, xs):
+        r_c, k_c, v_c, w_c = xs  # (B, H, C, M)
+        logw = jnp.log(jnp.maximum(w_c, 1e-38))
+        cum = jnp.cumsum(logw, axis=2)
+        log_p = jnp.maximum(cum - logw, -60.0)  # log prod_{s<t}
+        log_pc = jnp.maximum(cum[:, :, -1:, :], -60.0)
+        r_dec = r_c * jnp.exp(log_p)
+        k_inv = k_c * jnp.exp(-jnp.maximum(cum, -60.0))
+        k_rem = k_c * jnp.exp(log_pc - jnp.maximum(cum, -60.0))
+        inter = jnp.einsum("bhcm,bhmn->bhcn", r_dec, S)
+        a = jnp.einsum("bhcm,bhdm->bhcd", r_dec, k_inv) * strict
+        intra = jnp.einsum("bhcd,bhdn->bhcn", a, v_c)
+        bonus = jnp.sum(r_c * u[None, :, None, :] * k_c, -1, keepdims=True) * v_c
+        S = jnp.exp(log_pc).swapaxes(-1, -2) * S + jnp.einsum(
+            "bhcm,bhcn->bhmn", k_rem, v_c
+        )
+        return S, inter + intra + bonus
+
+    state, outs = lax.scan(body, state, (rs, ks, vs, ws))
+    # (nc, B, H, C, M) -> (B, T, H, M)
+    outs = jnp.moveaxis(outs, (0, 3), (1, 2)).reshape(b, t, h, m)
+    return outs.astype(r.dtype), state
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x[:, t-1] with x[:, -1]'s predecessor carried across calls (decode)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def add_rwkv_block_params(f: ParamFactory, cfg: ModelConfig, prefix: str = "blocks") -> None:
+    L, D, F = cfg.n_layers, cfg.d_model, cfg.d_ff
+    m = cfg.rwkv_head_dim
+    h = D // m
+    lay = lambda *s: (L, *s)
+    f.add(f"{prefix}.ln1", lay(D), ("layers", "embed"), init="zeros")
+    f.add(f"{prefix}.ln2", lay(D), ("layers", "embed"), init="zeros")
+    for mu in ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g"):
+        f.add(f"{prefix}.tm.{mu}", lay(D), ("layers", "embed"), init="zeros")
+    f.add(f"{prefix}.tm.w0", lay(D), ("layers", "embed"), init="zeros")
+    f.add(f"{prefix}.tm.wA", lay(D, LORA_DIM), ("layers", "embed", None))
+    f.add(f"{prefix}.tm.wB", lay(LORA_DIM, D), ("layers", None, "embed"))
+    f.add(f"{prefix}.tm.u", lay(h, m), ("layers", "heads", None), init="zeros")
+    for w in ("wr", "wk", "wv", "wg"):
+        f.add(f"{prefix}.tm.{w}", lay(D, D), ("layers", "embed", "q_dim"))
+    f.add(f"{prefix}.tm.wo", lay(D, D), ("layers", "q_dim", "embed"))
+    f.add(f"{prefix}.tm.ln_x", lay(D), ("layers", "q_dim"), init="zeros")
+    f.add(f"{prefix}.cm.mu_k", lay(D), ("layers", "embed"), init="zeros")
+    f.add(f"{prefix}.cm.mu_r", lay(D), ("layers", "embed"), init="zeros")
+    f.add(f"{prefix}.cm.wk", lay(D, F), ("layers", "embed", "ffn"))
+    f.add(f"{prefix}.cm.wv", lay(F, D), ("layers", "ffn", "embed"))
+    f.add(f"{prefix}.cm.wr", lay(D, D), ("layers", "embed", "q_dim"))
+
+
+def time_mix(
+    x: jax.Array,  # (B, T, D)
+    p: dict,  # per-layer param slices, keys tm.*
+    cfg: ModelConfig,
+    shift_prev: jax.Array | None = None,
+    wkv_state: jax.Array | None = None,
+    mesh=None,
+):
+    b, t, d = x.shape
+    m = cfg.rwkv_head_dim
+    h = d // m
+    xp = _token_shift(x, shift_prev)
+    xx = xp - x
+    xr = x + xx * p["tm.mu_r"]
+    xk = x + xx * p["tm.mu_k"]
+    xv = x + xx * p["tm.mu_v"]
+    xw = x + xx * p["tm.mu_w"]
+    xg = x + xx * p["tm.mu_g"]
+    # data-dependent decay (the Finch contribution)
+    dd = jnp.tanh(xw @ p["tm.wA"]) @ p["tm.wB"]
+    w = jnp.exp(-jnp.exp((p["tm.w0"] + dd).astype(jnp.float32)))  # (B,T,D)
+    r = (xr @ p["tm.wr"]).reshape(b, t, h, m)
+    k = (xk @ p["tm.wk"]).reshape(b, t, h, m)
+    v = (xv @ p["tm.wv"]).reshape(b, t, h, m)
+    g = jax.nn.silu(xg @ p["tm.wg"])
+    w = w.reshape(b, t, h, m)
+    # head parallelism for the WKV recurrence: heads are independent, so
+    # shard H over `model` and keep T whole per rank (see ssm.py note)
+    if mesh is not None and t > 1:
+        from repro.sharding.partition import channel_constrain
+
+        r, k, v, w = (channel_constrain(a, mesh, c_axis=2) for a in (r, k, v, w))
+    if cfg.rwkv_chunk and t > 1:
+        out, wkv_state = wkv6_chunked(
+            r, k, v, w, p["tm.u"], wkv_state, chunk=cfg.rwkv_chunk
+        )
+    else:
+        out, wkv_state = wkv6_scan(r, k, v, w, p["tm.u"], wkv_state)
+    # per-head groupnorm
+    out = out.reshape(b, t, h, m)
+    mean = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = ((out - mean) * lax.rsqrt(var + 64e-5)).reshape(b, t, d)
+    out = out * (1.0 + p["tm.ln_x"])
+    y = (out.astype(x.dtype) * g) @ p["tm.wo"]
+    return y, x[:, -1:, :], wkv_state
+
+
+def channel_mix(
+    x: jax.Array,
+    p: dict,
+    shift_prev: jax.Array | None = None,
+):
+    xp = _token_shift(x, shift_prev)
+    xx = xp - x
+    xk = x + xx * p["cm.mu_k"]
+    xr = x + xx * p["cm.mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm.wk"]))
+    y = jax.nn.sigmoid(xr @ p["cm.wr"]) * (kk @ p["cm.wv"])
+    return y, x[:, -1:, :]
+
+
+def rwkv_block(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    state: dict | None = None,
+    mesh=None,
+):
+    """One RWKV6 block. ``state`` (decode): {"tm_shift","cm_shift","wkv"}."""
+    st = state or {}
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    att, tm_shift, wkv = time_mix(
+        h, p, cfg, st.get("tm_shift"), st.get("wkv"), mesh=mesh
+    )
+    x = x + att
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    ffn, cm_shift = channel_mix(h, p, st.get("cm_shift"))
+    x = x + ffn
+    new_state = {"tm_shift": tm_shift, "cm_shift": cm_shift, "wkv": wkv}
+    return x, new_state

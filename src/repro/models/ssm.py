@@ -1,0 +1,176 @@
+"""Selective SSM (Mamba-style) head for the Hymba hybrid blocks.
+
+Hymba runs attention heads and SSM heads *in parallel* inside each block and
+mean-combines their (normalized) outputs.  The SSM here is a standard
+selective scan: input-dependent (dt, B, C), diagonal A, short causal conv.
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t      (per channel, N states)
+    y_t = C_t . h_t + D * x_t
+
+Train path is a ``lax.scan`` over time (parallel over batch/channels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ModelConfig, ParamFactory, scan_chunked_remat
+
+CONV_K = 4  # short causal conv width
+SSM_CHUNK = 64  # sqrt-T remat chunking for the train-time recurrence
+
+
+def add_ssm_params(f: ParamFactory, cfg: ModelConfig, prefix: str) -> None:
+    L, D, N = cfg.n_layers, cfg.d_model, cfg.ssm_state
+    lay = lambda *s: (L, *s)
+    f.add(f"{prefix}.w_in", lay(D, 2 * D), ("layers", "embed", "q_dim"))
+    f.add(f"{prefix}.conv", lay(CONV_K, D), ("layers", None, "q_dim"), scale=0.5)
+    f.add(f"{prefix}.w_bcdt", lay(D, 2 * N + 1), ("layers", "q_dim", None))
+    # Mamba dt init: softplus(raw + bias) lands in [1e-3, 1e-1]; this is
+    # both the published init AND what keeps per-chunk cumulative decays
+    # inside f32 range for the chunked formulation
+    f.add(f"{prefix}.dt_bias", lay(D), ("layers", "q_dim"), init="const", scale=-4.6)
+    f.add(f"{prefix}.a_log", lay(D, N), ("layers", "q_dim", None), init="zeros")
+    f.add(f"{prefix}.d_skip", lay(D), ("layers", "q_dim"), init="ones")
+    f.add(f"{prefix}.w_out", lay(D, D), ("layers", "q_dim", "embed"))
+
+
+def causal_conv(x: jax.Array, kernel: jax.Array, prev: jax.Array | None):
+    """Depthwise causal conv. x: (B,T,D), kernel: (K,D), prev: (B,K-1,D)."""
+    k = kernel.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)  # (B, T+K-1, D)
+    out = sum(xp[:, i : i + x.shape[1], :] * kernel[i] for i in range(k))
+    return out, xp[:, -(k - 1) :, :]
+
+
+def selective_scan(
+    x: jax.Array,  # (B, T, D) post-conv activations
+    dt: jax.Array,  # (B, T, D) positive step sizes
+    a: jax.Array,  # (D, N) negative continuous-time decay
+    b: jax.Array,  # (B, T, N)
+    c: jax.Array,  # (B, T, N)
+    h0: jax.Array | None = None,  # (B, D, N)
+):
+    bsz, t, d = x.shape
+    n = a.shape[-1]
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d, n), f32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,D), (B,D), (B,N), (B,N)
+        decay = jnp.exp(dt_t[..., None] * a[None])  # (B, D, N)
+        drive = (dt_t * x_t)[..., None] * b_t[:, None, :]  # (B, D, N)
+        h = decay * h + drive
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = tuple(
+        jnp.moveaxis(v.astype(f32), 1, 0) for v in (x, dt, b, c)
+    )
+    h, ys = scan_chunked_remat(step, h0, xs, SSM_CHUNK)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def selective_scan_chunked(
+    x: jax.Array,  # (B, T, D) post-conv activations
+    dt: jax.Array,  # (B, T, D) positive step sizes
+    a: jax.Array,  # (D, N) negative continuous-time decay
+    b: jax.Array,  # (B, T, N)
+    c: jax.Array,  # (B, T, N)
+    h0: jax.Array | None = None,  # (B, D, N)
+    chunk: int = 32,
+):
+    """Chunked matmul formulation of the diagonal selective scan (the same
+    treatment kernels/wkv6 gives the RWKV recurrence — see EXPERIMENTS
+    §Perf #9/#13).  With P_t = prod_{s<=t} exp(dt_s A) inside a chunk:
+
+        y_t   = C_t . (P_t h_0)  +  sum_{s<=t} C_t . (P_t / P_s) b_s
+        h_out = exp(cum_C) (h_0 + sum_s b_s / P_s)
+
+    The pairwise term is one einsum over the state dim with a causal-
+    inclusive mask — T/C chunk steps of matmuls instead of T scalar steps,
+    saving only per-chunk carries for the backward pass.
+    """
+    bsz, t, d = x.shape
+    n = a.shape[-1]
+    f32 = jnp.float32
+    chunk = min(chunk, t)
+    if t % chunk:
+        return selective_scan(x, dt, a, b, c, h0)
+    nc = t // chunk
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d, n), f32)
+
+    def split(v, feat):  # (B, T, F) -> (nc, B, C, F)
+        return jnp.moveaxis(v.astype(f32).reshape(bsz, nc, chunk, feat), 1, 0)
+
+    xs = (split(x, d), split(dt, d), split(b, n), split(c, n))
+    mask = (jnp.arange(chunk)[None, :] <= jnp.arange(chunk)[:, None]).astype(f32)
+
+    @jax.checkpoint
+    def body(h, inp):
+        x_c, dt_c, b_c, c_c = inp  # (B, C, D|N)
+        log_a = dt_c[..., None] * a[None, None]  # (B, C, D, N), negative
+        cum = jnp.maximum(jnp.cumsum(log_a, axis=1), -60.0)  # inclusive
+        p = jnp.exp(cum)
+        drive = (dt_c * x_c)[..., None] * b_c[:, :, None, :]  # (B, C, D, N)
+        k = drive * jnp.exp(-cum)
+        q = c_c[:, :, None, :] * p  # (B, C, D, N)
+        # intra-chunk: scores over the state dim, causal-inclusive
+        s = jnp.einsum("btdn,bsdn->bdts", q, k)  # (B, D, C, C)
+        y_intra = jnp.einsum("bdts,ts->btd", s, mask)
+        y_inter = jnp.einsum("btdn,bdn->btd", q, h)
+        h = jnp.exp(cum[:, -1]) * (h + jnp.sum(k, axis=1))
+        return h, (y_inter + y_intra)
+
+    h, ys = lax.scan(body, h0.astype(f32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, t, d)
+    return y.astype(x.dtype), h
+
+
+def ssm_head(
+    x: jax.Array,  # (B, T, D) block input (already normed)
+    p: dict,  # per-layer slices under "ssm."
+    cfg: ModelConfig,
+    state: dict | None = None,
+    mesh=None,
+):
+    """Returns (y, new_state). state = {"conv": (B,K-1,D), "h": (B,D,N)}."""
+    st = state or {}
+    n = cfg.ssm_state
+    xz = x @ p["ssm.w_in"]  # (B,T,2D)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = causal_conv(xin, p["ssm.conv"], st.get("conv"))
+    xc = jax.nn.silu(xc)
+    bcdt = xc @ p["ssm.w_bcdt"]  # (B,T,2N+1)
+    b_in, c_in, dt_raw = bcdt[..., :n], bcdt[..., n : 2 * n], bcdt[..., -1:]
+    # scalar dt per token, per-channel learned bias -> (B, T, D) step sizes
+    dt = jax.nn.softplus(dt_raw + p["ssm.dt_bias"][None, None, :]) + 1e-4
+    a = -jnp.exp(p["ssm.a_log"].astype(jnp.float32))  # (D,N), negative
+    # Mamba TP: the diagonal recurrence is independent per channel, so the
+    # scan shards D over `model` and runs the full T on each rank's channel
+    # slice — T-sharded inputs would instead broadcast every remat chunk
+    # (measured 230 GB/step of permutes+gathers on hymba, EXPERIMENTS §Perf)
+    if mesh is not None and "model" in mesh.axis_names and x.shape[1] > 1:
+        from repro.sharding.partition import channel_constrain
+
+        xc = channel_constrain(xc, mesh)
+        dt = channel_constrain(dt, mesh)
+    # chunked matmul form for TRAINING (bwd-heavy; measured 2x on hymba);
+    # prefill keeps the scan — the C^2 constant loses at 32k in the XLA
+    # path (the Pallas ssm_scan kernel wins both on real TPU)
+    if cfg.ssm_chunk and x.shape[1] > 1 and state is None:
+        y, h = selective_scan_chunked(
+            xc, dt, a, b_in, c_in, None, chunk=cfg.ssm_chunk
+        )
+    else:
+        y, h = selective_scan(xc, dt, a, b_in, c_in, st.get("h"))
+    y = y + xc * p["ssm.d_skip"]
+    y = y * jax.nn.silu(z)
+    out = y @ p["ssm.w_out"]
+    return out, {"conv": conv_state, "h": h}

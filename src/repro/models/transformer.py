@@ -1,0 +1,296 @@
+"""Transformer stacks: dense / MoE / hybrid decoder-only + encoder-decoder.
+
+Layers are stacked on a leading ``layers`` axis and iterated with
+``lax.scan`` (small HLO: one block body regardless of depth — this is what
+keeps 512-device SPMD compiles tractable).  The same ``forward`` serves
+training (no cache), prefill (cache write from offset 0) and decode
+(cache write at offset t): caches are scan xs/ys.
+
+Block families:
+  dense   — GQA attention + SwiGLU MLP (starcoder2, qwen2.5, yi, gemma2,
+            internvl2 backbone)
+  moe     — GQA attention + top-k expert MLP (phi3.5-moe, granite-moe)
+  rwkv    — RWKV6 time-mix + channel-mix (attention-free)
+  hybrid  — parallel GQA + SSM heads, then SwiGLU MLP (hymba)
+  encdec  — bidirectional encoder + causal decoder with cross-attention
+            (seamless backbone)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .attention import attend, attend_chunked, attend_sp, qkv_proj, update_kv_cache
+from .common import ModelConfig, ParamFactory, mlp, rms_norm, softcap
+from .moe import moe_block
+from .rwkv import add_rwkv_block_params, rwkv_block
+from .ssm import CONV_K, add_ssm_params, ssm_head
+
+Params = dict[str, jax.Array]
+
+
+# ----------------------------------------------------------------- params
+def add_attn_params(
+    f: ParamFactory, cfg: ModelConfig, prefix: str, n_layers: int | None = None, tag: str = ""
+) -> None:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    D = cfg.d_model
+    lay = lambda *s: (L, *s)
+    f.add(f"{prefix}.wq{tag}", lay(D, cfg.qkv_dim), ("layers", "embed", "q_dim"))
+    f.add(f"{prefix}.wk{tag}", lay(D, cfg.kv_dim), ("layers", "embed", "kv_dim"))
+    f.add(f"{prefix}.wv{tag}", lay(D, cfg.kv_dim), ("layers", "embed", "kv_dim"))
+    f.add(f"{prefix}.wo{tag}", lay(cfg.qkv_dim, D), ("layers", "q_dim", "embed"))
+    if cfg.qkv_bias and not tag:
+        f.add(f"{prefix}.bq", lay(cfg.qkv_dim), ("layers", "q_dim"), init="zeros")
+        f.add(f"{prefix}.bk", lay(cfg.kv_dim), ("layers", "kv_dim"), init="zeros")
+        f.add(f"{prefix}.bv", lay(cfg.kv_dim), ("layers", "kv_dim"), init="zeros")
+
+
+def add_mlp_params(f: ParamFactory, cfg: ModelConfig, prefix: str, n_layers: int | None = None) -> None:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    D, F = cfg.d_model, cfg.d_ff
+    f.add(f"{prefix}.wi", (L, D, F), ("layers", "embed", "ffn"))
+    if cfg.mlp_gated:
+        f.add(f"{prefix}.wg", (L, D, F), ("layers", "embed", "ffn"))
+    f.add(f"{prefix}.wo2", (L, F, D), ("layers", "ffn", "embed"))
+
+
+def add_moe_params(f: ParamFactory, cfg: ModelConfig, prefix: str) -> None:
+    L, D, F, E = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.n_experts
+    f.add(f"{prefix}.router", (L, D, E), ("layers", "embed", None), scale=0.02)
+    f.add(f"{prefix}.we_i", (L, E, D, F), ("layers", "experts", "embed", "ffn"))
+    f.add(f"{prefix}.we_g", (L, E, D, F), ("layers", "experts", "embed", "ffn"))
+    f.add(f"{prefix}.we_o", (L, E, F, D), ("layers", "experts", "ffn", "embed"))
+
+
+def add_block_params(f: ParamFactory, cfg: ModelConfig, prefix: str = "blocks") -> None:
+    if cfg.family == "rwkv":
+        add_rwkv_block_params(f, cfg, prefix)
+        return
+    L = cfg.n_layers
+    f.add(f"{prefix}.ln1", (L, cfg.d_model), ("layers", "embed"), init="zeros")
+    f.add(f"{prefix}.ln2", (L, cfg.d_model), ("layers", "embed"), init="zeros")
+    add_attn_params(f, cfg, prefix)
+    if cfg.family == "moe":
+        add_moe_params(f, cfg, prefix)
+    else:
+        add_mlp_params(f, cfg, prefix)
+    if cfg.family == "hybrid":
+        add_ssm_params(f, cfg, prefix + ".ssm")
+        f.add(f"{prefix}.beta_attn", (L, cfg.d_model), ("layers", "embed"), init="ones")
+        f.add(f"{prefix}.beta_ssm", (L, cfg.d_model), ("layers", "embed"), init="ones")
+
+
+# ------------------------------------------------------------- sublayers
+def attn_sublayer(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    pos: jax.Array,  # (S,) absolute positions of x's tokens
+    window: jax.Array,  # scalar int32: 0 => global
+    cache: tuple[jax.Array, jax.Array] | None,
+    offset: jax.Array | None,
+    causal: bool = True,
+    mesh=None,
+):
+    from .common import rope as _rope
+
+    q, k, v = qkv_proj(
+        x,
+        p["wq"], p["wk"], p["wv"],
+        p.get("bq"), p.get("bk"), p.get("bv"),
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+    )
+    q = _rope(q, pos, cfg.rope_theta)
+    k = _rope(k, pos, cfg.rope_theta)
+    s = x.shape[1]
+    chunked = cfg.attn_chunk and s > cfg.attn_chunk and pos.ndim == 1
+
+    # sequence-parallel attention for head counts that do not divide the
+    # TP axis (qwen 40H, hymba 25H, gemma2 8H): explicit shard_map keeps
+    # queries S-sharded end to end — see attention.attend_sp
+    sp_attn = (
+        mesh is not None
+        and "model" in mesh.axis_names
+        and cfg.n_heads % mesh.shape["model"] != 0
+        and s % mesh.shape["model"] == 0
+        and s > 1
+        and pos.ndim == 1
+    )
+
+    def _attend(q, k, v, *, q_pos, k_pos, k_valid=None):
+        if sp_attn and k_valid is None and k.shape[1] == s:
+            from repro.sharding.partition import axis_size, data_axes
+
+            d = data_axes(mesh)
+            b_axes = d if (d and q.shape[0] % axis_size(mesh, d) == 0) else ()
+            return attend_sp(
+                q, k, v, q_pos=q_pos, k_pos=k_pos, mesh=mesh,
+                batch_axes=b_axes, chunk=cfg.attn_chunk, causal=causal,
+                window=window, cap=cfg.attn_softcap,
+            )
+        if chunked:
+            from .attention import auto_chunk
+
+            # per-device logits block: batch shards over data, heads over
+            # model (when divisible) — size the q-chunk for what remains
+            b_loc, h_loc = q.shape[0], q.shape[2]
+            if mesh is not None:
+                from repro.sharding.partition import axis_size, data_axes
+
+                d = data_axes(mesh)
+                if d and b_loc % axis_size(mesh, d) == 0:
+                    b_loc //= axis_size(mesh, d)
+                m = mesh.shape.get("model", 1)
+                if h_loc % m == 0:
+                    h_loc //= m
+            c = auto_chunk(b_loc, h_loc, s, k.shape[1], cap=cfg.attn_chunk)
+            return attend_chunked(
+                q, k, v, q_pos=q_pos, k_pos=k_pos, chunk=c,
+                causal=causal, window=window, cap=cfg.attn_softcap,
+                k_valid=k_valid,
+            )
+        return attend(
+            q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal, window=window,
+            cap=cfg.attn_softcap, k_valid=k_valid,
+        )
+
+    if cache is not None:
+        k_cache, v_cache = cache
+        k_cache, v_cache = update_kv_cache(k_cache, v_cache, k, v, offset)
+        t_max = k_cache.shape[1]
+        if s == t_max:
+            # prefill fills the whole cache from offset 0: attending over
+            # the fresh k/v is identical and skips the cache-layout round
+            # trip (also unlocks the SP path for odd-head archs)
+            out = _attend(q, k, v, q_pos=pos, k_pos=pos)
+        else:
+            k_pos = jnp.arange(t_max)
+            k_valid = (k_pos < offset + s)[None, :]
+            k_valid = jnp.broadcast_to(k_valid, (x.shape[0], t_max))
+            out = _attend(
+                q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+                q_pos=pos, k_pos=k_pos, k_valid=k_valid,
+            )
+        new_cache = (k_cache, v_cache)
+    else:
+        out = _attend(q, k, v, q_pos=pos, k_pos=pos)
+        new_cache = None
+    return out.reshape(*x.shape[:2], -1) @ p["wo"], new_cache
+
+
+def _strip(p: Params, prefix: str) -> dict:
+    pl = len(prefix) + 1
+    return {k[pl:]: v for k, v in p.items() if k.startswith(prefix + ".")}
+
+
+# ---------------------------------------------------------------- blocks
+def block_apply(
+    x: jax.Array,
+    p: dict,  # per-layer slices (keys without the "blocks." prefix)
+    cfg: ModelConfig,
+    *,
+    pos: jax.Array,
+    window: jax.Array,
+    cache: Any,
+    offset: jax.Array | None,
+    mesh=None,
+):
+    """One decoder block of any family. Returns (x, new_cache, aux_loss)."""
+    if cfg.family == "rwkv":
+        x, new_state = rwkv_block(x, p, cfg, cache, mesh=mesh)
+        return x, new_state, jnp.float32(0.0)
+
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    kv_cache = None if cache is None else (cache["k"], cache["v"])
+    att, new_kv = attn_sublayer(
+        h, p, cfg, pos=pos, window=window, cache=kv_cache, offset=offset,
+        mesh=mesh,
+    )
+    if cfg.family == "hybrid":
+        ssm_state = None if cache is None else {"conv": cache["conv"], "h": cache["h"]}
+        ssm_out, new_ssm = ssm_head(h, _strip_keep(p, "ssm"), cfg, ssm_state, mesh=mesh)
+        att = 0.5 * (att * p["beta_attn"] + ssm_out * p["beta_ssm"])
+    x = x + att
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if cfg.family == "moe":
+        y, aux = moe_block(
+            h, p["router"], p["we_i"], p["we_g"], p["we_o"], cfg.topk,
+            mode="c2d" if cfg.c2d_embedding else "replicated", mesh=mesh,
+        )
+    else:
+        y = mlp(h, p["wi"], p.get("wg"), p["wo2"], cfg.act)
+    x = x + y
+
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        if new_kv is not None:
+            new_cache["k"], new_cache["v"] = new_kv
+        if cfg.family == "hybrid":
+            new_cache["conv"], new_cache["h"] = new_ssm["conv"], new_ssm["h"]
+    return x, new_cache, aux
+
+
+def _strip_keep(p: dict, sub: str) -> dict:
+    """{'ssm.w_in': v} -> {'ssm.w_in': v} filtered (ssm_head expects 'ssm.' keys)."""
+    return {k: v for k, v in p.items() if k.startswith(sub + ".")}
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer window sizes: 0 = global attention."""
+    w = np.zeros(cfg.n_layers, np.int32)
+    if cfg.window and cfg.global_every > 0:
+        for i in range(cfg.n_layers):
+            if not cfg.layer_is_global(i):
+                w[i] = cfg.window
+    elif cfg.window:
+        w[:] = cfg.window
+    return w
+
+
+def run_blocks(
+    cfg: ModelConfig,
+    params: Params,
+    x: jax.Array,
+    *,
+    pos: jax.Array,
+    caches: Any = None,
+    offset: jax.Array | None = None,
+    prefix: str = "blocks",
+    mesh=None,
+):
+    """Scan the block stack. caches: pytree with leading layer axis or None."""
+    block_p = _strip(params, prefix)
+    windows = jnp.asarray(layer_windows(cfg))
+    # sequence-parallel residual stream (Megatron-SP): residuals (and so
+    # the remat stack) are stored S-sharded; blocks gather what they need.
+    # Recurrent families work too — their T-scans force a gather at the
+    # scan input, but the stored carry stays 1/|model|.
+    sp = mesh is not None
+
+    def body(carry, xs):
+        h, aux = carry
+        p_l, win_l, cache_l = xs
+        if sp:
+            from repro.sharding.partition import sp_constrain
+
+            h = sp_constrain(h, mesh)
+        h, new_cache, aux_l = block_apply(
+            h, p_l, cfg, pos=pos, window=win_l, cache=cache_l, offset=offset,
+            mesh=mesh,
+        )
+        return (h, aux + aux_l), new_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), new_caches = lax.scan(body, (x, jnp.float32(0.0)), (block_p, windows, caches))
+    return x, new_caches, aux / cfg.n_layers

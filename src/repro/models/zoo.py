@@ -1,0 +1,446 @@
+"""Model zoo: build params, forward, and the train/prefill/serve steps for
+every assigned architecture family through one API.
+
+Entry points (all pure; jit/pjit at the launch layer):
+
+* ``build_params(cfg, seed)``          -> (params, logical_axes)
+* ``input_specs(cfg, shape)``          -> {name: ShapeDtypeStruct}, the
+  dry-run stand-ins (weak-type-correct, no allocation)
+* ``make_batch(cfg, shape, seed)``     -> concrete random batch (smoke/train)
+* ``init_kv_cache(cfg, batch, t_max)`` -> leading-L cache pytree
+* ``make_train_step(cfg, opt)``        -> (state, batch) -> (state, metrics)
+* ``make_prefill_step(cfg)``           -> (params, batch) -> (logits, cache)
+* ``make_serve_step(cfg)``             -> (params, cache, tok, pos) -> (logits, cache)
+
+Shapes follow the assignment: ``train_*`` lowers train_step, ``prefill_*``
+lowers prefill_step, ``decode_*``/``long_*`` lower serve_step (one token
+against a seq_len-deep cache).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, ParamFactory, cross_entropy, rms_norm, softcap
+from .embedding import embed_tokens, lm_head
+from .encdec import add_encdec_params, encode, run_decoder
+from .rwkv import LORA_DIM
+from .ssm import CONV_K
+from .transformer import add_block_params, run_blocks
+
+Params = dict[str, jax.Array]
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ------------------------------------------------------------------- shapes
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def frontend_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Stub modality frontends: how many positions the frontend occupies."""
+    if cfg.frontend == "patch":  # ViT patch embeds (internvl2)
+        return min(256, seq_len // 4)
+    if cfg.frontend == "audio":  # downsampled audio frames (seamless)
+        return max(seq_len // 4, 16)
+    return 0
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Is this (arch x shape) cell runnable? (long_500k needs sub-quadratic.)"""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, (
+            f"{cfg.name}: pure full-attention arch — 500k-token decode would "
+            f"need a {shape.seq_len}-deep dense KV per layer; skipped per brief "
+            f"(DESIGN.md §Arch-applicability)"
+        )
+    return True, ""
+
+
+# ------------------------------------------------------------------- params
+def build_params(
+    cfg: ModelConfig, seed: int = 0, dtype=None, abstract: bool = False
+) -> tuple[Params, dict]:
+    f = ParamFactory(jax.random.PRNGKey(seed), dtype or cfg.dtype, abstract=abstract)
+    f.add("embed.tok", (cfg.vocab_padded, cfg.d_model), ("vocab", "embed"), scale=0.02)
+    if cfg.is_encdec:
+        add_encdec_params(f, cfg)
+    else:
+        add_block_params(f, cfg)
+    f.add("final_ln", (cfg.d_model,), ("embed",), init="zeros")
+    if not cfg.tie_embeddings:
+        f.add("head.w", (cfg.d_model, cfg.vocab_padded), ("embed", "vocab"))
+    return f.done()
+
+
+def param_count(params: Params) -> int:
+    return sum(int(np.prod(p.shape)) for p in params.values())
+
+
+# ------------------------------------------------------------------ forward
+def _head(cfg: ModelConfig, params: Params, h: jax.Array) -> jax.Array:
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    w = params["embed.tok"].T if cfg.tie_embeddings else params["head.w"]
+    return softcap(lm_head(h, w), cfg.final_softcap)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    batch: dict[str, jax.Array],
+    *,
+    caches: Any = None,
+    offset: jax.Array | None = None,
+    mesh=None,
+    embed_mode: str | None = None,
+    return_hidden: bool = False,
+):
+    """Returns (logits, new_caches, aux_loss). ``batch`` keys by family:
+    tokens (+labels/mask for train), patch_embeds (vlm), frames (audio)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    mode = embed_mode or ("c2d" if (cfg.c2d_embedding and mesh is not None) else "plain")
+    b_axes: tuple[str, ...] = ()
+    if mesh is not None:
+        from repro.sharding.partition import data_axes, axis_size
+
+        d = data_axes(mesh)
+        if d and b % axis_size(mesh, d) == 0:
+            b_axes = d
+        if "model" not in mesh.axis_names:
+            mode = "plain"
+    x = embed_tokens(
+        params["embed.tok"], tokens, mode=mode, mesh=mesh, batch_axes=b_axes
+    )
+    if cfg.embed_mult != 1.0:
+        x = (x.astype(jnp.float32) * cfg.embed_mult).astype(x.dtype)
+    if cfg.frontend == "patch" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0))
+
+    off = offset if offset is not None else jnp.int32(0)
+    pos = off + jnp.arange(s)
+
+    if cfg.is_encdec:
+        enc_out = None
+        if "frames" in batch:  # train / prefill: run the encoder
+            enc_out = encode(cfg, params, batch["frames"].astype(cfg.dtype), mesh=mesh)
+        h, new_caches = run_decoder(
+            cfg, params, x, enc_out=enc_out, pos=pos, caches=caches,
+            offset=offset, mesh=mesh,
+        )
+        aux = jnp.float32(0.0)
+    else:
+        h, new_caches, aux = run_blocks(
+            cfg, params, x, pos=pos, caches=caches, offset=offset, mesh=mesh
+        )
+    if return_hidden:
+        return h, new_caches, aux
+    return _head(cfg, params, h), new_caches, aux
+
+
+# ----------------------------------------------------------------- KV cache
+def init_kv_cache(
+    cfg: ModelConfig,
+    batch: int,
+    t_max: int,
+    enc_len: int = 0,
+    dtype=jnp.bfloat16,
+    as_specs: bool = False,
+) -> Any:
+    """Leading-L cache pytree (scan xs). ``as_specs`` returns
+    ShapeDtypeStructs instead of zeros (dry-run)."""
+    L, D = cfg.n_layers, cfg.d_model
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if as_specs else (
+        lambda s, dt: jnp.zeros(s, dt)
+    )
+    if cfg.family == "rwkv":
+        h = D // cfg.rwkv_head_dim
+        m = cfg.rwkv_head_dim
+        return {
+            "tm_shift": mk((L, batch, 1, D), dtype),
+            "cm_shift": mk((L, batch, 1, D), dtype),
+            "wkv": mk((L, batch, h, m, m), jnp.float32),
+        }
+    cache = {
+        "k": mk((L, batch, t_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": mk((L, batch, t_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+    if cfg.family == "hybrid":
+        cache["conv"] = mk((L, batch, CONV_K - 1, D), dtype)
+        cache["h"] = mk((L, batch, D, cfg.ssm_state), jnp.float32)
+    if cfg.is_encdec:
+        cache["xk"] = mk((L, batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        cache["xv"] = mk((L, batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+    return cache
+
+
+# -------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: ShapeSpec | str) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    fl = frontend_len(cfg, s)
+    if shape.kind == "train":
+        specs: dict[str, Any] = {
+            "tokens": sds((b, s), i32),
+            "labels": sds((b, s), i32),
+            "mask": sds((b, s), jnp.float32),
+        }
+        if cfg.frontend == "patch":
+            specs["patch_embeds"] = sds((b, fl, cfg.d_model), jnp.float32)
+        if cfg.frontend == "audio":
+            specs["frames"] = sds((b, fl, cfg.d_model), jnp.float32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((b, s), i32)}
+        if cfg.frontend == "patch":
+            specs["patch_embeds"] = sds((b, fl, cfg.d_model), jnp.float32)
+        if cfg.frontend == "audio":
+            specs["frames"] = sds((b, fl, cfg.d_model), jnp.float32)
+        return specs
+    # decode: one token against a seq_len-deep cache
+    cache = init_kv_cache(cfg, b, s, enc_len=fl, as_specs=True)
+    return {
+        "tokens": sds((b, 1), i32),
+        "pos": sds((), i32),
+        "cache": cache,
+    }
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec | str, seed: int = 0) -> dict:
+    """Concrete random batch matching input_specs (train/prefill kinds)."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    rng = np.random.default_rng(seed)
+    b, s = shape.global_batch, shape.seq_len
+    fl = frontend_len(cfg, s)
+    batch: dict[str, Any] = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    }
+    if shape.kind == "train":
+        batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+        mask = np.ones((b, s), np.float32)
+        mask[:, :fl] = 0.0  # frontend positions carry no LM loss
+        batch["mask"] = jnp.asarray(mask)
+    if cfg.frontend == "patch":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (b, fl, cfg.d_model)), jnp.float32
+        )
+    if cfg.frontend == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(0, 0.02, (b, fl, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+# -------------------------------------------------------------------- steps
+LOSS_CHUNK = 512  # S-chunked softmax-xent: the (B,S,V) f32 logits never exist
+
+
+def _chunked_xent(
+    cfg: ModelConfig, params: Params, h: jax.Array, labels, mask
+) -> jax.Array:
+    """Head matmul + cross-entropy over S chunks of the final hidden state.
+
+    The full (B, S, Vp) f32 logits tensor (1.5-2.5 GB/device for the
+    152k/256k-vocab archs) never materializes: each chunk's logits live
+    only inside a remat'd scan body.  This is the standard chunked-softmax
+    loss (MaxText-style)."""
+    b, s, _ = h.shape
+    c = LOSS_CHUNK
+    if s % c or s <= c:
+        logits = _head(cfg, params, h)
+        return cross_entropy(logits, labels, cfg.vocab, mask)
+    n = s // c
+    hs = jnp.moveaxis(h.reshape(b, n, c, -1), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, n, c), 1, 0)
+    ms = (
+        jnp.moveaxis(mask.reshape(b, n, c), 1, 0)
+        if mask is not None
+        else jnp.ones((n, b, c), jnp.float32)
+    )
+
+    @jax.checkpoint
+    def body(acc, xs):
+        h_i, l_i, m_i = xs
+        logits = _head(cfg, params, h_i)
+        v = logits.shape[-1]
+        if v > cfg.vocab:
+            neg = jnp.asarray(-1e9, logits.dtype)
+            logits = jnp.where(jnp.arange(v) < cfg.vocab, logits, neg)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_i[..., None], axis=-1)[..., 0]
+        nll, cnt = acc
+        return (nll + jnp.sum((lse - gold) * m_i), cnt + jnp.sum(m_i)), None
+
+    (nll, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), (hs, ls, ms))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(
+    cfg: ModelConfig, params: Params, batch: dict, mesh=None
+) -> tuple[jax.Array, dict]:
+    h, _, aux = forward(cfg, params, batch, mesh=mesh, return_hidden=True)
+    nll = _chunked_xent(cfg, params, h, batch["labels"], batch.get("mask"))
+    loss = nll + AUX_LOSS_WEIGHT * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+def make_train_step(
+    cfg: ModelConfig, opt, mesh=None, zero1: bool = True, fsdp: bool = False
+) -> Callable:
+    """(state, batch) -> (state, metrics); state = {params, opt, step}.
+
+    ``cfg.microbatch > 1`` splits the batch and accumulates gradients over
+    a remat'd scan: peak activation memory divides by the microbatch count
+    while the f32 accumulator lives at the ZeRO/FSDP sharding (tiny).  The
+    per-device batch is fixed by the assignment's global_batch, so this is
+    THE memory lever for the 15-42B train cells.
+    """
+    constrain = None
+    if mesh is not None and zero1:
+        from repro.sharding.partition import (
+            fsdp_shardings,
+            rules_for_train,
+            zero1_shardings,
+        )
+
+        p_sds, axes = build_params(cfg, abstract=True)
+        rules = rules_for_train(cfg, mesh)
+        constrain = (
+            fsdp_shardings(p_sds, axes, mesh, rules=rules)
+            if fsdp
+            else zero1_shardings(p_sds, axes, mesh, rules=rules)
+        )
+
+    def wsc_tree(grads):
+        if constrain is None:
+            return grads
+        return {
+            k: jax.lax.with_sharding_constraint(g, constrain[k])
+            for k, g in grads.items()
+        }
+
+    def grad_once(params, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, mesh=mesh), has_aux=True
+        )(params)
+        return loss, parts, grads
+
+    def train_step(state: dict, batch: dict):
+        mb = max(int(cfg.microbatch), 1)
+        b = batch["tokens"].shape[0]
+        if mb > 1 and b % mb == 0:
+            split = lambda x: jnp.moveaxis(
+                x.reshape(mb, b // mb, *x.shape[1:]), 0, 0
+            )
+            mbatches = {k: split(v) for k, v in batch.items()}
+
+            def body(acc, mbatch):
+                loss, parts, grads = grad_once(state["params"], mbatch)
+                grads = wsc_tree(grads)
+                acc = {
+                    k: a + grads[k].astype(jnp.float32) for k, a in acc.items()
+                }
+                return acc, (loss, parts)
+
+            acc0 = {
+                k: jnp.zeros(p.shape, jnp.float32)
+                for k, p in state["params"].items()
+            }
+            acc0 = wsc_tree(acc0)
+            acc, (losses, parts) = jax.lax.scan(body, acc0, mbatches)
+            grads = {k: a / mb for k, a in acc.items()}
+            loss = jnp.mean(losses)
+            parts = {k: jnp.mean(v) for k, v in parts.items()}
+        else:
+            loss, parts, grads = grad_once(state["params"], batch)
+        new_params, new_opt, om = opt.update(
+            grads, state["opt"], state["params"], constrain=constrain
+        )
+        metrics = {"loss": loss, **parts, **om, "step": state["step"] + 1}
+        return (
+            {"params": new_params, "opt": new_opt, "step": state["step"] + 1},
+            metrics,
+        )
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, mesh=None) -> Callable:
+    def eval_step(params: Params, batch: dict):
+        loss, parts = loss_fn(cfg, params, batch, mesh=mesh)
+        return {"loss": loss, **parts}
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None) -> Callable:
+    """Populate a seq_len cache from the prompt; logits for the last token."""
+
+    def prefill_step(params: Params, batch: dict):
+        b, s = batch["tokens"].shape
+        fl = frontend_len(cfg, s)
+        cache = init_kv_cache(cfg, b, s, enc_len=fl, dtype=cfg.dtype)
+        if cfg.is_encdec and "frames" not in batch:
+            raise ValueError("enc-dec prefill needs frames")
+        h, cache, _ = forward(
+            cfg, params, batch, caches=cache, offset=jnp.int32(0), mesh=mesh,
+            return_hidden=True,
+        )
+        # head over the LAST position only: the (B, S, V) prompt logits
+        # are never needed for decoding and never materialize
+        logits = _head(cfg, params, h[:, -1:, :])
+        return logits[:, -1, :], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None) -> Callable:
+    """One decode step: next-token logits + updated cache."""
+
+    def serve_step(params: Params, cache: Any, tokens: jax.Array, pos: jax.Array):
+        logits, cache, _ = forward(
+            cfg, params, {"tokens": tokens}, caches=cache, offset=pos, mesh=mesh
+        )
+        return logits[:, -1, :], cache
+
+    return serve_step
+
+
+def make_steps(cfg: ModelConfig, opt=None, mesh=None) -> dict[str, Callable]:
+    from repro.optim import AdamW
+
+    opt = opt or AdamW()
+    return {
+        "train": make_train_step(cfg, opt, mesh=mesh),
+        "eval": make_eval_step(cfg, mesh=mesh),
+        "prefill": make_prefill_step(cfg, mesh=mesh),
+        "serve": make_serve_step(cfg, mesh=mesh),
+    }

@@ -1,0 +1,5 @@
+"""Sharded optimizers."""
+
+from .adamw import AdamW, OptState, cosine_schedule, global_norm
+
+__all__ = ["AdamW", "OptState", "cosine_schedule", "global_norm"]

@@ -1,0 +1,138 @@
+"""AdamW with global-norm clipping and schedules, as pure pytree ops.
+
+The optimizer state mirrors the parameter tree leaf-for-leaf ({m, v}), so
+the sharding layer can assign the *same* NamedSharding to a parameter and
+its moments (TP shards), or ZeRO-shard the moments along ``data``
+(``sharding.partition.zero_shard_axes``) — the update stays elementwise
+either way, which is what makes ZeRO-1 a pure re-sharding decision here.
+
+Moments are kept in f32 regardless of parameter dtype (bf16 training needs
+f32 second moments; this is the MaxText/Megatron default).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, jax.Array]
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def cosine_schedule(
+    peak_lr: float, warmup_steps: int = 100, total_steps: int = 10_000, floor: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def lr(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+@dataclass(frozen=True)
+class OptState:
+    """Leaf-parallel moments + scalar step count."""
+
+    m: Params
+    v: Params
+    count: jax.Array
+
+    def tree_flatten(self):  # pragma: no cover - registered below
+        return (self.m, self.v, self.count), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):  # pragma: no cover
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    OptState, OptState.tree_flatten, lambda aux, ch: OptState(*ch)
+)
+
+
+@dataclass(frozen=True)
+class AdamW:
+    """AdamW + decoupled weight decay + global-norm clip.
+
+    ``lr`` may be a float or a schedule ``step -> lr``.
+    ``wd_skip`` names substrings of parameter paths exempt from decay
+    (norm gains, biases — the usual exemptions).
+    """
+
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    wd_skip: tuple[str, ...] = ("ln", "bias", "norm", ".b")
+
+    def init(self, params: Params) -> OptState:
+        zeros = {k: jnp.zeros(p.shape, jnp.float32) for k, p in params.items()}
+        return OptState(
+            m=zeros,
+            v={k: jnp.zeros(p.shape, jnp.float32) for k, p in params.items()},
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def _decays(self, name: str) -> bool:
+        return not any(s in name for s in self.wd_skip)
+
+    def update(
+        self,
+        grads: Params,
+        state: OptState,
+        params: Params,
+        constrain: dict[str, Any] | None = None,
+    ) -> tuple[Params, OptState, dict[str, jax.Array]]:
+        """``constrain`` maps leaf name -> NamedSharding of the *moment*
+        (ZeRO) domain.  Pinning the f32 update arithmetic there makes GSPMD
+        emit the canonical ZeRO-1 schedule: gradients reduce-scatter onto
+        the moment shards (instead of all-reduce), the elementwise update
+        runs 1/|data|-sharded (f32 temporaries shrink |data|-fold), and
+        only the new bf16 params all-gather back to the TP layout.  Without
+        it GSPMD prefers the parameter layout and all-gathers the f32
+        moments every step (measured 4x the collective bytes)."""
+        count = state.count + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        else:
+            gnorm = global_norm(grads)
+            scale = jnp.float32(1.0)
+        lr = self.lr(count) if callable(self.lr) else jnp.float32(self.lr)
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - self.b1**c
+        bc2 = 1.0 - self.b2**c
+
+        def wsc(x, k):
+            if constrain is not None and k in constrain:
+                return jax.lax.with_sharding_constraint(x, constrain[k])
+            return x
+
+        new_p: Params = {}
+        new_m: Params = {}
+        new_v: Params = {}
+        for k, p in params.items():
+            g = wsc(grads[k].astype(jnp.float32), k) * scale
+            m = self.b1 * state.m[k] + (1 - self.b1) * g
+            v = self.b2 * state.v[k] + (1 - self.b2) * jnp.square(g)
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay and self._decays(k):
+                upd = upd + self.weight_decay * wsc(p.astype(jnp.float32), k)
+            new_p[k] = (wsc(p.astype(jnp.float32), k) - lr * upd).astype(p.dtype)
+            new_m[k] = m
+            new_v[k] = v
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_p, OptState(m=new_m, v=new_v, count=count), metrics

@@ -1,0 +1,13 @@
+"""Fault-tolerant distributed runtime: heartbeats, stragglers, elastic
+restart-from-checkpoint."""
+
+from .monitor import HeartbeatMonitor, StepTimer, StragglerPolicy
+from .driver import TrainDriver, TrainReport
+
+__all__ = [
+    "HeartbeatMonitor",
+    "StepTimer",
+    "StragglerPolicy",
+    "TrainDriver",
+    "TrainReport",
+]

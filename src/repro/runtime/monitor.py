@@ -1,0 +1,87 @@
+"""Health monitoring: heartbeats and straggler detection.
+
+On a real multi-pod deployment each host process runs a heartbeat thread
+against the coordinator (jax.distributed's liveness check plays this role
+natively); here the monitor is exercised in-process against the simulated
+fabric's PEs — the *code paths* (miss-count thresholds, dead-set
+propagation, elastic trigger) are the production ones, which is what the
+tests pin down.
+
+Straggler policy: per-step wall-time EWMA; a host whose step time exceeds
+``factor`` x the fleet median for ``patience`` consecutive steps is marked
+a persistent straggler, which triggers the same elastic path as a death
+(drop the host, restore, re-shard) — at 1000+ nodes a 1.7x straggler
+costs more than the restart it takes to shed it.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+
+class HeartbeatMonitor:
+    """Tracks last-seen times; a PE missing ``max_misses`` beats is dead."""
+
+    def __init__(self, interval_s: float = 1.0, max_misses: int = 3):
+        self.interval_s = interval_s
+        self.max_misses = max_misses
+        self.last_seen: dict[str, float] = {}
+        self.dead: set[str] = set()
+
+    def beat(self, name: str, now: float | None = None) -> None:
+        self.last_seen[name] = time.monotonic() if now is None else now
+        self.dead.discard(name)
+
+    def check(self, now: float | None = None) -> set[str]:
+        """Returns the set of PEs newly declared dead."""
+        now = time.monotonic() if now is None else now
+        newly = set()
+        for name, seen in self.last_seen.items():
+            if name in self.dead:
+                continue
+            if now - seen > self.interval_s * self.max_misses:
+                self.dead.add(name)
+                newly.add(name)
+        return newly
+
+
+@dataclass
+class StragglerPolicy:
+    factor: float = 1.7  # x median step time
+    patience: int = 5  # consecutive slow steps before acting
+    ewma: float = 0.5
+
+
+class StepTimer:
+    """Per-host step-time EWMA + straggler detection."""
+
+    def __init__(self, policy: StragglerPolicy | None = None):
+        self.policy = policy or StragglerPolicy()
+        self.t: dict[str, float] = {}
+        self.slow_streak: dict[str, int] = defaultdict(int)
+
+    def record(self, host: str, step_s: float) -> None:
+        a = self.policy.ewma
+        self.t[host] = step_s if host not in self.t else a * step_s + (1 - a) * self.t[host]
+
+    def median(self) -> float:
+        vals = sorted(self.t.values())
+        if not vals:
+            return 0.0
+        return vals[len(vals) // 2]
+
+    def stragglers(self) -> set[str]:
+        med = self.median()
+        if med <= 0:
+            return set()
+        out = set()
+        for host, t in self.t.items():
+            if t > self.policy.factor * med:
+                self.slow_streak[host] += 1
+                if self.slow_streak[host] >= self.policy.patience:
+                    out.add(host)
+            else:
+                self.slow_streak[host] = 0
+        return out

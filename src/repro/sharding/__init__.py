@@ -1,0 +1,26 @@
+"""Distribution layer: logical-axis partition rules, compute-to-data
+collective programs, and distributed-optimization collectives."""
+
+from .partition import (
+    DATA_AXES,
+    batch_shardings,
+    cache_shardings,
+    data_axes,
+    divisible,
+    param_shardings,
+    spec_for,
+    state_shardings,
+    zero1_shardings,
+)
+
+__all__ = [
+    "DATA_AXES",
+    "batch_shardings",
+    "cache_shardings",
+    "data_axes",
+    "divisible",
+    "param_shardings",
+    "spec_for",
+    "state_shardings",
+    "zero1_shardings",
+]

@@ -1,0 +1,108 @@
+"""The paper's X-RDMA pointer chase as a compiled SPMD tensor program.
+
+``core/pointer_chase.py`` realizes DAPC faithfully: code frames really
+travel between PEs, install, and recursively forward.  This module is the
+TPU-idiomatic rendering of the *steady state* of the same algorithm (all
+code cached everywhere — the regime the paper's own evaluation shows is
+what matters): the pointer table is sharded over a mesh axis, B chases
+advance as a lock-step frontier, and each round every shard resolves the
+frontier entries it owns and the ownership exchange is a psum of
+index-sized messages — the Chaser's FORWARD, as a collective.
+
+* :func:`dapc_shard_map` — compute-to-data: per round, each shard looks
+  up its owned subset locally (masked take) and the new frontier psums
+  back.  Wire bytes per chase-hop: one int32 (times the collective
+  factor) — independent of table size.
+
+* :func:`gbpc_reference`  — move-data-to-compute: the client gathers the
+  *table shard* entries it needs (all-gather in the worst case / one
+  GET per hop in the faithful core version).
+
+The per-shard local resolution loop is the Pallas ``chase`` kernel's job
+on TPU (kernels/chase); here the reference uses masked takes.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dapc_shard_map(
+    table: jax.Array,  # (N,) int32 successor table, sharded over ``axis``
+    starts: jax.Array,  # (B,) int32, replicated
+    depth: int,
+    mesh: Mesh,
+    axis: str = "model",
+) -> jax.Array:
+    """Lock-step frontier pointer chase, compute-to-data.
+
+    Each round: every shard resolves frontier entries that live in its
+    slice (masked local take), contributes zeros elsewhere, and the next
+    frontier is the psum.  ``depth`` rounds total.  One chase is still a
+    serial dependence chain (intrinsic to the workload); throughput comes
+    from B concurrent chases, exactly like the paper's message-rate
+    argument.
+    """
+    n = table.shape[0]
+    shards = mesh.shape[axis]
+    assert n % shards == 0
+    local_n = n // shards
+
+    def local(table_l: jax.Array, frontier: jax.Array) -> jax.Array:
+        me = jax.lax.axis_index(axis)
+        lo = me * local_n
+
+        def hop(f, _):
+            loc = f - lo
+            inside = (loc >= 0) & (loc < local_n)
+            nxt = jnp.take(table_l, jnp.clip(loc, 0, local_n - 1))
+            nxt = jnp.where(inside, nxt, 0)
+            # FORWARD: ship the index to whichever shard owns it next
+            return jax.lax.psum(nxt, axis), None
+
+        out, _ = jax.lax.scan(hop, frontier, None, length=depth)
+        return out
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_vma=False,
+    )(table, starts)
+
+
+def gbpc_reference(
+    table: jax.Array,
+    starts: jax.Array,
+    depth: int,
+    mesh: Mesh | None = None,
+) -> jax.Array:
+    """GET-style baseline: chase against the (logically) gathered table.
+
+    Under GSPMD with a sharded table this forces the all-gather — the
+    tensor-scale equivalent of the client pulling entries to itself.
+    """
+    if mesh is not None:
+        table = jax.lax.with_sharding_constraint(table, NamedSharding(mesh, P()))
+
+    def hop(f, _):
+        return jnp.take(table, f), None
+
+    out, _ = jax.lax.scan(hop, starts, None, length=depth)
+    return out
+
+
+def chase_oracle(table, starts, depth):
+    """Pure numpy oracle."""
+    import numpy as np
+
+    f = np.asarray(starts).copy()
+    t = np.asarray(table)
+    for _ in range(depth):
+        f = t[f]
+    return f

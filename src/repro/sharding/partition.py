@@ -1,0 +1,282 @@
+"""Logical-axis -> mesh partition rules.
+
+Every parameter leaf carries a tuple of *logical* axis names from the
+ParamFactory (("layers", "embed", "ffn") etc.).  This module maps logical
+axes onto mesh axes with divisibility checking: a rule only applies if the
+dim is divisible by the mesh-axis extent, otherwise the dim is left
+unsharded (GSPMD would pad; we refuse instead — padding silently inflates
+the roofline).
+
+Default rules (Megatron-style TP over ``model``):
+
+    vocab   -> model    (c2d embedding + vocab-parallel LM head)
+    ffn     -> model    (MLP column/row parallel, one psum per block)
+    q_dim   -> model    (attention column parallel on the flat head dim)
+    kv_dim  -> model    (GQA K/V projections where kv_dim divides)
+    heads   -> model    (per-head state, e.g. RWKV wkv state / u bonus)
+    experts -> model    (EP: the token all_to_all is the X-RDMA dispatch)
+    embed   -> None     (activations stay batch-sharded; no 2D weight TP)
+    layers  -> None     (scan axis)
+
+ZeRO-1: optimizer moments additionally shard their largest free dim over
+``data`` (pure re-sharding — the AdamW update is elementwise, so this is
+free compute-wise and divides optimizer memory by |data|).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DATA_AXES = ("pod", "data")  # batch-like mesh axes, outermost first
+
+DEFAULT_RULES: dict[str, str | None] = {
+    "vocab": "model",
+    "ffn": "model",
+    "q_dim": "model",
+    "kv_dim": "model",
+    "heads": "model",
+    "experts": "model",
+    "embed": None,
+    "layers": None,
+}
+
+# Serving: weights are stationary and must fit without optimizer headroom,
+# so shard 2-D — TP over `model` plus `embed` (the D dim of every
+# projection) over `data`.  Activations at decode are tiny, so the extra
+# contraction psums are noise; prefill pays FSDP-style per-layer gathers.
+SERVE_RULES: dict[str, str | None] = {**DEFAULT_RULES, "embed": "data"}
+
+
+def rules_for_train(cfg, mesh: Mesh) -> dict[str, str | None]:
+    """Per-arch train rules.
+
+    Archs whose head count does not divide `model` (qwen 40H, hymba 25H,
+    gemma2 8H) cannot propagate TP through the head reshape — GSPMD then
+    reshards (B,S,H,hd) q/k/v per layer, measured at 670 MB/layer/direction
+    on qwen (1.25 TB/step total).  For those archs we DON'T TP the
+    attention/SSM projections at all: weights replicate over `model` (FSDP
+    still shards them over `data`), and the whole attention block runs
+    sequence-parallel — per-device FLOPs identical (S/16 x full heads vs
+    S x heads/16), resharding eliminated, only a K/V all-gather remains.
+    """
+    rules = dict(DEFAULT_RULES)
+    if "model" in mesh.axis_names and cfg.n_heads % mesh.shape["model"] != 0:
+        rules["q_dim"] = None
+        rules["kv_dim"] = None
+        rules["heads"] = None
+    return rules
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes: str | tuple[str, ...]) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def divisible(dim: int, mesh: Mesh, axes: str | tuple[str, ...]) -> bool:
+    return dim % axis_size(mesh, axes) == 0
+
+
+def spec_for(
+    shape: tuple[int, ...],
+    logical: tuple[str | None, ...],
+    mesh: Mesh,
+    rules: Mapping[str, str | None] = DEFAULT_RULES,
+) -> P:
+    """PartitionSpec for one leaf, honoring divisibility."""
+    parts: list[Any] = []
+    used: set[str] = set()
+    for dim, name in zip(shape, logical):
+        ax = rules.get(name) if name else None
+        if ax is None or ax not in mesh.axis_names or ax in used:
+            parts.append(None)
+        elif divisible(dim, mesh, ax):
+            parts.append(ax)
+            used.add(ax)
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_shardings(
+    params_or_avals: Mapping[str, Any],
+    axes: Mapping[str, tuple[str | None, ...]],
+    mesh: Mesh,
+    rules: Mapping[str, str | None] = DEFAULT_RULES,
+) -> dict[str, NamedSharding]:
+    out = {}
+    for k, p in params_or_avals.items():
+        out[k] = NamedSharding(mesh, spec_for(tuple(p.shape), axes[k], mesh, rules))
+    return out
+
+
+def zero1_shardings(
+    params_or_avals: Mapping[str, Any],
+    axes: Mapping[str, tuple[str | None, ...]],
+    mesh: Mesh,
+    rules: Mapping[str, str | None] = DEFAULT_RULES,
+    enabled: bool = True,
+) -> dict[str, NamedSharding]:
+    """Moment shardings: param spec + ``data`` on the largest free dim.
+
+    This is ZeRO-1 as a sharding decision: each data-parallel rank holds
+    1/|data| of every moment tensor.  GSPMD turns the gradient all-reduce
+    into reduce-scatter + the update's param write into all-gather — the
+    canonical ZeRO schedule — with no optimizer-code changes.
+    """
+    d_axes = data_axes(mesh)
+    out = {}
+    for k, p in params_or_avals.items():
+        base = spec_for(tuple(p.shape), axes[k], mesh, rules)
+        parts = list(base) + [None] * (len(p.shape) - len(base))
+        if enabled and d_axes:
+            free = [
+                (dim, i)
+                for i, (dim, s) in enumerate(zip(p.shape, parts))
+                if s is None and divisible(dim, mesh, d_axes)
+            ]
+            if free:
+                _, i = max(free)
+                parts[i] = d_axes if len(d_axes) > 1 else d_axes[0]
+        while parts and parts[-1] is None:
+            parts.pop()
+        out[k] = NamedSharding(mesh, P(*parts))
+    return out
+
+
+def fsdp_shardings(
+    params_or_avals: Mapping[str, Any],
+    axes: Mapping[str, tuple[str | None, ...]],
+    mesh: Mesh,
+    rules: Mapping[str, str | None] = DEFAULT_RULES,
+) -> dict[str, NamedSharding]:
+    """ZeRO-3/FSDP parameter shardings: TP spec + ``data`` on the largest
+    free dim of every leaf.
+
+    (A layers-axis variant — sharding the stacked L dim over data so the
+    per-layer gather stays inside the scan — was measured WORSE: jit
+    in_shardings cannot pad non-divisible L, and where it could, temp
+    memory grew ~20%.  Recorded in EXPERIMENTS.md §Perf as a refuted
+    hypothesis.)
+    """
+    return zero1_shardings(params_or_avals, axes, mesh, rules, enabled=True)
+
+
+def state_shardings(
+    param_avals: Mapping[str, Any],
+    axes: Mapping[str, tuple[str | None, ...]],
+    mesh: Mesh,
+    rules: Mapping[str, str | None] = DEFAULT_RULES,
+    zero1: bool = True,
+    fsdp: bool = False,
+) -> dict[str, Any]:
+    """Shardings for the train-state pytree {params, opt: OptState, step}.
+
+    ``fsdp`` shards the *parameters* themselves over ``data`` on top of TP
+    (ZeRO-3 style): GSPMD all-gathers each layer's weights inside the
+    layer scan and reduce-scatters its grads — mandatory for the 26B/42B
+    archs whose TP-only weights+grads alone exceed one chip's HBM."""
+    from repro.optim.adamw import OptState
+
+    if fsdp:
+        p_sh = fsdp_shardings(param_avals, axes, mesh, rules)
+        m_sh = p_sh if zero1 else param_shardings(param_avals, axes, mesh, rules)
+    else:
+        p_sh = param_shardings(param_avals, axes, mesh, rules)
+        m_sh = zero1_shardings(param_avals, axes, mesh, rules, enabled=zero1)
+    scalar = NamedSharding(mesh, P())
+    return {
+        "params": p_sh,
+        "opt": OptState(m=dict(m_sh), v=dict(m_sh), count=scalar),
+        "step": scalar,
+    }
+
+
+def sp_constrain(x, mesh: Mesh | None, s_axis: int = 1):
+    """Megatron-style sequence parallelism on activations (B, S, D).
+
+    Constrains S over ``model`` (and B over the data axes) at block
+    boundaries, so remat residuals are stored 1/|model|-sharded; GSPMD
+    inserts the all-gather before TP matmuls and the reduce-scatter after
+    — the Megatron-SP schedule.  No-op when S or B do not divide.
+    """
+    if mesh is None or "model" not in mesh.axis_names or x.ndim < 3:
+        return x
+    specs: list = [None] * x.ndim
+    d = data_axes(mesh)
+    if d and x.shape[0] % axis_size(mesh, d) == 0:
+        specs[0] = d if len(d) > 1 else d[0]
+    if x.shape[s_axis] > 1 and divisible(x.shape[s_axis], mesh, "model"):
+        specs[s_axis] = "model"
+    else:
+        return x  # nothing to gain from a batch-only constraint here
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*specs))
+    )
+
+
+def channel_constrain(x, mesh: Mesh | None, c_axis: int = -1):
+    """Channel/head parallelism for recurrent scans: shard the LAST dim of
+    (B, T, C...) over ``model`` and batch over data — time stays whole on
+    every rank, so the sequential scan runs collective-free."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    specs: list = [None] * x.ndim
+    d = data_axes(mesh)
+    if d and x.shape[0] % axis_size(mesh, d) == 0:
+        specs[0] = d if len(d) > 1 else d[0]
+    ci = c_axis % x.ndim
+    if not divisible(x.shape[ci], mesh, "model"):
+        return x
+    specs[ci] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*specs)))
+
+
+def batch_shardings(
+    batch_specs: Mapping[str, Any], mesh: Mesh
+) -> dict[str, NamedSharding]:
+    """Batch inputs: leading dim over (pod, data) when divisible."""
+    d = data_axes(mesh)
+    out = {}
+    for k, s in batch_specs.items():
+        if d and s.shape and divisible(s.shape[0], mesh, d):
+            spec = P(d if len(d) > 1 else d[0])
+        else:
+            spec = P()
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def cache_shardings(cache_specs: Any, mesh: Mesh) -> Any:
+    """Decode caches: batch -> data (when divisible), time/state -> model.
+
+    k/v/xk/xv: (L, B, T, K, hd)  -> P(None, data?, model_on_T?, None, None)
+    wkv:       (L, B, H, M, M)   -> P(None, data?, model_on_H?)
+    conv/h/shift small states    -> P(None, data?)
+    T-sharding the KV cache is the c2d move for decode: queries visit the
+    shard that owns the cache slice; partial softmax stats psum back.
+    """
+    d = data_axes(mesh)
+    d_spec = d if len(d) > 1 else (d[0] if d else None)
+
+    def one(path: str, s: Any) -> NamedSharding:
+        shape = s.shape
+        parts: list[Any] = [None] * len(shape)
+        if len(shape) >= 2 and d and divisible(shape[1], mesh, d):
+            parts[1] = d_spec
+        if len(shape) >= 3 and shape[2] > 1 and divisible(shape[2], mesh, "model"):
+            parts[2] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return {k: one(k, v) for k, v in cache_specs.items()}

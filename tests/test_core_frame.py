@@ -1,0 +1,110 @@
+"""Frame layout + truncation protocol unit tests (paper Figs. 2/3, Sec. III-D)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.frame import (
+    MAGIC,
+    MAGIC_LEN,
+    Frame,
+    FrameKind,
+    delivery_complete,
+    peek_header,
+    unpack,
+)
+
+
+def mk_frame(payload=b"\x01\x02", code=b"C" * 100, deps=("abi:pure", "region:x")):
+    return Frame(
+        kind=FrameKind.BITCODE,
+        name="foo",
+        payload=payload,
+        code=code,
+        deps=deps,
+        digest=b"\xaa" * 32,
+        seq=7,
+    )
+
+
+class TestPackUnpack:
+    def test_roundtrip_full(self):
+        f = mk_frame()
+        g = unpack(f.pack(), has_code=True)
+        assert (g.name, g.payload, g.code, g.deps) == (f.name, f.payload, f.code, f.deps)
+        assert g.digest == f.digest and g.seq == f.seq and g.kind == f.kind
+
+    def test_roundtrip_truncated(self):
+        f = mk_frame()
+        wire = f.wire_bytes(cached=True)
+        assert len(wire) == f.cached_nbytes
+        g = unpack(wire, has_code=False)
+        assert g.payload == f.payload and g.code == b""
+
+    def test_truncation_is_prefix(self):
+        """The cached send is a shorter PUT of the SAME buffer (Sec. III-D:
+        'the ifunc message is never modified')."""
+        f = mk_frame()
+        assert f.pack()[: f.cached_nbytes] == f.wire_bytes(cached=True)
+
+    def test_sentinels_present(self):
+        f = mk_frame()
+        buf = f.pack()
+        assert buf[f.cached_nbytes - MAGIC_LEN : f.cached_nbytes] == MAGIC
+        assert buf[-MAGIC_LEN:] == MAGIC
+
+    def test_code_bytes_dominate_uncached(self):
+        f = mk_frame(code=b"C" * 5159)
+        assert f.full_nbytes - f.cached_nbytes == 5159 + len("abi:pure\nregion:x") + MAGIC_LEN
+
+
+class TestDelivery:
+    def test_partial_header_incomplete(self):
+        f = mk_frame()
+        assert peek_header(f.pack()[:10]) is None
+        assert not delivery_complete(f.pack()[:10], expect_code=True)
+
+    def test_partial_payload_incomplete(self):
+        f = mk_frame(payload=b"\x00" * 64)
+        buf = f.pack()
+        assert not delivery_complete(buf[: f.cached_nbytes - 1], expect_code=False)
+        assert delivery_complete(buf[: f.cached_nbytes], expect_code=False)
+
+    def test_full_delivery_detection(self):
+        f = mk_frame()
+        buf = f.pack()
+        assert not delivery_complete(buf[:-1], expect_code=True)
+        assert delivery_complete(buf, expect_code=True)
+
+    def test_corrupt_magic_raises(self):
+        f = mk_frame()
+        buf = bytearray(f.pack())
+        buf[0] ^= 0xFF
+        with pytest.raises(ValueError, match="header magic"):
+            peek_header(buf)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    payload=st.binary(max_size=512),
+    code=st.binary(max_size=2048),
+    deps=st.lists(st.sampled_from(["abi:xrdma", "region:t", "cap:m", "returns:r"]), max_size=4),
+    seq=st.integers(min_value=0, max_value=2**63 - 1),
+)
+def test_frame_roundtrip_property(payload, code, deps, seq):
+    f = Frame(
+        kind=FrameKind.BITCODE,
+        name="prop",
+        payload=payload,
+        code=code,
+        deps=tuple(dict.fromkeys(deps)),
+        digest=np.random.default_rng(0).bytes(32),
+        seq=seq,
+    )
+    g = unpack(f.pack(), has_code=True)
+    assert g.payload == payload and g.code == code and g.seq == seq
+    assert g.deps == tuple(dict.fromkeys(deps))
+    # truncated view always parses as payload-only
+    h = unpack(f.wire_bytes(cached=True), has_code=False)
+    assert h.payload == payload

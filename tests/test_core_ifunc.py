@@ -1,0 +1,143 @@
+"""ifunc runtime integration tests: install, cache, invoke, X-RDMA actions."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    Cluster,
+    FatBitcode,
+    Frame,
+    FrameKind,
+    IFunc,
+    ISAMismatch,
+    ProtocolError,
+    Toolchain,
+    make_spawner,
+    make_tsi,
+)
+from repro.core.transport import Fabric
+from repro.core.ifunc import PE
+
+
+@pytest.fixture()
+def pair():
+    """A host client and a DPU-role server on an ideal fabric."""
+    fabric = Fabric("ideal")
+    tc = Toolchain()
+    names = ["server0", "client"]
+    server = PE("server0", fabric, triple="cpu-bf2", toolchain=tc, peers=names)
+    client = PE("client", fabric, triple="cpu-host", toolchain=tc, peers=names)
+    return fabric, client, server
+
+
+class TestTSI:
+    def test_increment_roundtrip(self, pair):
+        fabric, client, server = pair
+        server.register_region("counter", np.zeros(1, np.int32))
+        client.register_source(make_tsi())
+        client.send_ifunc("server0", "tsi", np.array([5], np.int32))
+        assert server.poll() == 1
+        assert server.region("counter")[0] == 5
+        client.send_ifunc("server0", "tsi", np.array([3], np.int32))
+        server.poll()
+        assert server.region("counter")[0] == 8
+
+    def test_caching_protocol(self, pair):
+        """First frame carries code; subsequent frames are truncated; the
+        target JITs exactly once (Sec. III-D / Fig. 4)."""
+        fabric, client, server = pair
+        server.register_region("counter", np.zeros(1, np.int32))
+        tsi = client.register_source(make_tsi())
+        n_full = client.send_ifunc("server0", "tsi", np.array([1], np.int32))
+        n_cached = client.send_ifunc("server0", "tsi", np.array([1], np.int32))
+        assert n_full > n_cached
+        assert n_full - n_cached == len(tsi.code_bytes) + len("\n".join(tsi.deps)) + 8
+        server.poll()
+        assert server.target_cache.stats.jit_compiles == 1
+        assert server.stats.invokes == 2
+        assert client.sender_cache.stats.hits == 1
+        assert client.sender_cache.stats.bytes_saved == len(tsi.code_bytes)
+
+    def test_uncached_mode_resends_code(self, pair):
+        fabric, client, server = pair
+        server.register_region("counter", np.zeros(1, np.int32))
+        client.register_source(make_tsi())
+        client.caching_enabled = False
+        n1 = client.send_ifunc("server0", "tsi", np.array([1], np.int32))
+        n2 = client.send_ifunc("server0", "tsi", np.array([1], np.int32))
+        assert n1 == n2  # full frame every time
+        server.poll()
+        # target still JITs once: digest cache is independent of the sender
+        assert server.target_cache.stats.jit_compiles == 1
+        assert server.region("counter")[0] == 2
+
+    def test_truncated_to_unknown_raises(self, pair):
+        """A stale sender cache (e.g. after target restart) is a protocol
+        error the runtime layer must recover from."""
+        fabric, client, server = pair
+        server.register_region("counter", np.zeros(1, np.int32))
+        tsi = client.register_source(make_tsi())
+        frame = tsi.make_frame(np.array([1], np.int32).tobytes())
+        fabric.put("client", "server0", frame.wire_bytes(cached=True))
+        with pytest.raises(ProtocolError, match="restarted"):
+            server.poll()
+
+
+class TestBinaryVsBitcode:
+    def test_binary_exact_triple_runs(self, pair):
+        fabric, client, server = pair
+        server.register_region("counter", np.zeros(1, np.int32))
+        client.register_source(make_tsi(targets=("cpu-bf2",), kind=FrameKind.BINARY))
+        client.send_ifunc("server0", "tsi", np.array([2], np.int32))
+        server.poll()
+        assert server.region("counter")[0] == 2
+
+    def test_binary_wrong_triple_is_isa_mismatch(self, pair):
+        """The Sec. III-B problem: an x86 .so cannot run on an Arm DPU."""
+        fabric, client, server = pair
+        server.register_region("counter", np.zeros(1, np.int32))
+        client.register_source(make_tsi(targets=("cpu-host",), kind=FrameKind.BINARY))
+        client.send_ifunc("server0", "tsi", np.array([2], np.int32))
+        with pytest.raises(ISAMismatch):
+            server.poll()
+
+    def test_fat_bitcode_falls_back_by_platform(self, pair):
+        """Fat-bitcode with only a cpu-host slice still runs on cpu-bf2:
+        same platform, target re-optimizes (Sec. III-C)."""
+        fabric, client, server = pair
+        server.register_region("counter", np.zeros(1, np.int32))
+        client.register_source(make_tsi(targets=("cpu-host",)))  # BITCODE kind
+        client.send_ifunc("server0", "tsi", np.array([4], np.int32))
+        server.poll()
+        assert server.region("counter")[0] == 4
+
+    def test_fat_bitcode_multiarch_slices(self):
+        """The fat archive really contains one slice per toolchain target."""
+        tsi = make_tsi(targets=("cpu-host", "cpu-bf2", "tpu-v5e"))
+        fat = FatBitcode.from_bytes(tsi.code_bytes)
+        assert fat.triples() == ("cpu-bf2", "cpu-host", "tpu-v5e")
+        # tpu slice exists even though it was built on a cpu-only machine
+        # (cross-lowering, like building AArch64 bitcode on a Xeon)
+        assert len(fat.slices["tpu-v5e"]) > 0
+
+
+class TestSpawn:
+    def test_injected_code_generates_new_code(self, pair):
+        """Chain: client injects spawner into server0; the spawner's action
+        SPAWNs a TSI ifunc onto the client — recursive propagation."""
+        fabric, client, server = pair
+        client.register_region("counter", np.zeros(1, np.int32))
+        tc_spawner = make_spawner()
+        server_tc = server.toolchain
+        server_tc.publish(make_tsi())  # artifact available on server's "disk"
+        client.register_source(tc_spawner)
+        # payload: [dst=client index (=1), increment=9]
+        client.send_ifunc("server0", "spawner", np.array([1, 9], np.int32))
+        server.poll()  # installs spawner, emits TSI at client
+        assert server.stats.spawns == 1
+        client.poll()  # installs TSI (code came over the wire), runs it
+        assert client.region("counter")[0] == 9
+        assert client.target_cache.stats.jit_compiles == 1  # tsi only; spawner ran on server

@@ -1,0 +1,104 @@
+"""The loop-aware HLO analyzer against programs with known costs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import analyze_hlo
+from repro.analysis.roofline import HW_V5E, roofline
+
+
+def _compiled_text(fn, *avals):
+    return jax.jit(fn).lower(*avals).compile().as_text()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    n_layers, m = 6, 128
+
+    def scanned(x, w):
+        def body(h, w_l):
+            return jnp.tanh(h @ w_l), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    x = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    w = jax.ShapeDtypeStruct((n_layers, m, m), jnp.float32)
+    hc = analyze_hlo(_compiled_text(scanned, x, w))
+    want = 2.0 * m * m * m * n_layers
+    assert hc.while_trip_counts and max(hc.while_trip_counts) == n_layers
+    assert want * 0.99 <= hc.dot_flops <= want * 1.01
+
+
+def test_unrolled_matches_scanned_flops():
+    m = 64
+
+    def unrolled(x, w):
+        for i in range(4):
+            x = x @ w[i]
+        return x
+
+    x = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    w = jax.ShapeDtypeStruct((4, m, m), jnp.float32)
+    hc = analyze_hlo(_compiled_text(unrolled, x, w))
+    assert hc.dot_flops == pytest.approx(4 * 2 * m**3, rel=0.01)
+
+
+def test_grad_flops_roughly_triple():
+    m = 128
+
+    def loss(x, w):
+        return jnp.sum(jnp.tanh(x @ w) ** 2)
+
+    x = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    w = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    fwd = analyze_hlo(_compiled_text(loss, x, w)).dot_flops
+    bwd = analyze_hlo(_compiled_text(jax.grad(loss, argnums=1), x, w)).dot_flops
+    assert 1.8 * fwd <= bwd <= 3.2 * fwd  # dL/dw + recompute terms
+
+
+def test_collective_bytes_counted(tmp_path):
+    # hand-written module exercising the collective parser
+    hlo = """
+HloModule test
+
+ENTRY %main (p: f32[1024]) -> f32[1024] {
+  %p = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%p), replica_groups={}, to_apply=%add
+  ROOT %out = f32[1024]{0} add(%ar, %p)
+}
+"""
+    # computation %add is missing but the parser only needs the entry
+    hc = analyze_hlo(hlo)
+    assert hc.collective_bytes == 4096
+    assert hc.collective_by_kind == {"all-reduce": 4096.0}
+
+
+def test_roofline_terms_and_dominance():
+    from repro.analysis.hlo import HloCost
+
+    cost = HloCost(
+        flops=197e12,  # exactly 1s of compute
+        bytes_accessed=819e9 * 0.5,
+        bytes_major=819e9 * 0.5,  # 0.5s of HBM
+        collective_bytes=100e9 * 2,  # 2s all-reduce at ring factor 2 => 4s
+        collective_by_kind={"all-reduce": 100e9 * 2},
+    )
+    rep = roofline("a", "s", "m", 4, cost, model_flops=197e12 * 4)
+    assert rep.t_compute == pytest.approx(1.0)
+    assert rep.t_memory == pytest.approx(0.5)
+    assert rep.t_collective == pytest.approx(4.0)
+    assert rep.dominant == "collective"
+    assert rep.useful_ratio == pytest.approx(1.0)
+    assert rep.mfu_bound == pytest.approx(0.25)
+
+
+def test_bytes_major_below_pessimistic():
+    def f(x, w):
+        h = jnp.tanh(x @ w)
+        return jnp.sum(h * h + 3.0)
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    hc = analyze_hlo(_compiled_text(f, x, w))
+    assert 0 < hc.bytes_major <= hc.bytes_accessed

@@ -1,0 +1,204 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles, interpret=True (deliverable (c)); plus hypothesis properties on
+the chase workload."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.chase.kernel import chase_shard
+from repro.kernels.chase.ref import chase_ref
+from repro.kernels.embed_lookup.kernel import embed_lookup
+from repro.kernels.embed_lookup.ref import embed_lookup_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.wkv6.kernel import wkv6_chunked
+from repro.kernels.wkv6.ref import wkv6_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------------- flash
+@pytest.mark.parametrize(
+    "b,h,kh,s,t,d,bq,bk,causal,cap",
+    [
+        (2, 4, 2, 256, 256, 64, 128, 128, True, None),
+        (1, 8, 8, 128, 128, 128, 128, 64, True, 50.0),
+        (2, 4, 1, 256, 512, 32, 64, 256, False, None),
+        (1, 2, 2, 512, 512, 64, 256, 128, True, None),
+        (1, 6, 2, 128, 256, 64, 128, 128, True, 30.0),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, h, kh, s, t, d, bq, bk, causal, cap, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, s * t + h), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, kh, t, d), dtype)
+    v = jax.random.normal(ks[2], (b, kh, t, d), dtype)
+    got = flash_attention(q, k, v, causal=causal, softcap=cap, bq=bq, bk=bk,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal, softcap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+# -------------------------------------------------------------------- wkv6
+@pytest.mark.parametrize(
+    "b,t,h,m,chunk", [(2, 128, 2, 64, 16), (1, 256, 4, 64, 32), (2, 64, 1, 128, 16)]
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6(b, t, h, m, chunk, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, t * m), 5)
+    r = (jax.random.normal(ks[0], (b, t, h, m), jnp.float32) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, t, h, m), jnp.float32) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, t, h, m), jnp.float32) * 0.5).astype(dtype)
+    # realistic RWKV6 decay domain: log w in [-e, 0)
+    x = jnp.clip(jax.random.normal(ks[3], (b, t, h, m), jnp.float32) - 1.0, -6.0, 1.0)
+    w = jnp.exp(-jnp.exp(x))
+    u = jax.random.normal(ks[4], (h, m), jnp.float32) * 0.3
+    got, s_got = wkv6_chunked(r, k, v, w.astype(dtype), u, chunk=chunk, interpret=True)
+    want, s_want = wkv6_ref(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), w, u
+    )
+    tol = 5e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+    np.testing.assert_allclose(
+        np.asarray(s_got), np.asarray(s_want), atol=tol, rtol=tol
+    )
+
+
+def test_wkv6_matches_model_scan():
+    """The kernel oracle and the model's train-path scan are the same op."""
+    from repro.models.rwkv import wkv6_scan
+
+    ks = jax.random.split(KEY, 5)
+    b, t, h, m = 2, 64, 2, 32
+    r, k, v = (jax.random.normal(ks[i], (b, t, h, m)) * 0.5 for i in range(3))
+    w = jnp.exp(-jnp.exp(jnp.clip(jax.random.normal(ks[3], (b, t, h, m)) - 1, -6, 1)))
+    u = jax.random.normal(ks[4], (h, m)) * 0.3
+    o1, s1 = wkv6_ref(r, k, v, w, u)
+    o2, s2 = wkv6_scan(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------------------- chase
+@pytest.mark.parametrize(
+    "n_loc,b,lo,block,rounds",
+    [(4096, 64, 8192, 2048, 4), (2048, 128, 0, 512, 6), (1024, 32, 1024, 1024, 3)],
+)
+def test_chase_kernel(n_loc, b, lo, block, rounds):
+    rng = np.random.default_rng(n_loc + b)
+    table = rng.integers(0, 4 * n_loc, n_loc).astype(np.int32)
+    frontier = rng.integers(0, 4 * n_loc, b).astype(np.int32)
+    depth = rng.integers(1, 32, b).astype(np.int32)
+    f_ref, d_ref = chase_ref(
+        jnp.asarray(table), jnp.asarray(frontier), jnp.asarray(depth), lo,
+        max_hops=rounds * 32,
+    )
+    f_got, d_got = chase_shard(
+        jnp.asarray(table), jnp.asarray(frontier), jnp.asarray(depth), lo,
+        block=block, hops_per_visit=32, rounds=rounds, interpret=True,
+    )
+    assert np.array_equal(np.asarray(f_ref), np.asarray(f_got))
+    assert np.array_equal(np.asarray(d_ref), np.asarray(d_got))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    depth_max=st.integers(1, 64),
+)
+def test_chase_kernel_property(seed, depth_max):
+    """Property: for a table fully inside the shard, the kernel must fully
+    resolve every chase (depth' == 0) and agree with pure-python chasing."""
+    rng = np.random.default_rng(seed)
+    n = 1024
+    perm = rng.permutation(n)
+    table = np.empty(n, np.int32)
+    table[perm] = np.roll(perm, -1)  # single cycle, all local (lo=0)
+    b = 16
+    frontier = rng.integers(0, n, b).astype(np.int32)
+    depth = rng.integers(0, depth_max + 1, b).astype(np.int32)
+    f, d = chase_shard(
+        jnp.asarray(table), jnp.asarray(frontier), jnp.asarray(depth), 0,
+        block=n, hops_per_visit=64, rounds=1, interpret=True,
+    )
+    assert np.all(np.asarray(d) == 0)
+    for i in range(b):
+        a = frontier[i]
+        for _ in range(depth[i]):
+            a = table[a]
+        assert int(f[i]) == int(a)
+
+
+# ---------------------------------------------------------------- ssm_scan
+@pytest.mark.parametrize(
+    "bsz,t,d,n,chunk,bd",
+    [(2, 128, 64, 16, 32, 32), (1, 64, 128, 8, 16, 128), (2, 96, 32, 16, 32, 32)],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_kernel(bsz, t, d, n, chunk, bd, dtype):
+    from repro.kernels.ssm_scan.kernel import ssm_scan_chunked
+    from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+    ks = jax.random.split(jax.random.fold_in(KEY, t * d + n), 5)
+    x = (jax.random.normal(ks[0], (bsz, t, d)) * 0.5).astype(dtype)
+    # mamba dt domain: softplus(raw - 4.6) in [1e-3, ~1e-1]
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (bsz, t, d)) - 4.6) + 1e-4).astype(dtype)
+    a = -jnp.exp(jax.random.normal(ks[2], (d, n)) * 0.3)
+    b = (jax.random.normal(ks[3], (bsz, t, n)) * 0.5).astype(dtype)
+    c = (jax.random.normal(ks[4], (bsz, t, n)) * 0.5).astype(dtype)
+    y1, h1 = ssm_scan_ref(
+        x.astype(jnp.float32), dt.astype(jnp.float32), a,
+        b.astype(jnp.float32), c.astype(jnp.float32),
+    )
+    y2, h2 = ssm_scan_chunked(x, dt, a, b, c, chunk=chunk, bd=bd, interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(y1, np.float32), np.asarray(y2, np.float32), atol=tol, rtol=tol
+    )
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=tol, rtol=tol)
+
+
+def test_ssm_chunked_matches_model_scan():
+    from repro.models.ssm import selective_scan, selective_scan_chunked
+
+    ks = jax.random.split(KEY, 6)
+    bsz, t, d, n = 2, 64, 32, 8
+    x = jax.random.normal(ks[0], (bsz, t, d)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, t, d)) - 4.6) + 1e-4
+    a = -jnp.exp(jax.random.normal(ks[2], (d, n)) * 0.3)
+    b = jax.random.normal(ks[3], (bsz, t, n)) * 0.5
+    c = jax.random.normal(ks[4], (bsz, t, n)) * 0.5
+    h0 = jax.random.normal(ks[5], (bsz, d, n)) * 0.2
+    y1, h1 = selective_scan(x, dt, a, b, c, h0)
+    y2, h2 = selective_scan_chunked(x, dt, a, b, c, h0, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5, rtol=1e-4)
+
+
+# ------------------------------------------------------------ embed_lookup
+@pytest.mark.parametrize("v_loc,d,n,lo,bt,bv", [
+    (1024, 256, 512, 2048, 128, 256),
+    (512, 128, 256, 0, 256, 512),
+    (256, 512, 128, 256, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embed_lookup(v_loc, d, n, lo, bt, bv, dtype):
+    rng = np.random.default_rng(v_loc + n)
+    tab = jnp.asarray(rng.normal(0, 1, (v_loc, d)), dtype)
+    ids = jnp.asarray(rng.integers(0, 4 * v_loc, n), jnp.int32)
+    got = embed_lookup(tab, ids, lo, bt=bt, bv=bv, interpret=True)
+    want = embed_lookup_ref(tab, ids, lo)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=1e-2 if dtype == jnp.bfloat16 else 1e-5,
+    )

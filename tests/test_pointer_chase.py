@@ -1,0 +1,116 @@
+"""DAPC / GBPC / AM pointer-chase integration tests (paper Secs. IV-C/D)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Cluster, PointerChaseApp, chase_ref, make_chain
+
+
+@pytest.fixture(scope="module")
+def app():
+    cluster = Cluster(n_servers=4, wire="thor_bf2")
+    return PointerChaseApp(cluster, n_entries=1024, max_slots=64, seed=42)
+
+
+def expected(app, starts, depth):
+    return np.array([chase_ref(app.table, s, depth) for s in starts], np.int32)
+
+
+class TestChainConstruction:
+    def test_chain_is_single_cycle(self):
+        t = make_chain(256, seed=1)
+        seen, a = set(), 0
+        for _ in range(256):
+            assert a not in seen
+            seen.add(a)
+            a = int(t[a])
+        assert a == 0 and len(seen) == 256
+
+
+class TestModesAgree:
+    DEPTHS = [1, 7, 64, 300]
+
+    @pytest.mark.parametrize("depth", DEPTHS)
+    def test_dapc_bitcode(self, app, depth):
+        starts = np.arange(8) * 100 % app.n_entries
+        rep = app.dapc(starts, depth, mode="bitcode")
+        np.testing.assert_array_equal(rep.results, expected(app, starts, depth))
+
+    @pytest.mark.parametrize("depth", [7, 64])
+    def test_dapc_binary(self, app, depth):
+        starts = np.arange(8) * 37 % app.n_entries
+        rep = app.dapc(starts, depth, mode="binary")
+        np.testing.assert_array_equal(rep.results, expected(app, starts, depth))
+
+    @pytest.mark.parametrize("depth", [7, 64])
+    def test_dapc_am(self, app, depth):
+        starts = np.arange(8) * 51 % app.n_entries
+        rep = app.dapc(starts, depth, mode="am")
+        np.testing.assert_array_equal(rep.results, expected(app, starts, depth))
+
+    @pytest.mark.parametrize("depth", [7, 64])
+    def test_gbpc(self, app, depth):
+        starts = np.arange(8) * 13 % app.n_entries
+        rep = app.gbpc(starts, depth)
+        np.testing.assert_array_equal(rep.results, expected(app, starts, depth))
+
+
+class TestTrafficShape:
+    """The paper's scalability argument, as byte/op accounting."""
+
+    def test_gbpc_ops_scale_with_depth(self, app):
+        depth = 32
+        rep = app.gbpc(np.array([5]), depth)
+        assert rep.gets == depth  # one round trip per hop, always
+        assert rep.puts == 0
+
+    def test_dapc_network_ops_only_on_locality_breaks(self, app):
+        depth = 32
+        rep = app.dapc(np.array([5], np.int32), depth, mode="bitcode")
+        # puts = initial inject + forwards + 1 return <= depth+2, and in
+        # expectation ~ depth * (n_servers-1)/n_servers + 2
+        assert rep.puts <= depth + 2
+        start_owner_hops = rep.puts - 2
+        assert 0 <= start_owner_hops <= depth
+
+    def test_dapc_cached_beats_uncached_bytes(self, app):
+        starts = np.arange(4, dtype=np.int32)
+        app.cluster.client.caching_enabled = True
+        warm = app.dapc(starts, 16, mode="bitcode")  # caches already warm
+        for pe in app.cluster.pes():
+            pe.caching_enabled = False
+        try:
+            cold = app.dapc(starts, 16, mode="bitcode")
+        finally:
+            for pe in app.cluster.pes():
+                pe.caching_enabled = True
+        assert cold.put_bytes > warm.put_bytes * 5  # code bytes dominate
+
+    def test_am_frames_smaller_than_uncached_ifunc(self, app):
+        starts = np.arange(4, dtype=np.int32)
+        rep_am = app.dapc(starts, 16, mode="am")
+        per_msg_am = rep_am.put_bytes / rep_am.puts
+        assert per_msg_am < 120  # payload-only frames
+
+
+_PROP_APP_CACHE: dict = {}
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    depth=st.integers(min_value=1, max_value=200),
+    start=st.integers(min_value=0, max_value=1023),
+)
+def test_dapc_matches_oracle_property(depth, start):
+    """Property: for any (start, depth), DAPC == numpy oracle == GBPC."""
+    if "app" not in _PROP_APP_CACHE:
+        cluster = Cluster(n_servers=8, wire="ideal")
+        _PROP_APP_CACHE["app"] = PointerChaseApp(cluster, n_entries=512, max_slots=8, seed=7)
+    app = _PROP_APP_CACHE["app"]
+    start %= app.n_entries
+    want = chase_ref(app.table, start, depth)
+    got_dapc = app.dapc(np.array([start], np.int32), depth, mode="bitcode").results[0]
+    got_gbpc = app.gbpc(np.array([start], np.int32), depth).results[0]
+    assert got_dapc == want == got_gbpc

@@ -1,0 +1,81 @@
+"""Fault-tolerance integration: the TrainDriver's restart path replays
+deterministically, and the sender-cache invalidation story holds on the
+simulated fabric after a PE restart."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.optim import AdamW
+from repro.runtime import TrainDriver
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return get_config("gemma2-2b", smoke=True).replace(
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+        d_ff=64, vocab=128, window=8, embed_mult=1.0,
+    )
+
+
+def _driver(cfg, tmp, **kw):
+    return TrainDriver(
+        cfg,
+        ckpt_dir=tmp,
+        opt=AdamW(lr=1e-3),
+        data=DataConfig(seq_len=32, global_batch=2, vocab=cfg.vocab),
+        ckpt_every=5,
+        **kw,
+    )
+
+
+def test_restart_replays_identically(tiny_cfg, tmp_path):
+    clean = _driver(tiny_cfg, tmp_path / "a").run(12)
+    faulty = _driver(tiny_cfg, tmp_path / "b").run(12, fail_at_step=8)
+    assert faulty.restarts == 1
+    assert faulty.restored_steps == [5]
+    # steps 5..7 run twice in the faulty run; the final losses (i.e. the
+    # trajectory by step index) must match the clean run bit-for-bit-ish
+    # because state restored from ckpt(5) + deterministic pipeline replay
+    clean_by_step = clean.losses
+    faulty_tail = faulty.losses[-7:]  # steps 5..11 after restore
+    np.testing.assert_allclose(clean_by_step[5:12], faulty_tail, rtol=1e-5)
+
+
+def test_resume_from_disk(tiny_cfg, tmp_path):
+    d1 = _driver(tiny_cfg, tmp_path / "c")
+    r1 = d1.run(10)
+    # a brand-new driver process resumes from the step-10 checkpoint
+    d2 = _driver(tiny_cfg, tmp_path / "c")
+    r2 = d2.run(15)
+    assert r2.steps_run == 5  # only 10->15
+    # and diverging-loss protection works
+    assert all(np.isfinite(r2.losses))
+
+
+def test_restarted_pe_invalidates_sender_cache():
+    """Paper Sec III-D corner: a restarted PE lost its code cache; senders
+    holding stale cache entries would ship truncated frames that the PE
+    cannot decode.  The runtime layer invalidates on restart."""
+    from repro.core import Cluster, ProtocolError, make_tsi
+
+    cl = Cluster(n_servers=1, wire="ideal")
+    cl.servers[0].register_region("counter", np.zeros(1, np.int32))
+    cl.toolchain.publish(make_tsi())
+    cl.client.send_ifunc("server0", "tsi", np.ones(1, np.int32))
+    cl.drain()
+    # server dies and restarts: fresh caches, no regions
+    cl.kill_server(0)
+    pe = cl.restart_server(0)
+    pe.register_region("counter", np.zeros(1, np.int32))
+    # stale sender cache -> truncated frame -> the PE must refuse loudly
+    cl.client.send_ifunc("server0", "tsi", np.ones(1, np.int32))
+    with pytest.raises(ProtocolError):
+        pe.poll()
+    # recovery: invalidate and resend full frame
+    cl.client.sender_cache.invalidate_endpoint("server0")
+    cl.client.send_ifunc("server0", "tsi", np.ones(1, np.int32))
+    pe.poll()
+    assert pe.region("counter")[0] == 1
