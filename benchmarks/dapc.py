@@ -13,6 +13,12 @@ and integrates the calibrated wire model (modeled_tput_us accumulates
 inverse-throughput; GETs are round-trips and do not pipeline — matching
 the paper's observation that the GET line is flat and low).  Chase rate =
 n_chases / (modeled wire time + measured target-side compute time).
+
+Batched A/B (``batched_ab`` / ``--ab``): the message-rate regime the
+batched runtime targets — N concurrent chases, per-message baseline vs the
+coalesced/vmapped path, reporting XLA dispatches (``PEStats.invokes``),
+coalesced frame counts, and modeled wire time.  ``python -m benchmarks.dapc
+--ab --json BENCH_dapc.json`` records the trajectory.
 """
 
 from __future__ import annotations
@@ -34,6 +40,7 @@ def run_one(
     n_entries: int = 1 << 14,
     n_chases: int = 16,
     seed: int = 0,
+    batching: bool = False,
 ) -> dict:
     cl = Cluster(n_servers=n_servers, wire=profile)
     app = PointerChaseApp(cl, n_entries=n_entries, max_slots=n_chases, seed=seed)
@@ -44,12 +51,13 @@ def run_one(
     if mode == "get":
         rep = app.gbpc(starts, depth)
     else:
-        rep = app.dapc(starts, depth, mode=mode)
+        rep = app.dapc(starts, depth, mode=mode, batching=batching)
         if mode in ("bitcode", "binary"):
-            # steady state: first run paid the code movement; run again with
-            # caches warm (the regime Figs 5-12 measure)
+            # steady state: first run paid the code movement (and, batched,
+            # the per-bucket vmap compiles); run again with caches warm (the
+            # regime Figs 5-12 measure)
             t0 = time.perf_counter()
-            rep = app.dapc(starts, depth, mode=mode)
+            rep = app.dapc(starts, depth, mode=mode, batching=batching)
     wall_s = time.perf_counter() - t0
 
     # verify every result against the numpy oracle
@@ -63,8 +71,13 @@ def run_one(
         "servers": n_servers,
         "depth": depth,
         "profile": profile,
+        "batching": batching,
+        "n_chases": n_chases,
         "puts": rep.puts,
         "gets": rep.gets,
+        "invokes": rep.invokes,
+        "coalesced_frames": rep.coalesced_frames,
+        "coalesced_payloads": rep.coalesced_payloads,
         "wire_bytes": rep.put_bytes + rep.get_bytes,
         "modeled_wire_s": modeled_s,
         "measured_compute_s": wall_s,
@@ -99,6 +112,86 @@ def scaling_sweep(
     return rows
 
 
+def batched_ab(
+    n_servers: int = 8,
+    depth: int = 64,
+    n_chases: int = 256,
+    profile: str = "thor_xeon",
+    n_entries: int = 1 << 14,
+    mode: str = "bitcode",
+    seed: int = 0,
+) -> dict:
+    """Per-message vs batched runtime on ONE cluster, results oracle-checked.
+
+    One shared cluster/table so the comparison is exact: same starts, same
+    shards, caches warm on both sides of the A/B.
+    """
+    cl = Cluster(n_servers=n_servers, wire=profile)
+    app = PointerChaseApp(cl, n_entries=n_entries, max_slots=n_chases, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    starts = rng.integers(0, n_entries, n_chases).astype(np.int32)
+    expect = np.array([chase_ref(app.table, s, depth) for s in starts], np.int32)
+
+    app.dapc(starts, depth, mode=mode)  # warm code caches + compiles
+    app.dapc(starts, depth, mode=mode, batching=True)  # warm batched buckets
+
+    sides = {}
+    for label, batching in (("per_message", False), ("batched", True)):
+        t0 = time.perf_counter()
+        rep = app.dapc(starts, depth, mode=mode, batching=batching)
+        wall_s = time.perf_counter() - t0
+        assert np.array_equal(rep.results, expect), f"{label} diverged from oracle"
+        sides[label] = {
+            "puts": rep.puts,
+            "invokes": rep.invokes,
+            "coalesced_frames": rep.coalesced_frames,
+            "coalesced_payloads": rep.coalesced_payloads,
+            "wire_bytes": rep.put_bytes,
+            "modeled_us": round(rep.modeled_us, 3),
+            "measured_compute_s": round(wall_s, 4),
+        }
+    base, bat = sides["per_message"], sides["batched"]
+    return {
+        "config": {
+            "n_servers": n_servers,
+            "depth": depth,
+            "n_chases": n_chases,
+            "profile": profile,
+            "mode": mode,
+            "n_entries": n_entries,
+        },
+        **sides,
+        "dispatch_ratio": round(base["invokes"] / max(bat["invokes"], 1), 2),
+        "modeled_us_reduction_pct": round(
+            100 * (1 - bat["modeled_us"] / base["modeled_us"]), 2
+        ),
+        "oracle_checked": True,
+    }
+
+
+def batch_sweep(
+    n_chases_list: tuple[int, ...] = (16, 64, 256),
+    depth: int = 64,
+    n_servers: int = 8,
+    profile: str = "thor_xeon",
+) -> list[dict]:
+    """How amortization grows with the batch dimension (concurrent chases)."""
+    rows = []
+    for n in n_chases_list:
+        for batching in (False, True):
+            rows.append(
+                run_one(
+                    n_servers,
+                    depth,
+                    "bitcode",
+                    profile,
+                    n_chases=n,
+                    batching=batching,
+                )
+            )
+    return rows
+
+
 def claims(rows: list[dict]) -> dict:
     """DAPC-vs-GBPC speedups by depth (paper: 20-75%, growing with depth)."""
     out = {}
@@ -117,11 +210,43 @@ def claims(rows: list[dict]) -> dict:
 
 
 def main() -> None:
+    import argparse
     import json
 
-    d = depth_sweep()
-    s = scaling_sweep()
-    print(json.dumps({"depth_sweep": d, "scaling": s, "claims": claims(d)}, indent=1))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ab", action="store_true", help="batched-vs-per-message A/B only")
+    ap.add_argument("--json", metavar="PATH", help="write the result dict to PATH")
+    ap.add_argument("--chases", type=int, default=256)
+    ap.add_argument("--depth", type=int, default=64)
+    ap.add_argument("--servers", type=int, default=8)
+    ap.add_argument("--profile", default="thor_xeon", choices=PROFILES)
+    args = ap.parse_args()
+
+    ab = batched_ab(
+        n_servers=args.servers,
+        depth=args.depth,
+        n_chases=args.chases,
+        profile=args.profile,
+    )
+    if args.ab:
+        out = ab
+    else:
+        # one configuration end to end: the flags apply to every section
+        d = depth_sweep(n_servers=args.servers, profile=args.profile)
+        out = {
+            "depth_sweep": d,
+            "scaling": scaling_sweep(profile=args.profile),
+            "batch_sweep": batch_sweep(
+                depth=args.depth, n_servers=args.servers, profile=args.profile
+            ),
+            "claims": claims(d),
+            "batched_ab": ab,
+        }
+    text = json.dumps(out, indent=1, default=float)
+    print(text)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
 
 
 if __name__ == "__main__":

@@ -77,6 +77,32 @@ def bench_dapc(fast: bool = False) -> dict:
     return {"depth_sweep": d, "scaling": s, "claims": cl}
 
 
+def bench_dapc_batched(fast: bool = False) -> dict:
+    from .dapc import batch_sweep, batched_ab
+
+    n_chases = 64 if fast else 256
+    ab = batched_ab(n_chases=n_chases)
+    rows = batch_sweep(n_chases_list=(16, 64) if fast else (16, 64, 256))
+    _section("DAPC batched runtime (per-message vs coalesced/vmapped)")
+    print("n_chases,batching,puts,invokes,coalesced_frames,modeled_wire_s")
+    for r in rows:
+        print(
+            f"{r['n_chases']},{int(r['batching'])},{r['puts']},{r['invokes']},"
+            f"{r['coalesced_frames']},{r['modeled_wire_s']:.6f}"
+        )
+    print(
+        f"A/B @ {ab['config']['n_chases']} chases, depth {ab['config']['depth']}, "
+        f"{ab['config']['n_servers']} servers, {ab['config']['profile']}: "
+        f"{ab['dispatch_ratio']}x fewer dispatches, "
+        f"{ab['modeled_us_reduction_pct']}% lower modeled wire time"
+    )
+    out = {"ab": ab, "batch_sweep": rows}
+    bench_path = Path(__file__).resolve().parent.parent / "BENCH_dapc.json"
+    bench_path.write_text(json.dumps(ab, indent=1, default=float) + "\n")
+    print(f"wrote {bench_path}")
+    return out
+
+
 def bench_dapc_tensor() -> dict:
     # needs >1 device: run in a subprocess with 8 host platform devices
     import subprocess
@@ -145,7 +171,9 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only",
-        choices=["tsi", "dapc", "dapc_tensor", "embed_ablation", "roofline"],
+        choices=[
+            "tsi", "dapc", "dapc_batched", "dapc_tensor", "embed_ablation", "roofline",
+        ],
     )
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
@@ -153,12 +181,13 @@ def main() -> int:
     t0 = time.time()
     out: dict = {}
     todo = [args.only] if args.only else [
-        "tsi", "dapc", "dapc_tensor", "embed_ablation", "roofline",
+        "tsi", "dapc", "dapc_batched", "dapc_tensor", "embed_ablation", "roofline",
     ]
     for name in todo:
         out[name] = {
             "tsi": bench_tsi,
             "dapc": lambda: bench_dapc(args.fast),
+            "dapc_batched": lambda: bench_dapc_batched(args.fast),
             "dapc_tensor": bench_dapc_tensor,
             "embed_ablation": bench_embed_ablation,
             "roofline": bench_roofline,

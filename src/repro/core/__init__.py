@@ -15,7 +15,17 @@ Public API re-exports.  Layering:
 from .bitcode import BitcodeSlice, FatBitcode, local_triple, platform_of
 from .cache import CacheStats, SenderCache, TargetCodeCache
 from .cluster import Cluster
-from .frame import Frame, FrameFlags, FrameKind, MAGIC, delivery_complete, peek_header, unpack
+from .frame import (
+    Frame,
+    FrameFlags,
+    FrameKind,
+    MAGIC,
+    coalesce,
+    delivery_complete,
+    peek_header,
+    split_payloads,
+    unpack,
+)
 from .ifunc import (
     ACTION_WIDTH,
     A_DONE,
@@ -61,6 +71,7 @@ __all__ = [
     "WIRE_PROFILES",
     "WireModel",
     "chase_ref",
+    "coalesce",
     "delivery_complete",
     "local_triple",
     "make_chain",
@@ -70,5 +81,6 @@ __all__ = [
     "make_tsi",
     "peek_header",
     "platform_of",
+    "split_payloads",
     "unpack",
 ]

@@ -1,14 +1,21 @@
 """The two caches of the Three-Chains protocol (Sec. III-D, Fig. 4).
 
 * :class:`SenderCache` — source side. A hash table keyed by
-  (endpoint, ifunc name): if present, the target has seen the code, so the
-  PUT is truncated at the first MAGIC (code bytes never travel again).
+  (endpoint, code digest): if present, the target has seen *these exact
+  bytes*, so the PUT is truncated at the first MAGIC (code bytes never
+  travel again).  Keying by digest rather than ifunc name matters when an
+  ifunc is republished under the same name with different code (e.g. a
+  rebuilt ``chaser`` after a table resize): the new digest misses, the new
+  code travels, and the target never invokes stale code on a fresh payload.
 
 * :class:`TargetCodeCache` — target side. Digest-keyed registry of JIT'd
   executables (the ORC-JIT in-memory cache): the first frame of a type pays
   deserialize+compile; every later frame of that type goes straight to
   invoke. Also remembers which ifunc *names* are registered, which is how the
-  receiver decides whether to expect a truncated or a full frame.
+  receiver decides whether to expect a truncated or a full frame.  The
+  batched runtime additionally caches one *batched* executable per
+  (digest, padding bucket): a vmapped/`lax.map`-ped rendering of the same
+  code that retires a whole (B, ...) payload block in one XLA dispatch.
 """
 
 from __future__ import annotations
@@ -37,16 +44,16 @@ class CacheStats:
 
 
 class SenderCache:
-    """Tracks which (endpoint, ifunc) pairs have already received code."""
+    """Tracks which (endpoint, code digest) pairs have already received code."""
 
     def __init__(self) -> None:
         self._seen: set[tuple[str, str]] = set()
         self._lock = threading.Lock()
         self.stats = CacheStats()
 
-    def check_and_add(self, endpoint: str, name: str, code_nbytes: int) -> bool:
+    def check_and_add(self, endpoint: str, digest: str, code_nbytes: int) -> bool:
         """True if the target already has the code (=> truncate the send)."""
-        key = (endpoint, name)
+        key = (endpoint, digest)
         with self._lock:
             if key in self._seen:
                 self.stats.hits += 1
@@ -80,8 +87,10 @@ class TargetCodeCache:
     def __init__(self) -> None:
         self._by_digest: dict[str, CachedExecutable] = {}
         self._by_name: dict[str, CachedExecutable] = {}
+        self._batched: dict[tuple[str, int], Callable[..., Any]] = {}
         self._lock = threading.Lock()
         self.stats = CacheStats()
+        self.batched_compiles = 0
 
     def has_name(self, name: str) -> bool:
         with self._lock:
@@ -106,12 +115,25 @@ class TargetCodeCache:
             self.stats.jit_compiles += 1
             self.stats.jit_ms_total += jit_ms
 
+    # batched executables: one per (digest, power-of-two padding bucket) ----
+    def lookup_batched(self, digest: str, bucket: int) -> Callable[..., Any] | None:
+        with self._lock:
+            return self._batched.get((digest, bucket))
+
+    def install_batched(self, digest: str, bucket: int, fn: Callable[..., Any]) -> None:
+        with self._lock:
+            self._batched[(digest, bucket)] = fn
+            self.batched_compiles += 1
+
     def deregister(self, name: str) -> None:
         """ifunc de-registration discards the JIT'd code (Sec. III-C)."""
         with self._lock:
             exe = self._by_name.pop(name, None)
             if exe is not None:
                 self._by_digest.pop(exe.digest, None)
+                self._batched = {
+                    k: v for k, v in self._batched.items() if k[0] != exe.digest
+                }
 
     def forget_names(self) -> None:
         """Drop the Three-Chains registry but keep the digest-keyed JIT
@@ -126,3 +148,4 @@ class TargetCodeCache:
         with self._lock:
             self._by_digest.clear()
             self._by_name.clear()
+            self._batched.clear()

@@ -42,6 +42,12 @@ class Cluster:
     def client_index(self) -> int:
         return self.n_servers
 
+    def set_batching(self, enabled: bool) -> None:
+        """Flip every PE between the per-message and the batched runtime
+        (coalesced sends + grouped polls)."""
+        for pe in self.pes():
+            pe.batching = enabled
+
     def pes(self) -> list[PE]:
         return [*self.servers, self.client]
 

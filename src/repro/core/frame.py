@@ -15,6 +15,23 @@ Header fields::
 
     magic4  version  kind  flags  name_len  payload_len  code_len  deps_len
     digest(32B)  seq(8B)  name(name_len B)
+
+Multi-payload frames (coalescing)
+---------------------------------
+A frame whose ``flags`` carry :attr:`FrameFlags.BATCH` packs N payloads of
+the *same* ifunc type behind one header and (at most) one code section::
+
+    HEADER | count(u32) item_nbytes(u32) payload0 .. payloadN-1 | MAGIC | CODE | DEPS | MAGIC
+            `------------------ PAYLOAD section -------------------'
+
+All N items are same-size (one ifunc type means one payload aval), so the
+batch sub-header is just ``count`` and ``item_nbytes``.  The truncation
+protocol is unchanged — the PAYLOAD section (including the sub-header) sits
+before the first MAGIC, so a cached coalesced send is still a prefix PUT —
+and the wire model charges one ``alpha_us`` for all N payloads, which is the
+whole point: per-message latency amortizes across a burst to one peer.
+:func:`coalesce` builds such a frame from same-type frames and
+:func:`split_payloads` recovers the individual payloads on the target.
 """
 
 from __future__ import annotations
@@ -41,6 +58,10 @@ class FrameKind(IntEnum):
 class FrameFlags(IntEnum):
     NONE = 0
     RESULT = 1  # carries a ReturnResult payload
+    BATCH = 2  # PAYLOAD section is a multi-payload pack (see module docstring)
+
+
+_BATCH_SUBHDR = struct.Struct("<II")  # count, item_nbytes
 
 
 @dataclass
@@ -56,6 +77,13 @@ class Frame:
     seq: int = 0
     flags: int = FrameFlags.NONE
     version: int = 1
+
+    @property
+    def n_payloads(self) -> int:
+        """1 for a plain frame, the packed count for a BATCH frame."""
+        if not self.flags & FrameFlags.BATCH:
+            return 1
+        return _BATCH_SUBHDR.unpack_from(self.payload, 0)[0]
 
     # ------------------------------------------------------------------ pack
     def pack(self) -> bytes:
@@ -194,3 +222,46 @@ def unpack(buf: bytes | bytearray | memoryview, has_code: bool) -> Frame:
         seq=hdr.seq,
         flags=hdr.flags,
     )
+
+
+# -------------------------------------------------------------- coalescing
+def coalesce(frames: "list[Frame]") -> Frame:
+    """Pack N same-ifunc frames into one multi-payload frame.
+
+    All frames must agree on (kind, name, digest) — they are instances of one
+    ifunc type — and carry equal-size payloads.  The code/deps sections come
+    from the first frame that has them (every member of a batch shares the
+    same code by construction, digest equality enforces it).
+    """
+    if len(frames) == 1:
+        return frames[0]
+    head = frames[0]
+    item = len(head.payload)
+    for f in frames[1:]:
+        if (f.kind, f.name, f.digest) != (head.kind, head.name, head.digest):
+            raise ValueError("coalesce: frames are not the same ifunc type")
+        if len(f.payload) != item:
+            raise ValueError("coalesce: ragged payload sizes in one batch")
+    carrier = next((f for f in frames if f.code), head)
+    pack = _BATCH_SUBHDR.pack(len(frames), item) + b"".join(f.payload for f in frames)
+    return Frame(
+        kind=head.kind,
+        name=head.name,
+        payload=pack,
+        code=carrier.code,
+        deps=carrier.deps,
+        digest=head.digest,
+        seq=frames[-1].seq,
+        flags=head.flags | FrameFlags.BATCH,
+    )
+
+
+def split_payloads(frame: Frame) -> list[bytes]:
+    """Individual payloads of a (possibly multi-payload) frame, in order."""
+    if not frame.flags & FrameFlags.BATCH:
+        return [frame.payload]
+    count, item = _BATCH_SUBHDR.unpack_from(frame.payload, 0)
+    off = _BATCH_SUBHDR.size
+    if len(frame.payload) != off + count * item:
+        raise ValueError("corrupt batch frame: payload section size mismatch")
+    return [frame.payload[off + i * item : off + (i + 1) * item] for i in range(count)]

@@ -52,11 +52,13 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from .bitcode import DEFAULT_TOOLCHAIN_TARGETS, FatBitcode, platform_of
 from .cache import CachedExecutable, SenderCache, TargetCodeCache
-from .frame import Frame, FrameKind, peek_header, unpack
+from .frame import Frame, FrameKind, coalesce, peek_header, split_payloads, unpack
 from .transport import Fabric
 
 ACTION_WIDTH = 11  # [action, dst, plen, p0..p7]
@@ -168,11 +170,14 @@ class Toolchain:
 class PEStats:
     msgs: int = 0
     ifunc_installs: int = 0
-    invokes: int = 0
+    invokes: int = 0  # XLA dispatches (a batched dispatch counts once)
+    batched_invokes: int = 0  # dispatches that retired >1 payload
+    invoked_payloads: int = 0  # payloads retired across all dispatches
     forwards: int = 0
     returns: int = 0
     spawns: int = 0
     am_handled: int = 0
+    flushes: int = 0
     jit_ms_total: float = 0.0
 
     def as_dict(self) -> dict[str, float]:
@@ -214,9 +219,11 @@ class PE:
         self.completed: list[np.ndarray] = []
         self.stats = PEStats()
         self.caching_enabled = True  # benchmark switch: uncached mode
+        self.batching = False  # batched runtime: coalesced sends + grouped polls
         self._seq = 0
         self._region_dev: dict[str, tuple[int, jax.Array]] = {}
         self._region_ver: dict[str, int] = {}
+        self._sendq: dict[str, list[Frame]] = {}  # per-destination pending frames
 
     # --- local state ------------------------------------------------------
     def register_region(self, name: str, arr: np.ndarray) -> None:
@@ -271,17 +278,61 @@ class PE:
         pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
         self._seq += 1
         frame = Frame(kind=FrameKind.ACTIVE_MESSAGE, name=name, payload=pay, seq=self._seq)
-        wire = frame.wire_bytes(cached=True)  # AM never carries code
-        self.fabric.put(self.name, dst, wire)
-        return len(wire)
+        return self._put_frame(dst, frame)
 
     def _put_frame(self, dst: str, frame: Frame) -> int:
-        cached = self.caching_enabled and self.sender_cache.check_and_add(
-            dst, frame.name, len(frame.code)
-        )
+        """PUT a frame now, or queue it for the next :meth:`flush`.
+
+        Returns wire bytes sent, or 0 when the frame was queued (the wire
+        size of a queued frame is only known after coalescing).
+        """
+        if self.batching:
+            self._sendq.setdefault(dst, []).append(frame)
+            return 0
+        return self._put_now(dst, frame)
+
+    def _put_now(self, dst: str, frame: Frame) -> int:
+        if frame.kind == FrameKind.ACTIVE_MESSAGE:
+            cached = True  # AM never carries code
+        else:
+            cached = self.caching_enabled and self.sender_cache.check_and_add(
+                dst, frame.digest.hex(), len(frame.code)
+            )
         wire = frame.wire_bytes(cached=cached)
-        self.fabric.put(self.name, dst, wire)
+        self.fabric.put(self.name, dst, wire, n_payloads=frame.n_payloads)
         return len(wire)
+
+    def flush(self) -> int:
+        """Emit every queued frame; a burst of same-type frames to one peer
+        travels as a single coalesced PUT (one ``alpha_us``, summed bytes).
+
+        A failing destination (e.g. a killed endpoint) loses only its own
+        frames — every other destination's queue is still delivered, then
+        the first error is re-raised.  Returns the number of PUTs issued.
+        """
+        queued, self._sendq = self._sendq, {}
+        puts = 0
+        errors: list[Exception] = []
+        for dst, frames in queued.items():
+            # group by ifunc type AND payload size (AM payloads are caller-
+            # defined and xrdma plen varies, so same-name frames can be
+            # ragged — those travel as separate coalesced PUTs), preserving
+            # first-seen order
+            groups: dict[tuple[int, str, bytes, int], list[Frame]] = {}
+            for f in frames:
+                key = (int(f.kind), f.name, f.digest, len(f.payload))
+                groups.setdefault(key, []).append(f)
+            for members in groups.values():
+                try:
+                    self._put_now(dst, coalesce(members))
+                    puts += 1
+                except Exception as e:  # noqa: BLE001 - deliver the rest first
+                    errors.append(e)
+        if puts:
+            self.stats.flushes += 1
+        if errors:
+            raise errors[0]
+        return puts
 
     # --- target side --------------------------------------------------------
     def poll(self, max_msgs: int | None = None) -> int:
@@ -290,44 +341,119 @@ class PE:
         This is the paper's 'UCX ifunc polling function' — ideally called
         from a daemon thread; tests and the single-core benchmarks call it
         from a round-robin scheduler (core.cluster).
-        """
-        n = 0
-        for buf in self.endpoint.drain():
-            self._handle(bytes(buf))
-            n += 1
-            self.stats.msgs += 1
-            if max_msgs is not None and n >= max_msgs:
-                break
-        return n
 
-    def _handle(self, buf: bytes) -> None:
-        hdr = peek_header(buf)
-        if hdr is None:
-            raise ProtocolError("short frame")
-        if hdr.kind == FrameKind.ACTIVE_MESSAGE:
-            frame = unpack(buf, has_code=False)
-            handler = self.am_table.get(frame.name)
-            if handler is None:
-                raise ProtocolError(f"{self.name}: no AM handler {frame.name!r}")
+        With :attr:`batching` on, the drained frames are grouped by code
+        digest, each group's payloads are decoded into one ``(B, ...)``
+        block and retired by a single batched XLA dispatch, and everything
+        the dispatches emitted is flushed as coalesced per-destination PUTs.
+        """
+        if not self.batching:
+            n = 0
+            for buf in self.endpoint.drain():
+                self._handle(bytes(buf))
+                n += 1
+                self.stats.msgs += 1
+                if max_msgs is not None and n >= max_msgs:
+                    break
+            return n
+        bufs: list[bytes] = []
+        for buf in self.endpoint.drain():
+            bufs.append(bytes(buf))
+            self.stats.msgs += 1
+            if max_msgs is not None and len(bufs) >= max_msgs:
+                break
+        if bufs:
+            try:
+                self._handle_batch(bufs)
+            finally:
+                self.flush()  # emitted actions travel even if a frame was bad
+        return len(bufs)
+
+    def _handle_am(self, frame: Frame) -> None:
+        handler = self.am_table.get(frame.name)
+        if handler is None:
+            raise ProtocolError(f"{self.name}: no AM handler {frame.name!r}")
+        for pay in split_payloads(frame):
             self.stats.am_handled += 1
-            handler(self, frame.payload)
-            return
-        # ifunc path: does this wire carry code? (sender truncates iff it
-        # believes we have it; len tells the truth, the registry must agree)
+            handler(self, pay)
+
+    def _resolve_exe(self, buf: bytes, hdr) -> tuple[CachedExecutable, Frame]:
+        """Find (or install) the executable a frame refers to; returns it
+        with the frame unpacked exactly once (code-carrying frames are
+        multi-KB, a second parse is a second copy).
+
+        The name registry decides whether a truncated frame is acceptable;
+        the digest decides whether the name's code is *current* — a frame
+        carrying new code under a known name (republished ifunc) installs
+        and supersedes, it never silently runs the stale executable.
+        """
         has_code = len(buf) >= hdr.full_total and hdr.code_len > 0
+        frame = unpack(buf, has_code=has_code)
         if not self.target_cache.has_name(hdr.name):
             if not has_code:
                 raise ProtocolError(
                     f"{self.name}: truncated frame for unregistered ifunc "
                     f"{hdr.name!r} (stale sender cache — was this PE restarted?)"
                 )
-            frame = unpack(buf, has_code=True)
-            exe = self._install(frame)
-        else:
-            frame = unpack(buf, has_code=has_code)
-            exe = self.target_cache.lookup(hdr.name)
-            assert exe is not None
-        self._invoke(exe, frame.payload)
+            return self._install(frame), frame
+        exe = self.target_cache.lookup(hdr.name)
+        assert exe is not None
+        if exe.digest != hdr.digest.hex():
+            if has_code:
+                return self._install(frame), frame
+            hit = self.target_cache.lookup_digest(hdr.digest.hex())
+            if hit is None:
+                raise ProtocolError(
+                    f"{self.name}: truncated frame for {hdr.name!r} with "
+                    f"unknown code digest (stale sender cache)"
+                )
+            exe = hit
+        return exe, frame
+
+    def _handle(self, buf: bytes) -> None:
+        hdr = peek_header(buf)
+        if hdr is None:
+            raise ProtocolError("short frame")
+        if hdr.kind == FrameKind.ACTIVE_MESSAGE:
+            self._handle_am(unpack(buf, has_code=False))
+            return
+        # ifunc path: does this wire carry code? (sender truncates iff it
+        # believes we have it; len tells the truth, the registry must agree)
+        exe, frame = self._resolve_exe(buf, hdr)
+        for pay in split_payloads(frame):
+            self._invoke(exe, pay)
+
+    def _handle_batch(self, bufs: list[bytes]) -> None:
+        """Group drained frames by code digest and invoke each group once.
+
+        A frame that fails to resolve (stale sender cache after a restart)
+        or a group that fails to invoke (corrupt payload block) must not
+        take the rest of the drained batch down with it: every healthy
+        frame/group is still processed, then the first error is re-raised —
+        the same blast radius as the per-message path.
+        """
+        groups: dict[bytes, tuple[CachedExecutable, list[bytes]]] = {}
+        errors: list[Exception] = []
+        for buf in bufs:
+            try:
+                hdr = peek_header(buf)
+                if hdr is None:
+                    raise ProtocolError("short frame")
+                if hdr.kind == FrameKind.ACTIVE_MESSAGE:
+                    self._handle_am(unpack(buf, has_code=False))
+                    continue
+                exe, frame = self._resolve_exe(buf, hdr)
+                entry = groups.setdefault(hdr.digest, (exe, []))
+                entry[1].extend(split_payloads(frame))
+            except (ProtocolError, ValueError, ISAMismatch) as e:
+                errors.append(e)
+        for exe, pays in groups.values():
+            try:
+                self._invoke_batch(exe, pays)
+            except Exception as e:  # noqa: BLE001 - process remaining groups
+                errors.append(e)
+        if errors:
+            raise errors[0]
 
     def _install(self, frame: Frame) -> CachedExecutable:
         """Extract slice -> (ORC-)JIT -> digest cache (Sec. III-C/D).
@@ -378,7 +504,7 @@ class PE:
             in_avals=tuple(exported.in_avals),
             deps=frame.deps,
             kind=int(frame.kind),
-            extras={"code": frame.code, "abi": abi},
+            extras={"code": frame.code, "abi": abi, "exported": exported},
         )
         self.target_cache.install(exe, jit_ms=jit_ms)
         self.stats.ifunc_installs += 1
@@ -401,6 +527,18 @@ class PE:
                 args.append(self.caps[val])
         return args
 
+    @staticmethod
+    def _region_arg_pos(exe: CachedExecutable) -> int:
+        """Position of the (single) region among the linked dep arguments."""
+        pos = 0
+        for d in exe.deps:
+            tag, _, _ = d.partition(":")
+            if tag == "region":
+                return pos
+            if tag == "cap":
+                pos += 1
+        raise AssertionError("update ABI requires a region dep")
+
     def _dep_named(self, exe: CachedExecutable, tag: str) -> str | None:
         for d in exe.deps:
             t, _, val = d.partition(":")
@@ -410,6 +548,7 @@ class PE:
 
     def _invoke(self, exe: CachedExecutable, payload: bytes) -> None:
         self.stats.invokes += 1
+        self.stats.invoked_payloads += 1
         pay = self._decode_payload(exe, payload)
         args = self._dep_args(exe)
         out = exe.fn(pay, *args)
@@ -422,6 +561,122 @@ class PE:
             self._apply_action(exe, np.asarray(out))
         else:  # pure
             self.completed.append(np.asarray(out))
+
+    # --- batched invoke -----------------------------------------------------
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Power-of-two padding bucket: bounds batched recompiles to log2."""
+        return 1 << max(0, n - 1).bit_length()
+
+    def _decode_payload_block(
+        self, exe: CachedExecutable, pays: list[bytes], bucket: int
+    ) -> np.ndarray:
+        """Decode N same-type payloads into a ``(bucket, ...)`` block.
+
+        Padding rows repeat the last real payload: a real payload is known
+        to terminate (e.g. a Chaser's ``while_loop`` bound), so edge-repeat
+        padding can never hang where zero-padding might; padded outputs are
+        simply discarded.
+        """
+        aval = exe.in_avals[0]
+        arr = np.frombuffer(b"".join(pays), dtype=aval.dtype)
+        arr = arr.reshape((len(pays), *aval.shape))
+        if bucket > len(pays):
+            arr = np.concatenate([arr, np.repeat(arr[-1:], bucket - len(pays), axis=0)])
+        return arr
+
+    def _batched_executable(self, exe: CachedExecutable, bucket: int):
+        """The vmapped rendering of an installed ifunc, cached per
+        (digest, bucket) in the target code cache.
+
+        ``jax.vmap`` over a deserialized export blob needs a batching rule
+        for ``call_exported``; where the installed JAX version lacks one,
+        the fallback is ``lax.map`` — sequential semantics inside ONE fused
+        XLA dispatch, which is the quantity being amortized.  update-ABI
+        code folds payloads into the region carry with a masked ``lax.scan``
+        (exact sequential semantics, one dispatch, one region write).
+        """
+        hit = self.target_cache.lookup_batched(exe.digest, bucket)
+        if hit is not None:
+            return hit
+        exported = exe.extras["exported"]
+        call = exported.call
+        abi = exe.extras.get("abi", "pure")
+        pay_aval = exe.in_avals[0]
+        block_aval = jax.ShapeDtypeStruct((bucket, *pay_aval.shape), pay_aval.dtype)
+        dep_avals = tuple(exe.in_avals[1:])
+        t0 = time.perf_counter()
+        if abi == "update":
+            # entry(payload, ..region.., ...) -> new_region, folded as a scan
+            # carry; padded rows are masked out so the fold is exact.
+            valid_aval = jax.ShapeDtypeStruct((bucket,), jnp.bool_)
+            rpos = self._region_arg_pos(exe)
+
+            def folded(pays, valid, region, *extra):
+                def step(r, pv):
+                    p, v = pv
+                    dep_args = list(extra)
+                    dep_args.insert(rpos, r)
+                    return jnp.where(v, call(p, *dep_args), r), None
+
+                return lax.scan(step, region, (pays, valid))[0]
+
+            extra_avals = [a for i, a in enumerate(dep_avals) if i != rpos]
+            compiled = (
+                jax.jit(folded)
+                .lower(block_aval, valid_aval, dep_avals[rpos], *extra_avals)
+                .compile()
+            )
+        else:
+            def vmapped(pays, *deps):
+                return jax.vmap(call, in_axes=(0, *([None] * len(dep_avals))))(
+                    pays, *deps
+                )
+
+            def mapped(pays, *deps):
+                return lax.map(lambda p: call(p, *deps), pays)
+
+            compiled = None
+            for impl in (vmapped, mapped):
+                try:
+                    compiled = jax.jit(impl).lower(block_aval, *dep_avals).compile()
+                    break
+                except NotImplementedError:
+                    continue
+            assert compiled is not None
+        self.stats.jit_ms_total += (time.perf_counter() - t0) * 1e3
+        self.target_cache.install_batched(exe.digest, bucket, compiled)
+        return compiled
+
+    def _invoke_batch(self, exe: CachedExecutable, pays: list[bytes]) -> None:
+        """Retire N same-ifunc payloads in one XLA dispatch."""
+        if len(pays) == 1:  # the per-message executable is already compiled
+            self._invoke(exe, pays[0])
+            return
+        n = len(pays)
+        bucket = self._bucket(n)
+        block = self._decode_payload_block(exe, pays, bucket)
+        fn = self._batched_executable(exe, bucket)
+        args = self._dep_args(exe)
+        abi = exe.extras.get("abi", "pure")
+        self.stats.invokes += 1
+        self.stats.batched_invokes += 1
+        self.stats.invoked_payloads += n
+        if abi == "update":
+            region = self._dep_named(exe, "region")
+            assert region is not None, "update ABI requires a region dep"
+            valid = np.arange(bucket) < n
+            rpos = self._region_arg_pos(exe)
+            extra = [a for i, a in enumerate(args) if i != rpos]
+            out = fn(block, valid, args[rpos], *extra)
+            self._write_region(region, np.asarray(out))
+        elif abi == "xrdma":
+            actions = np.asarray(fn(block, *args))[:n]
+            for row in actions:
+                self._apply_action(exe, row)
+        else:  # pure
+            outs = np.asarray(fn(block, *args))[:n]
+            self.completed.extend(outs)
 
     def _apply_action(self, exe: CachedExecutable, action: np.ndarray) -> None:
         """The fixed X-RDMA action protocol (see module docstring)."""

@@ -54,6 +54,9 @@ class ChaseReport:
     put_bytes: int
     get_bytes: int
     modeled_us: float
+    invokes: int = 0  # XLA dispatches across all PEs (batched dispatch = 1)
+    coalesced_frames: int = 0  # PUTs that carried >1 payload
+    coalesced_payloads: int = 0  # payloads carried inside those PUTs
 
 
 class PointerChaseApp:
@@ -104,7 +107,7 @@ class PointerChaseApp:
         res[: self.max_slots] = RESULT_SENTINEL
         return res
 
-    def _finish(self, n: int, rounds: int) -> ChaseReport:
+    def _finish(self, n: int, rounds: int, invokes0: int = 0) -> ChaseReport:
         st = self.cluster.fabric.stats
         res = self.cluster.client.region("results")[:n].copy()
         return ChaseReport(
@@ -115,11 +118,31 @@ class PointerChaseApp:
             put_bytes=st.put_bytes,
             get_bytes=st.get_bytes,
             modeled_us=st.modeled_us,
+            invokes=self._total_invokes() - invokes0,
+            coalesced_frames=st.coalesced_frames,
+            coalesced_payloads=st.coalesced_payloads,
         )
 
+    def _total_invokes(self) -> int:
+        return sum(pe.stats.invokes for pe in self.cluster.pes())
+
     # ----------------------------------------------------------------- DAPC
-    def dapc(self, starts: np.ndarray, depth: int, mode: str = "bitcode") -> ChaseReport:
-        """Launch one X-RDMA Chaser per start and run to completion."""
+    def dapc(
+        self,
+        starts: np.ndarray,
+        depth: int,
+        mode: str = "bitcode",
+        batching: bool = False,
+    ) -> ChaseReport:
+        """Launch one X-RDMA Chaser per start and run to completion.
+
+        ``batching=True`` switches the whole cluster onto the batched
+        runtime: all launches are enqueued and flushed as one coalesced PUT
+        per destination, every PE retires same-type arrivals in one XLA
+        dispatch, and FORWARD/RETURN bursts coalesce per destination.  The
+        per-message path (``batching=False``, the default) is kept as the
+        A/B baseline.
+        """
         starts = np.asarray(starts, np.int32)
         n = len(starts)
         if n > self.max_slots:
@@ -128,6 +151,8 @@ class PointerChaseApp:
         client = cl.client
         self._reset_results()
         cl.fabric.stats.reset()
+        cl.set_batching(batching)
+        invokes0 = self._total_invokes()
         name = {"bitcode": "chaser", "binary": "chaser_bin"}.get(mode)
         results = cl.client.region("results")
         if mode == "am":
@@ -140,8 +165,14 @@ class PointerChaseApp:
                 client.send_ifunc(f"server{self.owner(start)}", name, payload)
         else:
             raise ValueError(f"unknown mode {mode!r}")
-        rounds = cl.run_until(lambda: results[self.max_slots] >= n)
-        return self._finish(n, rounds)
+        client.flush()
+        try:
+            rounds = cl.run_until(lambda: results[self.max_slots] >= n)
+        finally:
+            # don't leak batched mode into later traffic on this cluster:
+            # a send after dapc() would queue silently and never flush
+            cl.set_batching(False)
+        return self._finish(n, rounds, invokes0)
 
     # ----------------------------------------------------------------- GBPC
     def gbpc(self, starts: np.ndarray, depth: int) -> ChaseReport:
@@ -149,6 +180,7 @@ class PointerChaseApp:
         cl = self.cluster
         self._reset_results()
         cl.fabric.stats.reset()
+        invokes0 = self._total_invokes()
         results = cl.client.region("results")
         for slot, start in enumerate(np.asarray(starts, np.int32)):
             a = int(start)
@@ -159,7 +191,7 @@ class PointerChaseApp:
                 a = int(np.frombuffer(data, np.int32)[0])
             results[slot] = a
             results[self.max_slots] += 1
-        return self._finish(len(starts), rounds=0)
+        return self._finish(len(starts), rounds=0, invokes0=invokes0)
 
 
 # -------------------------------------------------------------- AM handlers

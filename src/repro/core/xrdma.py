@@ -34,11 +34,13 @@ CHASER_PAYLOAD = 4  # [addr, depth, requester, slot]
 
 
 def _vec(*slots) -> jax.Array:
-    """Build a padded i32 action vector from (action, dst, plen, payload...)."""
-    out = jnp.zeros((ACTION_WIDTH,), I32)
-    for i, s in enumerate(slots):
-        out = out.at[i].set(jnp.asarray(s, I32))
-    return out
+    """Build a padded i32 action vector from (action, dst, plen, payload...).
+
+    One stack+concatenate instead of a chained ``.at[i].set`` scatter loop:
+    same result, ACTION_WIDTH-times fewer ops in every traced action graph.
+    """
+    vals = jnp.stack([jnp.asarray(s, I32) for s in slots])
+    return jnp.concatenate([vals, jnp.zeros((ACTION_WIDTH - len(slots),), I32)])
 
 
 # ------------------------------------------------------------------ Chaser

@@ -1,0 +1,84 @@
+"""`hypothesis` when available, a tiny deterministic fallback when not.
+
+The container that runs tier-1 may not ship `hypothesis`; rather than
+skipping whole modules (which would silently drop every non-property test
+in them too), property tests import ``given``/``settings``/``st`` from here.
+The fallback drives each property with ``max_examples`` pseudo-random
+samples from a fixed-seed generator — no shrinking, no database, but the
+same assertions run everywhere and failures are reproducible.
+"""
+
+from __future__ import annotations
+
+try:  # the real thing, when present
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # sample(rng) -> value
+
+    class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_ignored):
+            # log-uniform when both bounds are positive (matches how the
+            # tests use it: scales spanning decades), uniform otherwise
+            if min_value > 0 and max_value > 0:
+                lo, hi = np.log(min_value), np.log(max_value)
+                return _Strategy(lambda rng: float(np.exp(rng.uniform(lo, hi))))
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def binary(min_size=0, max_size=64):
+            def sample(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return rng.bytes(n)
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=8):
+            def sample(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.sample(rng) for _ in range(n)]
+
+            return _Strategy(sample)
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # NB: runner takes no parameters and hides fn's signature, so
+            # pytest does not mistake the drawn arguments for fixtures.
+            def runner():
+                rng = np.random.default_rng(0xB17C0DE)
+                for _ in range(getattr(runner, "_max_examples", 10)):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(**drawn)
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner._max_examples = getattr(fn, "_max_examples", 10)
+            return runner
+
+        return deco

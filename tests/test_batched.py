@@ -1,0 +1,329 @@
+"""Batched X-RDMA runtime: coalesced frames, grouped dispatch, equivalence.
+
+Three layers under test:
+
+* wire — multi-payload frames (``coalesce``/``split_payloads``) and the one-
+  ``alpha_us``-per-coalesced-PUT accounting in the fabric's wire model;
+* target runtime — N same-type payloads retired by ONE XLA dispatch
+  (``PEStats.invokes``), update-ABI payloads folded into the region exactly;
+* app — batched ``dapc`` bit-identical to the per-message baseline and to
+  the ``chase_ref`` numpy oracle across modes / depths / server counts /
+  ragged batch sizes.
+
+Plus the sender-cache regression: truncation is keyed by code *digest*, so
+republishing an ifunc under the same name re-ships the new code instead of
+silently truncating against the stale executable.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (
+    Cluster,
+    Frame,
+    FrameFlags,
+    FrameKind,
+    IFunc,
+    PointerChaseApp,
+    Toolchain,
+    chase_ref,
+    coalesce,
+    make_tsi,
+    split_payloads,
+)
+from repro.core.ifunc import PE
+from repro.core.transport import WIRE_PROFILES, Fabric
+
+I32 = np.int32
+
+
+# ------------------------------------------------------------- frame layer
+def mk(payload, name="foo", digest=b"\xaa" * 32, code=b"C" * 64):
+    return Frame(
+        kind=FrameKind.BITCODE,
+        name=name,
+        payload=payload,
+        code=code,
+        deps=("abi:pure",),
+        digest=digest,
+    )
+
+
+class TestMultiPayloadFrame:
+    def test_roundtrip(self):
+        frames = [mk(bytes([i]) * 8) for i in range(5)]
+        batch = coalesce(frames)
+        assert batch.flags & FrameFlags.BATCH
+        assert batch.n_payloads == 5
+        from repro.core.frame import unpack
+
+        got = unpack(batch.pack(), has_code=True)
+        assert split_payloads(got) == [f.payload for f in frames]
+        assert got.code == frames[0].code
+
+    def test_single_frame_passthrough(self):
+        f = mk(b"\x01" * 8)
+        assert coalesce([f]) is f
+        assert split_payloads(f) == [f.payload]
+        assert f.n_payloads == 1
+
+    def test_truncated_batch_is_prefix(self):
+        """Coalescing keeps the truncation protocol: cached send is a
+        prefix PUT of the same buffer, code travels at most once."""
+        batch = coalesce([mk(bytes([i]) * 8) for i in range(4)])
+        assert batch.pack()[: batch.cached_nbytes] == batch.wire_bytes(cached=True)
+        from repro.core.frame import unpack
+
+        got = unpack(batch.wire_bytes(cached=True), has_code=False)
+        assert len(split_payloads(got)) == 4
+
+    def test_mixed_types_refuse_to_coalesce(self):
+        with pytest.raises(ValueError, match="not the same ifunc"):
+            coalesce([mk(b"x" * 8), mk(b"y" * 8, digest=b"\xbb" * 32)])
+
+    def test_ragged_payloads_refuse_to_coalesce(self):
+        with pytest.raises(ValueError, match="ragged"):
+            coalesce([mk(b"x" * 8), mk(b"y" * 4)])
+
+
+class TestCoalescedWireAccounting:
+    """One coalesced PUT costs one alpha_us + summed bytes (the whole point)."""
+
+    def test_alpha_amortizes(self):
+        wire = WIRE_PROFILES["thor_xeon"]
+        frames = [mk(bytes([i]) * 8) for i in range(16)]
+
+        fab_one = Fabric(wire)
+        fab_one.connect("dst")
+        batch = coalesce(frames)
+        buf = batch.wire_bytes(cached=True)
+        fab_one.put("src", "dst", buf, n_payloads=batch.n_payloads)
+        assert fab_one.stats.coalesced_frames == 1
+        assert fab_one.stats.coalesced_payloads == 16
+        assert fab_one.stats.modeled_us == pytest.approx(
+            wire.alpha_us + len(buf) / wire.beta_Bus
+        )
+
+        fab_n = Fabric(wire)
+        fab_n.connect("dst")
+        for f in frames:
+            fab_n.put("src", "dst", f.wire_bytes(cached=True))
+        assert fab_n.stats.coalesced_frames == 0
+        # 16 alphas vs 1: the batched PUT must save ~15 alphas of latency
+        saved = fab_n.stats.modeled_us - fab_one.stats.modeled_us
+        assert saved > 14 * wire.alpha_us
+
+
+# ----------------------------------------------------------- target runtime
+@pytest.fixture()
+def pair():
+    fabric = Fabric("ideal")
+    tc = Toolchain()
+    names = ["server0", "client"]
+    server = PE("server0", fabric, triple="cpu-bf2", toolchain=tc, peers=names)
+    client = PE("client", fabric, triple="cpu-host", toolchain=tc, peers=names)
+    return fabric, client, server
+
+
+class TestBatchedDispatch:
+    def test_tsi_burst_is_one_dispatch(self, pair):
+        """N concurrent TSIs: one coalesced PUT, one XLA dispatch, exact sum."""
+        fabric, client, server = pair
+        client.batching = server.batching = True
+        server.register_region("counter", np.zeros(1, I32))
+        client.register_source(make_tsi())
+        for v in range(1, 14):
+            client.send_ifunc("server0", "tsi", np.array([v], I32))
+        client.flush()
+        server.poll()
+        assert server.region("counter")[0] == sum(range(1, 14))
+        assert fabric.stats.puts == 1
+        assert fabric.stats.coalesced_frames == 1
+        assert fabric.stats.coalesced_payloads == 13
+        assert server.stats.invokes == 1  # ONE dispatch for 13 payloads
+        assert server.stats.batched_invokes == 1
+        assert server.stats.invoked_payloads == 13
+
+    def test_batch_frame_on_unbatched_receiver(self, pair):
+        """A coalesced frame is valid input for a per-message PE: it splits
+        and invokes payload-by-payload (receiver batching is independent)."""
+        fabric, client, server = pair
+        client.batching = True  # sender coalesces
+        server.batching = False  # receiver does not
+        server.register_region("counter", np.zeros(1, I32))
+        client.register_source(make_tsi())
+        for v in (3, 4, 5):
+            client.send_ifunc("server0", "tsi", np.array([v], I32))
+        client.flush()
+        server.poll()
+        assert server.region("counter")[0] == 12
+        assert server.stats.invokes == 3  # per-payload dispatches
+
+    def test_bucket_padding_bounds_compiles(self, pair):
+        """Batched executables are cached per power-of-two bucket: bursts of
+        5, 6, 8 payloads share the bucket-8 compile."""
+        fabric, client, server = pair
+        client.batching = server.batching = True
+        server.register_region("counter", np.zeros(1, I32))
+        client.register_source(make_tsi())
+        total = 0
+        for burst in (5, 6, 8, 3):
+            for v in range(burst):
+                client.send_ifunc("server0", "tsi", np.array([v], I32))
+                total += v
+            client.flush()
+            server.poll()
+        assert server.region("counter")[0] == total
+        # buckets: 8 (for 5, 6, 8) and 4 (for 3) -> exactly two batched compiles
+        assert server.target_cache.batched_compiles == 2
+
+
+class TestBatchedRobustness:
+    def test_ragged_am_payloads_flush_separately(self, pair):
+        """Same-name AM frames with different payload sizes must not poison
+        the flush: they travel as separate coalesced PUTs."""
+        fabric, client, server = pair
+        client.batching = server.batching = True
+        got = []
+        server.am_table["h"] = lambda pe, pay: got.append(pay)
+        client.send_am("server0", "h", b"ab")
+        client.send_am("server0", "h", b"abcd")
+        client.send_am("server0", "h", b"cd")
+        client.flush()
+        server.poll()
+        assert sorted(got) == [b"ab", b"abcd", b"cd"]
+        assert fabric.stats.puts == 2  # one 2-payload batch + one single
+
+    def test_bad_frame_does_not_discard_batch(self, pair):
+        """A stale-cache frame in a drained batch raises, but every healthy
+        frame in the same batch is still invoked first."""
+        from repro.core import ProtocolError
+
+        fabric, client, server = pair
+        server.batching = True
+        server.register_region("counter", np.zeros(1, I32))
+        tsi = make_tsi()
+        client.register_source(tsi)
+        client.send_ifunc("server0", "tsi", np.array([7], I32))
+        # truncated frame for an ifunc the server has never seen
+        bad = mk(b"\x01" * 8, name="ghost", digest=b"\xdd" * 32)
+        fabric.put("client", "server0", bad.wire_bytes(cached=True))
+        client.send_ifunc("server0", "tsi", np.array([4], I32))
+        with pytest.raises(ProtocolError):
+            server.poll()
+        assert server.region("counter")[0] == 11  # both healthy payloads ran
+
+    def test_dapc_does_not_leak_batched_mode(self):
+        """dapc(batching=True) must restore per-message mode: a later direct
+        send on the same cluster goes straight to the wire, not a queue."""
+        cl = Cluster(n_servers=2, wire="ideal")
+        app = PointerChaseApp(cl, n_entries=128, max_slots=8, seed=5)
+        starts = np.arange(4, dtype=I32)
+        app.dapc(starts, 7, mode="bitcode", batching=True)
+        assert not cl.client.batching
+        cl.servers[0].register_region("counter", np.zeros(1, I32))
+        cl.client.register_source(make_tsi())
+        nbytes = cl.client.send_ifunc("server0", "tsi", np.array([9], I32))
+        assert nbytes > 0  # transmitted immediately, not queued
+        cl.servers[0].poll()
+        assert cl.servers[0].region("counter")[0] == 9
+
+
+class TestSenderCacheDigestKeying:
+    """Regression: republishing an ifunc under the same name with new code
+    must re-ship the code — keying truncation by name silently ran stale
+    executables on fresh payloads."""
+
+    @staticmethod
+    def _ctr(name, scale):
+        def entry(payload, counter):
+            return counter + scale * payload[0]
+
+        return IFunc.build(
+            name=name,
+            fn=entry,
+            payload_aval=jax.ShapeDtypeStruct((1,), I32),
+            dep_avals=(jax.ShapeDtypeStruct((1,), I32),),
+            deps=("region:counter",),
+            abi="update",
+            targets=("cpu-host",),
+        )
+
+    def test_republished_code_travels_and_runs(self, pair):
+        fabric, client, server = pair
+        server.register_region("counter", np.zeros(1, I32))
+        client.register_source(self._ctr("ctr", scale=1))
+        n_v1_full = client.send_ifunc("server0", "ctr", np.array([5], I32))
+        n_v1_cached = client.send_ifunc("server0", "ctr", np.array([5], I32))
+        server.poll()
+        assert server.region("counter")[0] == 10
+        assert n_v1_cached < n_v1_full  # same digest: truncated
+
+        # rebuild under the SAME name with different code (scale 10)
+        client.register_source(self._ctr("ctr", scale=10))
+        n_v2 = client.send_ifunc("server0", "ctr", np.array([5], I32))
+        server.poll()
+        # new digest missed the sender cache -> full frame travelled ...
+        assert n_v2 > n_v1_cached
+        # ... and the target runs the NEW code, not the stale executable
+        assert server.region("counter")[0] == 60
+        assert server.target_cache.stats.jit_compiles == 2
+
+    def test_republished_code_runs_batched(self, pair):
+        fabric, client, server = pair
+        client.batching = server.batching = True
+        server.register_region("counter", np.zeros(1, I32))
+        client.register_source(self._ctr("ctr", scale=1))
+        client.send_ifunc("server0", "ctr", np.array([2], I32))
+        client.flush()
+        server.poll()
+        client.register_source(self._ctr("ctr", scale=10))
+        for v in (1, 2):
+            client.send_ifunc("server0", "ctr", np.array([v], I32))
+        client.flush()
+        server.poll()
+        assert server.region("counter")[0] == 2 + 10 * 3
+
+
+# ------------------------------------------------------------------- app
+class TestBatchedDapcEquivalence:
+    """Property-style equivalence: batched == per-message == numpy oracle
+    across modes, depths, server counts, and ragged batch sizes."""
+
+    @pytest.mark.parametrize("n_servers", [2, 5])
+    @pytest.mark.parametrize("mode", ["bitcode", "binary", "am"])
+    def test_modes_match_oracle(self, n_servers, mode):
+        cl = Cluster(n_servers=n_servers, wire="ideal")
+        app = PointerChaseApp(cl, n_entries=640, max_slots=32, seed=11)
+        rng = np.random.default_rng(13)
+        for n in (1, 3, 8, 21, 32):  # ragged: exercises several pad buckets
+            starts = rng.integers(0, app.n_entries, n).astype(I32)
+            for depth in (1, 7, 64):
+                want = np.array(
+                    [chase_ref(app.table, s, depth) for s in starts], I32
+                )
+                per_msg = app.dapc(starts, depth, mode=mode, batching=False)
+                batched = app.dapc(starts, depth, mode=mode, batching=True)
+                np.testing.assert_array_equal(per_msg.results, want)
+                np.testing.assert_array_equal(batched.results, want)
+
+    def test_batched_amortizes_at_scale(self):
+        """The acceptance numbers: 256 concurrent chases, depth 64, 8
+        servers, thor_xeon — >=5x fewer dispatches, >=30% lower modeled
+        wire time, bit-identical results."""
+        cl = Cluster(n_servers=8, wire="thor_xeon")
+        app = PointerChaseApp(cl, n_entries=1 << 14, max_slots=256, seed=0)
+        rng = np.random.default_rng(1)
+        starts = rng.integers(0, app.n_entries, 256).astype(I32)
+        app.dapc(starts, 64, mode="bitcode")  # warm caches/compiles
+        base = app.dapc(starts, 64, mode="bitcode", batching=False)
+        bat = app.dapc(starts, 64, mode="bitcode", batching=True)
+        want = np.array([chase_ref(app.table, s, 64) for s in starts], I32)
+        np.testing.assert_array_equal(base.results, want)
+        np.testing.assert_array_equal(bat.results, want)
+        assert base.invokes >= 5 * bat.invokes
+        assert bat.modeled_us <= 0.7 * base.modeled_us
+        assert bat.coalesced_frames > 0
+        assert bat.coalesced_payloads > bat.coalesced_frames

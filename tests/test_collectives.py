@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st  # hypothesis, or local fallback
 
 from repro.sharding.collectives import (
     compressed_psum_with_feedback,

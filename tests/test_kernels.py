@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st  # hypothesis, or local fallback
 
 from repro.kernels.chase.kernel import chase_shard
 from repro.kernels.chase.ref import chase_ref

@@ -2,8 +2,8 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st  # hypothesis, or local fallback
 
 from repro.core import Cluster, PointerChaseApp, chase_ref, make_chain
 
