@@ -1,0 +1,168 @@
+"""X-RDMA Gather A/B: embedding-shard service vs GET-per-row baseline.
+
+The serving-shaped workload (DOLMA's data-object disaggregation): N
+concurrent gather requests, each a batch of up to K row ids against a
+row-sharded (V, D) table.  Three paths on ONE cluster so the comparison
+is exact (same table, same requests, caches warm):
+
+  * ``get``          move-data-to-compute: one one-sided GET round trip
+                     per row; zero target-side code.
+  * ``xrdma``        the Gatherer ifunc, per-message runtime.
+  * ``xrdma+batch``  the same over PR 1's batched runtime: coalesced
+                     key-frames, one XLA dispatch per (PE, tick), partial
+                     RETURNs folded in one masked-scan dispatch.
+
+Every path is verified bit-identical to the numpy take oracle before any
+number is reported.  ``python -m benchmarks.gather --ab --json
+BENCH_gather.json`` records the trajectory.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Cluster
+from repro.runtime.embed_service import EmbedShardService, ragged_batches
+
+from .hw_model import PROFILES
+
+
+def gather_ab(
+    n_servers: int = 8,
+    n_requests: int = 256,
+    n_keys: int = 8,
+    dim: int = 32,
+    vocab: int = 4096,
+    max_slots: int = 64,
+    profile: str = "thor_xeon",
+    seed: int = 0,
+) -> dict:
+    """GET-per-row vs per-message vs batched X-RDMA on one warm cluster."""
+    cl = Cluster(n_servers=n_servers, wire=profile)
+    svc = EmbedShardService(
+        cl, vocab=vocab, dim=dim, n_keys=n_keys, max_slots=max_slots, seed=seed
+    )
+    batches = ragged_batches(vocab, n_requests, n_keys, seed + 1)
+    want = svc.oracle(batches)
+
+    # steady state: first contact pays code movement; a full batched pass
+    # pre-compiles every pad bucket this request mix will hit
+    svc.gather(batches[: min(32, n_requests)], batching=False)
+    svc.gather(batches, batching=True)
+
+    sides = {}
+    runs = (
+        ("get_per_row", lambda: svc.gather_get(batches)),
+        ("per_message", lambda: svc.gather(batches, batching=False)),
+        ("batched", lambda: svc.gather(batches, batching=True)),
+    )
+    for label, run in runs:
+        t0 = time.perf_counter()
+        rep = run()
+        wall_s = time.perf_counter() - t0
+        for got, w in zip(rep.results, want):
+            assert np.array_equal(got, w), f"{label} diverged from oracle"
+        sides[label] = {
+            "puts": rep.puts,
+            "gets": rep.gets,
+            "network_ops": rep.network_ops,
+            "invokes": rep.invokes,
+            "coalesced_frames": rep.coalesced_frames,
+            "coalesced_payloads": rep.coalesced_payloads,
+            "wire_bytes": rep.put_bytes + rep.get_bytes,
+            "modeled_us": round(rep.modeled_us, 3),
+            "measured_compute_s": round(wall_s, 4),
+        }
+    get, bat = sides["get_per_row"], sides["batched"]
+    per = sides["per_message"]
+    n_rows = int(sum(len(b) for b in batches))
+    return {
+        "config": {
+            "n_servers": n_servers,
+            "n_requests": n_requests,
+            "n_keys": n_keys,
+            "dim": dim,
+            "vocab": vocab,
+            "max_slots": max_slots,
+            "profile": profile,
+            "n_rows": n_rows,
+        },
+        **sides,
+        # batching amortization vs the per-message X-RDMA path
+        "dispatch_ratio": round(per["invokes"] / max(bat["invokes"], 1), 2),
+        # the acceptance comparison: batched X-RDMA vs GET-per-row
+        "batched_vs_get_ops_ratio": round(
+            get["network_ops"] / max(bat["network_ops"], 1), 2
+        ),
+        "batched_vs_get_modeled_pct": round(
+            100 * (1 - bat["modeled_us"] / get["modeled_us"]), 2
+        ),
+        "oracle_checked": True,
+    }
+
+
+def slot_sweep(
+    slots_list: tuple[int, ...] = (8, 32, 128),
+    n_requests: int = 256,
+    n_servers: int = 8,
+    profile: str = "thor_xeon",
+) -> list[dict]:
+    """How overlap depth (completion-queue slots) shapes the amortization."""
+    rows = []
+    for slots in slots_list:
+        ab = gather_ab(
+            n_servers=n_servers,
+            n_requests=n_requests,
+            max_slots=slots,
+            profile=profile,
+        )
+        rows.append(
+            {
+                "max_slots": slots,
+                "batched_modeled_us": ab["batched"]["modeled_us"],
+                "batched_invokes": ab["batched"]["invokes"],
+                "batched_network_ops": ab["batched"]["network_ops"],
+                "get_modeled_us": ab["get_per_row"]["modeled_us"],
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ab", action="store_true", help="A/B comparison only")
+    ap.add_argument("--json", metavar="PATH", help="write the result dict to PATH")
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--keys", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--servers", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=64)
+    ap.add_argument("--profile", default="thor_xeon", choices=PROFILES)
+    args = ap.parse_args()
+
+    ab = gather_ab(
+        n_servers=args.servers,
+        n_requests=args.requests,
+        n_keys=args.keys,
+        dim=args.dim,
+        max_slots=args.slots,
+        profile=args.profile,
+    )
+    if args.ab:
+        out = ab
+    else:
+        out = {"ab": ab, "slot_sweep": slot_sweep(profile=args.profile)}
+    text = json.dumps(out, indent=1, default=float)
+    print(text)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -103,6 +103,30 @@ def bench_dapc_batched(fast: bool = False) -> dict:
     return out
 
 
+def bench_gather(fast: bool = False) -> dict:
+    from .gather import gather_ab
+
+    ab = gather_ab(n_requests=64 if fast else 256)
+    _section("X-RDMA Gather (embedding-shard service vs GET-per-row)")
+    print("path,network_ops,invokes,coalesced_frames,wire_bytes,modeled_us")
+    for label in ("get_per_row", "per_message", "batched"):
+        r = ab[label]
+        print(
+            f"{label},{r['network_ops']},{r['invokes']},{r['coalesced_frames']},"
+            f"{r['wire_bytes']},{r['modeled_us']}"
+        )
+    print(
+        f"A/B @ {ab['config']['n_requests']} requests, "
+        f"{ab['config']['n_servers']} shards, {ab['config']['profile']}: "
+        f"{ab['batched_vs_get_ops_ratio']}x fewer network ops, "
+        f"{ab['batched_vs_get_modeled_pct']}% lower modeled wire time vs GET"
+    )
+    bench_path = Path(__file__).resolve().parent.parent / "BENCH_gather.json"
+    bench_path.write_text(json.dumps(ab, indent=1, default=float) + "\n")
+    print(f"wrote {bench_path}")
+    return ab
+
+
 def bench_dapc_tensor() -> dict:
     # needs >1 device: run in a subprocess with 8 host platform devices
     import subprocess
@@ -172,7 +196,8 @@ def main() -> int:
     ap.add_argument(
         "--only",
         choices=[
-            "tsi", "dapc", "dapc_batched", "dapc_tensor", "embed_ablation", "roofline",
+            "tsi", "dapc", "dapc_batched", "gather", "dapc_tensor",
+            "embed_ablation", "roofline",
         ],
     )
     ap.add_argument("--fast", action="store_true")
@@ -181,13 +206,15 @@ def main() -> int:
     t0 = time.time()
     out: dict = {}
     todo = [args.only] if args.only else [
-        "tsi", "dapc", "dapc_batched", "dapc_tensor", "embed_ablation", "roofline",
+        "tsi", "dapc", "dapc_batched", "gather", "dapc_tensor",
+        "embed_ablation", "roofline",
     ]
     for name in todo:
         out[name] = {
             "tsi": bench_tsi,
             "dapc": lambda: bench_dapc(args.fast),
             "dapc_batched": lambda: bench_dapc_batched(args.fast),
+            "gather": lambda: bench_gather(args.fast),
             "dapc_tensor": bench_dapc_tensor,
             "embed_ablation": bench_embed_ablation,
             "roofline": bench_roofline,

@@ -12,8 +12,10 @@ host ships a *normalization + outlier-clip + running-moments* program to
 two storage-side DPU PEs; the data never leaves the DPUs — only the code
 (once, 5-6 KB) and the per-shard moment summaries (16 B) move.
 
-Run:  PYTHONPATH=src python examples/dpu_preprocessing.py
+Run:  PYTHONPATH=src python examples/dpu_preprocessing.py [--tiny]
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -40,14 +42,15 @@ def preprocess(payload: jax.Array, shard: jax.Array) -> jax.Array:
     return jnp.concatenate([out, stats])
 
 
-def main() -> None:
+def main(shard: int = SHARD) -> None:
     cl = Cluster(n_servers=2, wire="thor_bf2", server_triple="cpu-bf2")
     rng = np.random.default_rng(0)
     # raw data lives ON the DPUs (computational-storage role)
     shards = []
+    n_glitch = max(2, shard // 100)  # ~1% outliers at any size
     for i, pe in enumerate(cl.servers):
-        raw = rng.normal(3.0, 2.0, SHARD).astype(np.float32)
-        raw[rng.integers(0, SHARD, 40)] += 100.0  # sensor glitches
+        raw = rng.normal(3.0, 2.0, shard).astype(np.float32)
+        raw[rng.integers(0, shard, n_glitch)] += 100.0  # sensor glitches
         pe.register_region("raw", raw)
         shards.append(raw)
 
@@ -57,7 +60,7 @@ def main() -> None:
         name="preprocess",
         fn=preprocess,
         payload_aval=jax.ShapeDtypeStruct((1,), jnp.float32),
-        dep_avals=(jax.ShapeDtypeStruct((SHARD,), jnp.float32),),
+        dep_avals=(jax.ShapeDtypeStruct((shard,), jnp.float32),),
         deps=("region:raw",),
         abi="pure",
         targets=("cpu-host", "cpu-bf2", "tpu-v5e"),
@@ -81,8 +84,11 @@ def main() -> None:
     jit_ms = sum(pe.stats.jit_ms_total for pe in cl.servers)
     print(f"code moved once: {sent} B total for both DPUs "
           f"(fat-bitcode, 3 target triples); one-time JIT {jit_ms:.0f} ms; "
-          f"the 2x{SHARD*4//1024} KiB of data moved 0 B")
+          f"the 2x{shard*4//1024} KiB of data moved 0 B")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true", help="smoke-test sizes")
+    args = ap.parse_args()
+    main(shard=256 if args.tiny else SHARD)

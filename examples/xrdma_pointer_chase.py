@@ -7,21 +7,25 @@
    algorithm as a shard_map collective program, with the Pallas chase
    kernel as the per-shard resolver.
 
-Run:  PYTHONPATH=src python examples/xrdma_pointer_chase.py
+Run:  PYTHONPATH=src python examples/xrdma_pointer_chase.py [--tiny]
 """
+
+import argparse
 
 import numpy as np
 
 
-def runtime_rendering() -> None:
+def runtime_rendering(tiny: bool) -> None:
     from repro.core import Cluster, PointerChaseApp, chase_ref
 
     print("== runtime rendering (code really moves) ==")
-    cl = Cluster(n_servers=8, wire="thor_bf2")
-    app = PointerChaseApp(cl, n_entries=1 << 14, max_slots=16)
-    starts = np.random.default_rng(0).integers(0, 1 << 14, 16).astype(np.int32)
+    n_servers, n_entries = (2, 1 << 8) if tiny else (8, 1 << 14)
+    depths = (4, 16) if tiny else (16, 64, 256)
+    cl = Cluster(n_servers=n_servers, wire="thor_bf2")
+    app = PointerChaseApp(cl, n_entries=n_entries, max_slots=16)
+    starts = np.random.default_rng(0).integers(0, n_entries, 16).astype(np.int32)
     print("depth  mode      msgs   wire_KB   modeled_us   rate(chases/s)")
-    for depth in (16, 64, 256):
+    for depth in depths:
         for mode in ("get", "am", "bitcode"):
             rep = (
                 app.gbpc(starts, depth)
@@ -38,7 +42,7 @@ def runtime_rendering() -> None:
             )
 
 
-def compiled_rendering() -> None:
+def compiled_rendering(tiny: bool) -> None:
     import jax
     import jax.numpy as jnp
 
@@ -46,7 +50,7 @@ def compiled_rendering() -> None:
     from repro.sharding.compute_to_data import chase_oracle, dapc_shard_map
 
     print("\n== compiled SPMD rendering (steady state: indices move) ==")
-    n, b, depth = 1 << 14, 64, 32
+    n, b, depth = (1 << 8, 8, 8) if tiny else (1 << 14, 64, 32)
     rng = np.random.default_rng(1)
     perm = rng.permutation(n)
     table = np.empty(n, np.int32)
@@ -70,5 +74,8 @@ def compiled_rendering() -> None:
 
 
 if __name__ == "__main__":
-    runtime_rendering()
-    compiled_rendering()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true", help="smoke-test sizes")
+    args = ap.parse_args()
+    runtime_rendering(args.tiny)
+    compiled_rendering(args.tiny)

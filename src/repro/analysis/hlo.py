@@ -182,11 +182,16 @@ def _parse_instr(line: str) -> Instr | None:
             break
     oper_str = rest[start + 1 : end]
     attrs = rest[end + 1 :]
-    operands = [
-        o.strip().lstrip("%")
-        for o in _split_top(oper_str)
-        if o.strip().startswith("%") or re.match(r"^\s*[\w.\-]+\s*$", o)
-    ]
+    operands = []
+    for o in _split_top(oper_str):
+        o = o.strip()
+        # operand refs print as "%name" or (some XLA versions) typed:
+        # "f32[64,64]{1,0} %name" — take the referenced symbol either way
+        ref = re.search(r"%([\w.\-]+)", o)
+        if ref:
+            operands.append(ref.group(1))
+        elif re.match(r"^[\w.\-]+$", o):
+            operands.append(o)
     return Instr(name, type_str, opcode, operands, attrs, s)
 
 

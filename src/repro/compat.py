@@ -1,0 +1,24 @@
+"""Cross-version JAX shims.
+
+``shard_map`` was promoted out of ``jax.experimental`` with its
+replication-check kwarg renamed (``check_rep`` -> ``check_vma``); every
+explicit-collective module routes through this one wrapper so the repo
+runs on either side of that promotion.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(fn, mesh, in_specs, out_specs):
+    """jax.shard_map with the replication/VMA check disabled, on any JAX."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )

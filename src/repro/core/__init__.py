@@ -16,6 +16,7 @@ from .bitcode import BitcodeSlice, FatBitcode, local_triple, platform_of
 from .cache import CacheStats, SenderCache, TargetCodeCache
 from .cluster import Cluster
 from .frame import (
+    CorruptFrame,
     Frame,
     FrameFlags,
     FrameKind,
@@ -30,8 +31,11 @@ from .ifunc import (
     ACTION_WIDTH,
     A_DONE,
     A_FORWARD,
+    A_NOP,
     A_RETURN,
     A_SPAWN,
+    CompletionQueue,
+    GatherFuture,
     IFunc,
     ISAMismatch,
     PE,
@@ -40,18 +44,28 @@ from .ifunc import (
 )
 from .pointer_chase import ChaseReport, PointerChaseApp, chase_ref, make_chain
 from .transport import Endpoint, EndpointDead, Fabric, WIRE_PROFILES, WireModel
-from .xrdma import make_chaser, make_return_result, make_spawner, make_tsi
+from .xrdma import (
+    make_chaser,
+    make_gather_return,
+    make_gatherer,
+    make_return_result,
+    make_spawner,
+    make_tsi,
+)
 
 __all__ = [
     "ACTION_WIDTH",
     "A_DONE",
     "A_FORWARD",
+    "A_NOP",
     "A_RETURN",
     "A_SPAWN",
     "BitcodeSlice",
     "CacheStats",
     "ChaseReport",
     "Cluster",
+    "CompletionQueue",
+    "CorruptFrame",
     "Endpoint",
     "EndpointDead",
     "Fabric",
@@ -59,6 +73,7 @@ __all__ = [
     "Frame",
     "FrameFlags",
     "FrameKind",
+    "GatherFuture",
     "IFunc",
     "ISAMismatch",
     "MAGIC",
@@ -76,6 +91,8 @@ __all__ = [
     "local_triple",
     "make_chain",
     "make_chaser",
+    "make_gather_return",
+    "make_gatherer",
     "make_return_result",
     "make_spawner",
     "make_tsi",

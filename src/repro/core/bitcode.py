@@ -78,18 +78,37 @@ class FatBitcode:
         fn: Callable[..., Any],
         in_avals: Sequence[jax.ShapeDtypeStruct],
         targets: Sequence[str] = DEFAULT_TOOLCHAIN_TARGETS,
+        fn_by_platform: Mapping[str, Callable[..., Any]] | None = None,
     ) -> "FatBitcode":
         """Cross-compile ``fn`` for every toolchain target.
 
         Mirrors "the Three-Chains toolchain will generate bitcode files for
         all the targets supported by the toolchain's Clang compiler".
+
+        ``fn_by_platform`` optionally overrides the entry per *platform*
+        (``"cpu"``/``"tpu"``): the toolchain analogue of per-ISA intrinsics
+        behind one source — e.g. the Gatherer ships a Pallas ``embed_lookup``
+        body in its TPU slice and the masked-take reference everywhere else.
+        Every slice must compute the same function; only the lowering
+        differs.  A platform whose override fails to cross-lower (e.g. a
+        Pallas TPU kernel that this JAX build cannot serialize from a
+        CPU-only machine) falls back to the portable ``fn``.
         """
         slices: dict[str, bytes] = {}
-        jitted = jax.jit(fn)
+        overrides = dict(fn_by_platform or {})
         for triple in targets:
-            exported = jax.export.export(jitted, platforms=[platform_of(triple)])(
-                *in_avals
-            )
+            plat = platform_of(triple)
+            entry = overrides.get(plat, fn)
+            try:
+                exported = jax.export.export(
+                    jax.jit(entry), platforms=[plat]
+                )(*in_avals)
+            except Exception:
+                if entry is fn:
+                    raise
+                exported = jax.export.export(jax.jit(fn), platforms=[plat])(
+                    *in_avals
+                )
             slices[triple] = exported.serialize()
         return cls(slices=slices)
 

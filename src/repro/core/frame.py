@@ -48,6 +48,17 @@ _HDR_FMT = "<4sBBBxHxxIII32sQ"
 _HDR_LEN = struct.calcsize(_HDR_FMT)
 
 
+class ProtocolError(RuntimeError):
+    """A peer violated the Three-Chains wire protocol (bad frame, stale
+    cache, unknown handler...).  Defined here, at the bottom layer, so both
+    the frame parser and the PE runtime raise the same family."""
+
+
+class CorruptFrame(ProtocolError, ValueError):
+    """Garbage bytes where a frame should be.  Also a ValueError: callers
+    that validated frames before ProtocolError existed keep working."""
+
+
 class FrameKind(IntEnum):
     BITCODE = 1  # fat-bitcode ifunc (Sec. III-C)
     BINARY = 2  # binary ifunc (Sec. III-B): single-triple, no target JIT
@@ -159,12 +170,16 @@ def peek_header(buf: bytes | bytearray | memoryview) -> ParsedHeader | None:
         _HDR_FMT, buf, 0
     )
     if magic4 != HDR_MAGIC:
-        raise ValueError("corrupt frame: bad header magic")
+        raise CorruptFrame("corrupt frame: bad header magic")
     if len(buf) < _HDR_LEN + name_len:
         return None
-    name = bytes(buf[_HDR_LEN : _HDR_LEN + name_len]).decode()
+    try:
+        name = bytes(buf[_HDR_LEN : _HDR_LEN + name_len]).decode()
+        kind = FrameKind(kind)
+    except (UnicodeDecodeError, ValueError) as e:
+        raise CorruptFrame(f"corrupt frame: {e}") from None
     return ParsedHeader(
-        kind=FrameKind(kind),
+        kind=kind,
         flags=flags,
         name=name,
         payload_len=payload_len,
@@ -200,7 +215,7 @@ def unpack(buf: bytes | bytearray | memoryview, has_code: bool) -> Frame:
     payload = bytes(buf[off : off + hdr.payload_len])
     off += hdr.payload_len
     if bytes(buf[off : off + MAGIC_LEN]) != MAGIC:
-        raise ValueError("corrupt frame: bad payload sentinel")
+        raise CorruptFrame("corrupt frame: bad payload sentinel")
     off += MAGIC_LEN
     code = b""
     deps: tuple[str, ...] = ()
@@ -211,7 +226,7 @@ def unpack(buf: bytes | bytearray | memoryview, has_code: bool) -> Frame:
         off += hdr.deps_len
         deps = tuple(d for d in deps_b.decode().split("\n") if d)
         if bytes(buf[off : off + MAGIC_LEN]) != MAGIC:
-            raise ValueError("corrupt frame: bad code sentinel")
+            raise CorruptFrame("corrupt frame: bad code sentinel")
     return Frame(
         kind=hdr.kind,
         name=hdr.name,
@@ -263,5 +278,5 @@ def split_payloads(frame: Frame) -> list[bytes]:
     count, item = _BATCH_SUBHDR.unpack_from(frame.payload, 0)
     off = _BATCH_SUBHDR.size
     if len(frame.payload) != off + count * item:
-        raise ValueError("corrupt batch frame: payload section size mismatch")
+        raise CorruptFrame("corrupt batch frame: payload section size mismatch")
     return [frame.payload[off + i * item : off + (i + 1) * item] for i in range(count)]

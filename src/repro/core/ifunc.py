@@ -27,7 +27,17 @@ against):
   ``action``: 0 DONE | 1 FORWARD (re-inject *this same ifunc*, code and
   all, to peer ``dst`` with payload ``p[:plen]``) | 2 RETURN (send the
   ifunc named by the ``returns:`` dep to ``dst``) | 3 SPAWN (send the
-  ifunc named by the ``spawn:`` dep — "generate new code").
+  ifunc named by the ``spawn:`` dep — "generate new code") | 4 NOP
+  (no action; skipped by the runtime).
+
+  An xrdma entry may instead return an ``(R, W)`` i32 *matrix* of action
+  rows; the runtime applies the rows in order.  ``W`` only has to satisfy
+  ``W >= 3 + plen`` for every row — rows are self-describing via their
+  ``plen`` field, so one rectangular matrix carries ragged payloads.  NOP
+  rows are how statically-shaped shipped code emits a *variable* number
+  of actions: the Gatherer, for example, returns one potential FORWARD
+  row per peer shard plus one RETURN row, and NOPs the rows it does not
+  need this invocation.
 
   Local recursion — the paper's "ifunc calls itself recursively" when the
   next pointer is local — happens *inside* the shipped code as a
@@ -48,6 +58,7 @@ Dependency tags (the wire ``DEPS`` list, Sec. III-C):
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
@@ -58,15 +69,19 @@ from jax import lax
 
 from .bitcode import DEFAULT_TOOLCHAIN_TARGETS, FatBitcode, platform_of
 from .cache import CachedExecutable, SenderCache, TargetCodeCache
-from .frame import Frame, FrameKind, coalesce, peek_header, split_payloads, unpack
+from .frame import (
+    Frame,
+    FrameKind,
+    ProtocolError,
+    coalesce,
+    peek_header,
+    split_payloads,
+    unpack,
+)
 from .transport import Fabric
 
 ACTION_WIDTH = 11  # [action, dst, plen, p0..p7]
-A_DONE, A_FORWARD, A_RETURN, A_SPAWN = 0, 1, 2, 3
-
-
-class ProtocolError(RuntimeError):
-    pass
+A_DONE, A_FORWARD, A_RETURN, A_SPAWN, A_NOP = 0, 1, 2, 3, 4
 
 
 class ISAMismatch(RuntimeError):
@@ -106,17 +121,22 @@ class IFunc:
         abi: str = "pure",
         targets: Sequence[str] = DEFAULT_TOOLCHAIN_TARGETS,
         kind: FrameKind = FrameKind.BITCODE,
+        fn_by_platform=None,
     ) -> "IFunc":
         """Run the Three-Chains toolchain: cross-compile ``fn`` for every
         target triple into a fat-bitcode archive.
 
         ``kind=BINARY`` models Sec. III-B: the archive holds exactly one
         slice (the source machine's own triple) and the target will refuse
-        a triple mismatch instead of re-lowering.
+        a triple mismatch instead of re-lowering.  ``fn_by_platform``
+        optionally swaps the entry per platform (see FatBitcode.build).
         """
         if kind == FrameKind.BINARY and len(targets) != 1:
             raise ValueError("binary ifuncs are single-triple by definition")
-        fat = FatBitcode.build(fn, (payload_aval, *dep_avals), targets=targets)
+        fat = FatBitcode.build(
+            fn, (payload_aval, *dep_avals), targets=targets,
+            fn_by_platform=fn_by_platform,
+        )
         wire_deps = (f"abi:{abi}", *deps)
         return cls(
             name=name,
@@ -279,6 +299,44 @@ class PE:
         self._seq += 1
         frame = Frame(kind=FrameKind.ACTIVE_MESSAGE, name=name, payload=pay, seq=self._seq)
         return self._put_frame(dst, frame)
+
+    def submit(
+        self,
+        dst: str,
+        name: str,
+        body: np.ndarray,
+        queue: "CompletionQueue",
+        expected: int,
+    ) -> "GatherFuture":
+        """Submit a completion-tracked X-RDMA op and return its future.
+
+        The completion-queue wire convention: the runtime prepends the
+        routing header ``[requester, slot, epoch]`` to the caller's
+        ``body``, so every shipped op under this protocol sees
+        ``payload[0]`` = the requester's peer index, ``payload[1]`` = the
+        slot its RETURNs must target, and ``payload[2]`` = the slot's
+        generation tag (RETURN code drops stale generations, making slot
+        recycling safe under at-least-once delivery).  ``expected`` is how
+        many result units (e.g. resolved rows) must arrive — possibly via
+        several out-of-order RETURNs from different PEs — before the
+        future reads done.
+        """
+        slot, epoch = queue._alloc()
+        hdr = np.array([self.peer_index(self.name), slot, epoch], np.int32)
+        payload = np.concatenate([hdr, np.asarray(body, np.int32)])
+        fut = GatherFuture(queue=queue, slot=slot, expected=int(expected))
+        queue._inflight[slot] = fut
+        try:
+            self.send_ifunc(dst, name, payload)
+        except Exception:
+            fut.cancel()  # a failed send must not leak the slot
+            raise
+        return fut
+
+    def peer_index(self, name: str) -> int:
+        """This cluster's dense peer index for ``name`` (the index space
+        X-RDMA action vectors use for ``dst``/``requester``)."""
+        return self.peers.index(name)
 
     def _put_frame(self, dst: str, frame: Frame) -> int:
         """PUT a frame now, or queue it for the next :meth:`flush`.
@@ -558,7 +616,7 @@ class PE:
             assert region is not None, "update ABI requires a region dep"
             self._write_region(region, np.asarray(out))
         elif abi == "xrdma":
-            self._apply_action(exe, np.asarray(out))
+            self._apply_actions(exe, np.asarray(out))
         else:  # pure
             self.completed.append(np.asarray(out))
 
@@ -672,11 +730,20 @@ class PE:
             self._write_region(region, np.asarray(out))
         elif abi == "xrdma":
             actions = np.asarray(fn(block, *args))[:n]
-            for row in actions:
-                self._apply_action(exe, row)
+            for per_payload in actions:
+                self._apply_actions(exe, per_payload)
         else:  # pure
             outs = np.asarray(fn(block, *args))[:n]
             self.completed.extend(outs)
+
+    def _apply_actions(self, exe: CachedExecutable, out: np.ndarray) -> None:
+        """Apply what an xrdma entry returned: one action vector, or an
+        (R, W) matrix of action rows applied in order (see module docstring)."""
+        if out.ndim == 2:
+            for row in out:
+                self._apply_action(exe, row)
+        else:
+            self._apply_action(exe, out)
 
     def _apply_action(self, exe: CachedExecutable, action: np.ndarray) -> None:
         """The fixed X-RDMA action protocol (see module docstring)."""
@@ -684,6 +751,8 @@ class PE:
         dst_idx = int(action[1])
         plen = int(action[2])
         pay = np.ascontiguousarray(action[3 : 3 + plen])
+        if code == A_NOP:
+            return
         if code == A_DONE:
             self.completed.append(pay)
             return
@@ -713,3 +782,138 @@ class PE:
             self.send_ifunc(dst, target, pay)
         else:
             raise ProtocolError(f"bad action code {code}")
+
+
+# ----------------------------------------------------- completion queue
+class CompletionQueue:
+    """Client-side completion queue for in-flight X-RDMA submissions.
+
+    The paper's ifuncs complete by writing into requester memory the
+    requester polls (ReturnResult + a counter).  This layer generalizes
+    that to *many overlapped operations*: a results region laid out as
+    ``(max_slots, 2 + width)`` int32 rows — ``row[0]`` is the slot's
+    arrived-position bitmask (popcount = distinct results arrived, so a
+    re-delivered partial RETURN ORs in bits it already set and can never
+    complete a slot early), ``row[1]`` its generation tag (epoch),
+    ``row[2:]`` its data block — plus a free-list of slots and a future
+    per in-flight submission.  RETURN ifuncs
+    (e.g. :func:`repro.core.xrdma.make_gather_return`) scatter into a
+    slot's block and bump its counter; because each RETURN names its slot,
+    completions may arrive *out of order* and interleaved across many
+    in-flight gathers, and retire through the batched update-ABI fold in
+    one XLA dispatch per poll.  Each allocation bumps the slot's epoch and
+    stamps it into every frame of that submission, so a late or
+    re-delivered RETURN for a *retired* gather mismatches the recycled
+    slot's generation and is dropped by the RETURN code — at-least-once
+    delivery cannot corrupt a successor request.  Completion is
+    poll-driven: nothing blocks, :meth:`GatherFuture.done` just reads the
+    counter the next poll wrote.
+
+    ``shape`` is the logical shape of one slot's data block (e.g.
+    ``(n_keys, dim)`` for a gather); ``dtype`` its logical element type —
+    the wire/region representation is always int32 (bit-cast, never
+    converted, so float rows survive bit-identically).
+    """
+
+    def __init__(
+        self,
+        pe: PE,
+        shape: tuple[int, ...],
+        dtype=np.int32,
+        max_slots: int = 64,
+        region: str = "cq_results",
+    ) -> None:
+        self.pe = pe
+        self.shape = tuple(shape)
+        self.dtype = np.dtype(dtype)
+        assert self.dtype.itemsize == 4, "slot blocks are int32-word addressed"
+        self.width = int(np.prod(self.shape))
+        self.max_slots = max_slots
+        self.region = region
+        pe.register_region(region, np.zeros((max_slots, 2 + self.width), np.int32))
+        self._free: deque[int] = deque(range(max_slots))
+        self._inflight: dict[int, "GatherFuture"] = {}
+
+    # -- slot lifecycle ----------------------------------------------------
+    def _alloc(self) -> tuple[int, int]:
+        """Take a free slot and advance its generation; -> (slot, epoch)."""
+        if not self._free:
+            raise RuntimeError(
+                f"completion queue full ({self.max_slots} slots in flight); "
+                "poll and retire futures before submitting more"
+            )
+        slot = self._free.popleft()
+        arr = self.pe.region(self.region)
+        epoch = int(arr[slot, 1]) + 1
+        arr[slot, 0] = 0
+        arr[slot, 1] = epoch
+        arr[slot, 2:] = 0
+        # re-register so the device-resident copy the RETURN fold reads is
+        # refreshed with the new generation tag
+        self.pe.register_region(self.region, arr)
+        return slot, epoch
+
+    def _release(self, slot: int) -> None:
+        # count/data cleared on next _alloc; the epoch stays, so RETURNs
+        # still in flight for the retired generation mismatch and drop
+        self._inflight.pop(slot, None)
+        self._free.append(slot)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def _count(self, slot: int) -> int:
+        """Distinct results arrived: popcount of the position bitmask."""
+        return bin(int(self.pe.region(self.region)[slot, 0]) & 0xFFFFFFFF).count("1")
+
+    def _data(self, slot: int) -> np.ndarray:
+        raw = self.pe.region(self.region)[slot, 2:]
+        return raw.view(self.dtype).reshape(self.shape)
+
+    def completed(self) -> list["GatherFuture"]:
+        """Every in-flight future whose results have fully arrived."""
+        return [f for f in list(self._inflight.values()) if f.done()]
+
+
+@dataclass
+class GatherFuture:
+    """Poll-driven handle for one completion-queue submission.
+
+    ``done()`` becomes true once ``expected`` result units have been
+    RETURNed into the slot (out-of-order, possibly from several PEs);
+    ``result()`` copies the slot's data block out and recycles the slot.
+    ``cancel()`` abandons an in-flight submission (failed send, lost
+    frame) and recycles the slot — the epoch guard makes that safe even
+    if the abandoned gather's RETURNs later arrive.  ``meta`` is caller
+    scratch (e.g. the original un-padded key batch).
+    """
+
+    queue: CompletionQueue
+    slot: int
+    expected: int
+    meta: Any = None
+    _released: bool = False
+
+    def done(self) -> bool:
+        return not self._released and self.queue._count(self.slot) >= self.expected
+
+    def result(self, release: bool = True) -> np.ndarray:
+        if self._released:
+            raise RuntimeError("future already consumed")
+        if not self.done():
+            raise RuntimeError(
+                f"slot {self.slot} incomplete: "
+                f"{self.queue._count(self.slot)}/{self.expected} results arrived"
+            )
+        out = self.queue._data(self.slot).copy()
+        if release:
+            self._released = True
+            self.queue._release(self.slot)
+        return out
+
+    def cancel(self) -> None:
+        """Abandon this submission and recycle its slot (idempotent)."""
+        if not self._released:
+            self._released = True
+            self.queue._release(self.slot)

@@ -24,6 +24,7 @@ from .ifunc import (
     ACTION_WIDTH,
     A_DONE,
     A_FORWARD,
+    A_NOP,
     A_RETURN,
     A_SPAWN,
     IFunc,
@@ -31,6 +32,7 @@ from .ifunc import (
 
 I32 = jnp.int32
 CHASER_PAYLOAD = 4  # [addr, depth, requester, slot]
+GATHER_HDR = 3  # [requester, slot, epoch] routing header (PE.submit convention)
 
 
 def _vec(*slots) -> jax.Array:
@@ -111,6 +113,203 @@ def make_return_result(
         payload_aval=jax.ShapeDtypeStruct((2,), I32),
         dep_avals=(jax.ShapeDtypeStruct((max_slots + 1,), I32),),
         deps=("region:results",),
+        abi="update",
+        targets=targets,
+        kind=kind,
+    )
+
+
+# ----------------------------------------------------------------- Gather
+def _take_rows(shard: jax.Array, keys: jax.Array, lo: jax.Array) -> jax.Array:
+    """Masked-take local resolution: rows for keys inside [lo, lo+V_loc),
+    zeros elsewhere (the reference semantics of kernels.embed_lookup)."""
+    v_loc = shard.shape[0]
+    loc = keys - lo
+    inside = (loc >= 0) & (loc < v_loc)
+    rows = jnp.take(shard, jnp.clip(loc, 0, v_loc - 1), axis=0)
+    return jnp.where(inside[:, None], rows, jnp.zeros((), shard.dtype))
+
+
+def make_gatherer(
+    rows_per_shard: int,
+    n_servers: int,
+    n_keys: int,
+    dim: int,
+    targets: Sequence[str] = ("cpu-host", "cpu-bf2", "cpu-a64fx", "tpu-v5e"),
+    kind: FrameKind = FrameKind.BITCODE,
+    name: str = "gatherer",
+    returns: str = "gather_return",
+    pallas_tpu: bool = True,
+) -> IFunc:
+    """The X-RDMA Gather op: one hop of a sharded embedding/KV-row gather.
+
+    Payload (completion-queue convention): ``[requester, slot, epoch,
+    key0..key_{K-1}]`` with unused key positions padded to -1.  ``epoch``
+    is the slot's generation tag: a late or re-delivered RETURN whose
+    epoch no longer matches the slot's is dropped by the RETURN code, so
+    slot recycling is safe under at-least-once delivery.  On arrival the
+    shipped code
+
+    * resolves the locally-owned subset of the keys against the shard
+      region (Pallas ``embed_lookup`` in the TPU slice, masked-take
+      reference elsewhere — both produce the identical rows),
+    * FORWARDs the unresolved remainder to the owning PE(s), preserving
+      each key's *position* so every partial RETURN scatters into the
+      right rows of the requester's slot (non-owned positions travel as
+      -1), and
+    * RETURNs the resolved rows (bit-cast f32->i32, never converted) plus
+      their positions and a count to the requester's completion queue.
+
+    One action matrix of ``n_servers + 1`` rows covers every case: row
+    ``s`` is the potential FORWARD to server ``s``, the last row the
+    partial RETURN; unneeded rows are NOPs.  A request whose keys span
+    ``m`` shards costs ``m`` RETURNs and at most ``m`` FORWARDs — network
+    actions only on locality breaks, exactly the Chaser's contract.
+    """
+    K, D, S = n_keys, dim, n_servers
+    if K > 31:
+        raise ValueError("n_keys > 31 would overflow the i32 position bitmask")
+    ret_plen = 3 + K + K * D  # [slot, epoch, nres, pos(K), rows(K*D)]
+    width = 3 + ret_plen  # rectangular action matrix; FORWARD rows zero-pad
+
+    def entry_with(resolve):
+        def entry(payload: jax.Array, shard: jax.Array, meta: jax.Array) -> jax.Array:
+            requester, slot, epoch = payload[0], payload[1], payload[2]
+            keys = payload[GATHER_HDR:]
+            shard_id, rows_per = meta[0], meta[1]
+            lo = shard_id * rows_per
+            loc = keys - lo
+            real = keys >= 0
+            mine = real & (loc >= 0) & (loc < rows_per)
+            rows = resolve(shard, keys, lo)  # (K, D), zeros off-shard
+            rows = jnp.where(mine[:, None], rows, jnp.zeros((), rows.dtype))
+            irows = lax.bitcast_convert_type(
+                rows.astype(jnp.float32), I32
+            ).reshape(-1)
+            pos = jnp.arange(K, dtype=I32)
+            nres = jnp.sum(mine.astype(I32))
+            ret = jnp.concatenate(
+                [
+                    jnp.stack(
+                        [
+                            jnp.where(nres > 0, A_RETURN, A_NOP).astype(I32),
+                            requester.astype(I32),
+                            jnp.asarray(ret_plen, I32),
+                        ]
+                    ),
+                    jnp.stack([slot, epoch, nres]).astype(I32),
+                    jnp.where(mine, pos, -1).astype(I32),
+                    irows,
+                ]
+            )
+            # one potential FORWARD row per peer shard (position-preserving)
+            owner = jnp.where(real & ~mine, keys // rows_per, -1)
+            zpad = jnp.zeros((K * D,), I32)
+            fwd_rows = []
+            for s in range(S):
+                take = owner == s
+                cnt = jnp.sum(take.astype(I32))
+                fwd_rows.append(
+                    jnp.concatenate(
+                        [
+                            jnp.stack(
+                                [
+                                    jnp.where(cnt > 0, A_FORWARD, A_NOP).astype(I32),
+                                    jnp.asarray(s, I32),
+                                    jnp.asarray(GATHER_HDR + K, I32),
+                                ]
+                            ),
+                            jnp.stack([requester, slot, epoch]).astype(I32),
+                            jnp.where(take, keys, -1).astype(I32),
+                            zpad,
+                        ]
+                    )
+                )
+            return jnp.stack([*fwd_rows, ret])  # (S + 1, width)
+
+        return entry
+
+    fn_by_platform = None
+    # the TPU slice carries the Pallas one-hot-MXU resolver when the shard
+    # shape satisfies its blocking constraints; FatBitcode.build falls back
+    # to the portable entry if the kernel cannot cross-lower from here
+    if pallas_tpu and (rows_per_shard <= 512 or rows_per_shard % 512 == 0):
+        try:
+            from repro.kernels.embed_lookup.kernel import embed_lookup
+
+            def pallas_resolve(shard, keys, lo):
+                return embed_lookup(shard, keys, lo, bt=min(256, K))
+
+            fn_by_platform = {"tpu": entry_with(pallas_resolve)}
+        except Exception:
+            fn_by_platform = None
+
+    return IFunc.build(
+        name=name,
+        fn=entry_with(_take_rows),
+        payload_aval=jax.ShapeDtypeStruct((GATHER_HDR + K,), I32),
+        dep_avals=(
+            jax.ShapeDtypeStruct((rows_per_shard, D), jnp.float32),
+            jax.ShapeDtypeStruct((3,), I32),
+        ),
+        deps=("region:embed_shard", "cap:gather_meta", f"returns:{returns}"),
+        abi="xrdma",
+        targets=targets,
+        kind=kind,
+        fn_by_platform=fn_by_platform,
+    )
+
+
+def make_gather_return(
+    max_slots: int,
+    n_keys: int,
+    dim: int,
+    region: str = "cq_results",
+    targets: Sequence[str] = ("cpu-host", "cpu-bf2", "cpu-a64fx", "tpu-v5e"),
+    kind: FrameKind = FrameKind.BITCODE,
+    name: str = "gather_return",
+) -> IFunc:
+    """Scatter one partial gather result into the requester's completion
+    queue: rows land at their request positions (out-of-order safe, any
+    interleaving of slots), and the slot's arrived-position *bitmask* ORs
+    in the positions this partial carried.  The bitmask (not a counter)
+    is what makes at-least-once delivery safe within a generation: a
+    re-delivered partial ORs bits already set and scatters rows already
+    written — exactly idempotent — so completion (popcount == expected)
+    can never fire early off a duplicate.  A RETURN whose epoch does not
+    match the slot's current generation is a late result for a *retired*
+    gather — dropped whole, so a recycled slot can never be corrupted by
+    stale traffic.  Update-ABI, so a burst of partial returns folds into
+    the region in one masked-scan dispatch under the batched runtime.
+
+    Region row layout: ``[posmask, epoch, data(K*D)]``."""
+    K, D = n_keys, dim
+    if K > 31:
+        raise ValueError("n_keys > 31 would overflow the i32 position bitmask")
+
+    def entry(payload: jax.Array, results: jax.Array) -> jax.Array:
+        slot, epoch = payload[0], payload[1]  # payload[2] = nres (diagnostic)
+        pos = payload[3 : 3 + K]
+        rows = payload[3 + K :].reshape(K, D)
+        cur = results[slot]
+        live = cur[1] == epoch  # stale-generation RETURNs drop whole
+        valid = pos >= 0
+        bits = jnp.sum(
+            jnp.where(valid, jnp.left_shift(jnp.int32(1), jnp.clip(pos, 0, 30)), 0)
+        )
+        safe = jnp.where(valid, pos, K)  # K = out of bounds -> dropped
+        block = cur[2:].reshape(K, D).at[safe].set(rows, mode="drop")
+        newrow = jnp.concatenate(
+            [(cur[0] | bits)[None], cur[1][None], block.reshape(-1)]
+        )
+        return results.at[slot].set(jnp.where(live, newrow, cur))
+
+    return IFunc.build(
+        name=name,
+        fn=entry,
+        payload_aval=jax.ShapeDtypeStruct((3 + K + K * D,), I32),
+        dep_avals=(jax.ShapeDtypeStruct((max_slots, 2 + K * D), I32),),
+        deps=(f"region:{region}",),
         abi="update",
         targets=targets,
         kind=kind,

@@ -147,6 +147,8 @@ def _build_cell(arch: str, shape_name: str, mesh_kind: str, opts) -> dict:
 
     mem = compiled.memory_analysis()
     xla_cost = compiled.cost_analysis() or {}
+    if isinstance(xla_cost, (list, tuple)):  # older JAX: one dict per device
+        xla_cost = xla_cost[0] if xla_cost else {}
     text = compiled.as_text()
     hc = analyze_hlo(text)
     mf = model_flops_per_step(cfg, spec.kind, step_tokens)

@@ -18,6 +18,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map as compat_shard_map
+
 from .common import softcap
 
 NEG = -2.0**30  # mask value safe in bf16/f32
@@ -166,7 +168,7 @@ def attend_sp(
             return attend_chunked(q_l, k_full, v_full, chunk=c, **kw)
         return attend(q_l, k_full, v_full, **kw)
 
-    return jax.shard_map(
+    return compat_shard_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -178,7 +180,6 @@ def attend_sp(
             P(),
         ),
         out_specs=P(bspec, axis, None, None),
-        check_vma=False,
     )(q, k, v, q_pos, k_pos, win)
 
 

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map as compat_shard_map
+
 
 def embed_plain(table: jax.Array, ids: jax.Array) -> jax.Array:
     """Single-device / smoke-test path."""
@@ -80,12 +82,11 @@ def embed_c2d(
         return jax.lax.psum(part, vocab_axis)
 
     b = tuple(batch_axes) if batch_axes else None
-    return jax.shard_map(
+    return compat_shard_map(
         local_lookup,
         mesh=mesh,
         in_specs=(P(vocab_axis, None), P(b, None)),
         out_specs=P(b, None, None),
-        check_vma=False,
     )(table, ids)
 
 

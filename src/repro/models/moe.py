@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map as compat_shard_map
+
 
 def moe_capacity(n_tokens: int, n_experts: int, topk: int, factor: float = 1.25) -> int:
     c = int(n_tokens * topk * factor / n_experts)
@@ -195,7 +197,7 @@ def moe_block_a2a(
             aux = jax.lax.pmean(aux, ax)
         return y.reshape(bl, sl, d), aux
 
-    y, aux = jax.shard_map(
+    y, aux = compat_shard_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -206,7 +208,6 @@ def moe_block_a2a(
             P(ep_axis, None, None),
         ),
         out_specs=(P(b_spec, ep_axis, None), P()),
-        check_vma=False,
     )(x, w_router, wi, wg, wo)
     return y, aux
 
@@ -246,7 +247,7 @@ def _moe_eplocal(x, w_router, wi, wg, wo, topk, mesh, ep_axis, b_spec):
         aux = jax.lax.pmean(aux, ep_axis)
         return y.reshape(bl, sl, d), aux
 
-    y, aux = jax.shard_map(
+    y, aux = compat_shard_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -257,7 +258,6 @@ def _moe_eplocal(x, w_router, wi, wg, wo, topk, mesh, ep_axis, b_spec):
             P(ep_axis, None, None),
         ),
         out_specs=(P(b_spec, None, None), P()),
-        check_vma=False,
     )(x, w_router, wi, wg, wo)
     return y, aux
 

@@ -1,10 +1,14 @@
 """Fault-tolerant distributed runtime: heartbeats, stragglers, elastic
 restart-from-checkpoint."""
 
+from .embed_service import EmbedShardService, GatherReport, GatherRequest
 from .monitor import HeartbeatMonitor, StepTimer, StragglerPolicy
 from .driver import TrainDriver, TrainReport
 
 __all__ = [
+    "EmbedShardService",
+    "GatherReport",
+    "GatherRequest",
     "HeartbeatMonitor",
     "StepTimer",
     "StragglerPolicy",

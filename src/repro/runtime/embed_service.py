@@ -1,0 +1,277 @@
+"""Embedding-shard serving over the X-RDMA Gather substrate.
+
+The serving shape DOLMA calls data-object-level disaggregation: a large
+embedding (or KV) table lives row-sharded across server PEs, and clients
+stream small key-batches at it.  The move-data-to-compute baseline GETs
+every row individually (one RDMA round trip per key); the X-RDMA path
+ships the Gatherer once, then each request is one tiny key-frame to the
+first owner, partial resolution next to every shard it touches, and
+partial RETURNs racing back into the requester's completion queue.
+
+:class:`EmbedShardService` is the continuous-batching scheduler for that
+substrate, shaped like :class:`repro.runtime.serving.ServeScheduler`:
+requests queue, admit into free completion-queue slots as others retire,
+and many gathers overlay in flight.  Under ``batching=True`` the whole
+pipeline rides PR 1's coalesced-frame / single-dispatch runtime: one PUT
+per (destination, tick) carrying every key-frame, one XLA dispatch per
+(PE, tick) resolving every arrived request, one masked-scan dispatch
+folding every partial RETURN into the queue region.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import Cluster, CompletionQueue, GatherFuture
+from repro.core.xrdma import make_gather_return, make_gatherer
+
+
+def ragged_batches(
+    vocab: int, n_requests: int, n_keys: int, seed: int
+) -> list[np.ndarray]:
+    """The canonical request mix for benchmarks/tests/examples: ``n_requests``
+    batches of 1..``n_keys`` uniform-random row ids (one shared definition so
+    every consumer exercises the same workload shape)."""
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(0, vocab, rng.integers(1, n_keys + 1)).astype(np.int32)
+        for _ in range(n_requests)
+    ]
+
+
+@dataclass
+class GatherRequest:
+    rid: int
+    keys: np.ndarray  # (n,) int32 real keys, n <= n_keys
+    rows: np.ndarray | None = None  # (n, D) float32 result
+    future: GatherFuture | None = None
+    done: bool = False
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclass
+class GatherReport:
+    """Per-run accounting, the gather sibling of ChaseReport."""
+
+    results: list[np.ndarray]
+    rounds: int
+    puts: int
+    gets: int
+    put_bytes: int
+    get_bytes: int
+    modeled_us: float
+    invokes: int = 0  # XLA dispatches across all PEs (batched dispatch = 1)
+    coalesced_frames: int = 0
+    coalesced_payloads: int = 0
+
+    @property
+    def network_ops(self) -> int:
+        """Wire operations: PUTs + GET round-trips (what batching amortizes)."""
+        return self.puts + self.gets
+
+
+class EmbedShardService:
+    """Continuous-batching embedding-shard service on a PE cluster."""
+
+    def __init__(
+        self,
+        cluster: Cluster,
+        vocab: int,
+        dim: int,
+        n_keys: int = 8,
+        max_slots: int = 64,
+        seed: int = 0,
+        table: np.ndarray | None = None,
+    ) -> None:
+        if vocab % cluster.n_servers:
+            raise ValueError("vocab must divide evenly across servers")
+        self.cluster = cluster
+        self.vocab = vocab
+        self.dim = dim
+        self.n_keys = n_keys
+        self.max_slots = max_slots
+        self.rows_per_shard = vocab // cluster.n_servers
+        if table is None:
+            rng = np.random.default_rng(seed)
+            table = rng.standard_normal((vocab, dim)).astype(np.float32)
+        self.table = np.asarray(table, np.float32)
+        assert self.table.shape == (vocab, dim)
+        # shards + metadata to the servers (rows stay put forever after)
+        for i, pe in enumerate(cluster.servers):
+            lo = i * self.rows_per_shard
+            pe.register_region(
+                "embed_shard", self.table[lo : lo + self.rows_per_shard].copy()
+            )
+            pe.register_cap(
+                "gather_meta",
+                np.array([i, self.rows_per_shard, cluster.n_servers], np.int32),
+            )
+        # toolchain artifacts (code travels on first contact, then caches)
+        cluster.toolchain.publish(
+            make_gatherer(self.rows_per_shard, cluster.n_servers, n_keys, dim)
+        )
+        cluster.toolchain.publish(make_gather_return(max_slots, n_keys, dim))
+        self.cq = CompletionQueue(
+            cluster.client, shape=(n_keys, dim), dtype=np.float32,
+            max_slots=max_slots,
+        )
+        self.queue: deque[GatherRequest] = deque()
+        self.active: dict[int, GatherRequest] = {}  # slot -> request
+        self.finished: list[GatherRequest] = []
+        self._next_rid = 0
+        self.batching = False
+
+    # ------------------------------------------------------------------ util
+    def owner(self, key: int) -> int:
+        return int(key) // self.rows_per_shard
+
+    def _pad(self, keys: np.ndarray) -> np.ndarray:
+        padded = np.full(self.n_keys, -1, np.int32)
+        padded[: len(keys)] = keys
+        return padded
+
+    # ------------------------------------------------------------------- API
+    def submit(self, keys: np.ndarray) -> int:
+        """Queue one gather request (a batch of up to ``n_keys`` row ids)."""
+        keys = np.asarray(keys, np.int32)
+        if not (1 <= len(keys) <= self.n_keys):
+            raise ValueError(f"request must carry 1..{self.n_keys} keys")
+        if keys.min() < 0 or keys.max() >= self.vocab:
+            raise ValueError("key out of table range")
+        req = GatherRequest(self._next_rid, keys, t_submit=time.perf_counter())
+        self._next_rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    def _admit(self) -> int:
+        admitted = 0
+        while self.queue and self.cq.free_slots:
+            req = self.queue.popleft()
+            fut = self.cluster.client.submit(
+                f"server{self.owner(req.keys[0])}",
+                "gatherer",
+                self._pad(req.keys),
+                self.cq,
+                expected=len(req.keys),
+            )
+            req.future = fut
+            self.active[fut.slot] = req
+            admitted += 1
+        return admitted
+
+    def _retire(self) -> int:
+        retired = 0
+        for slot, req in list(self.active.items()):
+            assert req.future is not None
+            if req.future.done():
+                req.rows = req.future.result()[: len(req.keys)]
+                req.done = True
+                req.t_done = time.perf_counter()
+                self.finished.append(req)
+                del self.active[slot]
+                retired += 1
+        return retired
+
+    def tick(self) -> int:
+        """One scheduler round: admit -> flush -> poll every PE -> retire.
+        Returns a progress count (admissions + polled messages + retires)."""
+        progress = self._admit()
+        if self.batching:
+            self.cluster.client.flush()
+        for pe in self.cluster.alive_pes():
+            progress += pe.poll()
+        progress += self._retire()
+        return progress
+
+    def run(self, max_rounds: int = 1_000_000) -> int:
+        """Drive ticks until every queued/active request finished; returns
+        the number of rounds.  Raises TimeoutError if the cluster goes idle
+        with work outstanding (a lost frame — the fault-injection tests'
+        detection path)."""
+        rounds = idle = 0
+        while self.queue or self.active:
+            if self.tick():
+                idle = 0
+            else:
+                idle += 1
+                if idle > 2:
+                    raise TimeoutError("service idle but requests outstanding")
+            rounds += 1
+            if rounds > max_rounds:
+                raise TimeoutError("max_rounds exceeded")
+        return rounds
+
+    # ------------------------------------------------- measured entry points
+    def _invokes(self) -> int:
+        return sum(pe.stats.invokes for pe in self.cluster.pes())
+
+    def _report(
+        self, results: list[np.ndarray], rounds: int, invokes0: int
+    ) -> GatherReport:
+        st = self.cluster.fabric.stats
+        return GatherReport(
+            results=results,
+            rounds=rounds,
+            puts=st.puts,
+            gets=st.gets,
+            put_bytes=st.put_bytes,
+            get_bytes=st.get_bytes,
+            modeled_us=st.modeled_us,
+            invokes=self._invokes() - invokes0,
+            coalesced_frames=st.coalesced_frames,
+            coalesced_payloads=st.coalesced_payloads,
+        )
+
+    def gather(
+        self, key_batches: list[np.ndarray], batching: bool = False
+    ) -> GatherReport:
+        """Submit a burst of requests, run to completion, report results in
+        submission order plus wire/dispatch accounting for this run only."""
+        self.cluster.fabric.stats.reset()
+        invokes0 = self._invokes()
+        n0 = len(self.finished)
+        self.cluster.set_batching(batching)
+        self.batching = batching
+        try:
+            rids = [self.submit(k) for k in key_batches]
+            rounds = self.run()
+        finally:
+            self.batching = False
+            self.cluster.set_batching(False)
+        # consume this burst's retirements: a long-running service must not
+        # accumulate result rows for requests already handed back
+        done_now, self.finished = self.finished[n0:], self.finished[:n0]
+        by_rid = {r.rid: r for r in done_now}
+        results = [by_rid[rid].rows for rid in rids]
+        return self._report(results, rounds, invokes0)
+
+    def gather_get(self, key_batches: list[np.ndarray]) -> GatherReport:
+        """The move-data-to-compute baseline: one one-sided GET round trip
+        per row, client does all the work (the gather sibling of GBPC)."""
+        self.cluster.fabric.stats.reset()
+        invokes0 = self._invokes()
+        fabric = self.cluster.fabric
+        client = self.cluster.client
+        row_bytes = self.dim * 4
+        results = []
+        for keys in key_batches:
+            keys = np.asarray(keys, np.int32)
+            rows = np.empty((len(keys), self.dim), np.float32)
+            for j, key in enumerate(keys):
+                srv = self.owner(key)
+                off = (int(key) - srv * self.rows_per_shard) * row_bytes
+                data = fabric.get(
+                    client.name, f"server{srv}", "embed_shard", off, row_bytes
+                )
+                rows[j] = np.frombuffer(data, np.float32)
+            results.append(rows)
+        return self._report(results, rounds=0, invokes0=invokes0)
+
+    def oracle(self, key_batches: list[np.ndarray]) -> list[np.ndarray]:
+        """Numpy take-based oracle for any gather implementation."""
+        return [self.table[np.asarray(k, np.int32)] for k in key_batches]

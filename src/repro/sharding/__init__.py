@@ -1,6 +1,13 @@
 """Distribution layer: logical-axis partition rules, compute-to-data
 collective programs, and distributed-optimization collectives."""
 
+from .compute_to_data import (
+    chase_oracle,
+    dapc_shard_map,
+    gather_ref,
+    gather_shard_map,
+    gbpc_reference,
+)
 from .partition import (
     DATA_AXES,
     batch_shardings,
@@ -16,6 +23,11 @@ from .partition import (
 __all__ = [
     "DATA_AXES",
     "batch_shardings",
+    "chase_oracle",
+    "dapc_shard_map",
+    "gather_ref",
+    "gather_shard_map",
+    "gbpc_reference",
     "cache_shardings",
     "data_axes",
     "divisible",

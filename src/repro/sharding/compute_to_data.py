@@ -24,11 +24,11 @@ on TPU (kernels/chase); here the reference uses masked takes.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map as _shard_map
 
 
 def dapc_shard_map(
@@ -67,13 +67,59 @@ def dapc_shard_map(
         out, _ = jax.lax.scan(hop, frontier, None, length=depth)
         return out
 
-    return jax.shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(axis), P()),
-        out_specs=P(),
-        check_vma=False,
+    return _shard_map(
+        local, mesh=mesh, in_specs=(P(axis), P()), out_specs=P()
     )(table, starts)
+
+
+def gather_shard_map(
+    table: jax.Array,  # (V, D) embedding rows, sharded over ``axis``
+    keys: jax.Array,  # (B,) int32 global row ids, replicated
+    mesh: Mesh,
+    axis: str = "model",
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    """Steady-state X-RDMA Gather as a collective program (the serving-shape
+    sibling of :func:`dapc_shard_map`).
+
+    Each shard resolves the keys it owns — the Pallas ``embed_lookup``
+    one-hot-MXU kernel on TPU, the masked-take reference elsewhere — and
+    contributes zero rows for the rest; the psum is the Gatherer's partial
+    RETURNs meeting in the requester's completion slot.  Wire bytes per
+    key: one D-row (times the collective factor) — the table never moves,
+    exactly the runtime rendering's byte accounting.
+    """
+    v = table.shape[0]
+    shards = mesh.shape[axis]
+    assert v % shards == 0
+    local_v = v // shards
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+
+    def local(table_l: jax.Array, ks: jax.Array) -> jax.Array:
+        me = jax.lax.axis_index(axis)
+        lo = (me * local_v).astype(jnp.int32)
+        if use_pallas:
+            from repro.kernels.embed_lookup.kernel import embed_lookup
+
+            part = embed_lookup(table_l, ks, lo)
+        else:
+            from repro.kernels.embed_lookup.ref import embed_lookup_ref
+
+            part = embed_lookup_ref(table_l, ks, lo)
+        # partial RETURN: rows psum to the requester, zeros elsewhere
+        return jax.lax.psum(part, axis)
+
+    return _shard_map(
+        local, mesh=mesh, in_specs=(P(axis), P()), out_specs=P()
+    )(table, keys)
+
+
+def gather_ref(table, keys):
+    """Pure numpy oracle: a plain row take."""
+    import numpy as np
+
+    return np.asarray(table)[np.asarray(keys)]
 
 
 def gbpc_reference(

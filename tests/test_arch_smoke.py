@@ -19,6 +19,10 @@ from repro.models.zoo import (
 )
 from repro.optim import AdamW
 
+# whole-module slow marker: one train step per assigned architecture is
+# minutes of XLA compiles — full CI lane only
+pytestmark = pytest.mark.slow
+
 TRAIN = ShapeSpec("t", 64, 2, "train")
 PREFILL = ShapeSpec("p", 32, 2, "prefill")
 

@@ -72,6 +72,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.sharding.collectives import compressed_psum_with_feedback
 mesh = jax.make_mesh((8,), ("pod",))
 rng = np.random.default_rng(1)
@@ -82,9 +83,8 @@ def body(g_l, e_l):
     out, new_e = compressed_psum_with_feedback(g_l[0], e_l[0], "pod")
     return out[None], new_e[None]
 
-out, new_err = jax.jit(jax.shard_map(body, mesh=mesh,
-    in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod")),
-    check_vma=False))(g, err)
+out, new_err = jax.jit(shard_map(body, mesh=mesh,
+    in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod"))))(g, err)
 exact = np.asarray(jnp.sum(g, 0))
 got = np.asarray(out[0])
 rel = float(np.abs(got - exact).max() / (np.abs(exact).max() + 1e-9))

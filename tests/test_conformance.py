@@ -1,0 +1,55 @@
+"""Cross-mode conformance: ONE parametrized oracle check for every DAPC
+execution mode (replacing the ad-hoc per-mode checks that used to live in
+test_pointer_chase.py).
+
+The contract: ``dapc`` over {bitcode, binary, am} x {batching on, off} x
+3 seeds is bit-identical to the numpy ``chase_ref`` oracle, and ``gbpc``
+(the RDMA-GET baseline) agrees — same table, same starts, same depths.
+One cluster per (mode-independent) seed so every mode/batching cell is
+compared on identical state.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Cluster, PointerChaseApp, chase_ref
+
+I32 = np.int32
+
+SEEDS = (0, 1, 2)
+DEPTHS = (1, 7, 64)
+
+
+@pytest.fixture(scope="module", params=SEEDS, ids=lambda s: f"seed{s}")
+def seeded_app(request):
+    """One 4-server cluster + sharded table per seed, shared by every
+    mode/batching cell (conformance must hold on the same state)."""
+    seed = request.param
+    cluster = Cluster(n_servers=4, wire="ideal")
+    app = PointerChaseApp(cluster, n_entries=512, max_slots=16, seed=seed)
+    rng = np.random.default_rng(seed + 100)
+    starts = rng.integers(0, app.n_entries, 8).astype(I32)
+    want = {
+        d: np.array([chase_ref(app.table, s, d) for s in starts], I32)
+        for d in DEPTHS
+    }
+    return app, starts, want
+
+
+@pytest.mark.parametrize("batching", [False, True], ids=["permsg", "batched"])
+@pytest.mark.parametrize("mode", ["bitcode", "binary", "am"])
+def test_dapc_conformance(seeded_app, mode, batching):
+    app, starts, want = seeded_app
+    for depth in DEPTHS:
+        rep = app.dapc(starts, depth, mode=mode, batching=batching)
+        np.testing.assert_array_equal(
+            rep.results, want[depth],
+            err_msg=f"mode={mode} batching={batching} depth={depth}",
+        )
+
+
+def test_gbpc_agrees(seeded_app):
+    app, starts, want = seeded_app
+    for depth in DEPTHS:
+        rep = app.gbpc(starts, depth)
+        np.testing.assert_array_equal(rep.results, want[depth])

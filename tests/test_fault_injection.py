@@ -1,0 +1,219 @@
+"""Fault-injection schedules against the transport/runtime boundary.
+
+PR 1's error-containment contract: a bad frame (or a bad payload inside a
+drained batch) must never wedge ``PE.poll`` and must never take healthy
+frames down with it — every healthy frame/group still retires, then the
+first error surfaces loudly.  These tests drive that contract under the
+schedules a real fabric produces: dropped, duplicated, and reordered
+frames, and mid-batch corruption.
+
+The injection point is the endpoint inbox (the receive buffer a one-sided
+PUT lands in): dropping/duplicating/reordering entries there is exactly a
+lossy/racy wire without faking anything above the transport.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Cluster,
+    CorruptFrame,
+    ProtocolError,
+    make_tsi,
+)
+from repro.core.frame import MAGIC
+from repro.runtime.embed_service import EmbedShardService
+
+I32 = np.int32
+
+
+def tsi_pair():
+    from repro.core.ifunc import PE, Toolchain
+    from repro.core.transport import Fabric
+
+    fabric = Fabric("ideal")
+    tc = Toolchain()
+    names = ["server0", "client"]
+    server = PE("server0", fabric, triple="cpu-bf2", toolchain=tc, peers=names)
+    client = PE("client", fabric, triple="cpu-host", toolchain=tc, peers=names)
+    server.register_region("counter", np.zeros(1, I32))
+    client.register_source(make_tsi())
+    return fabric, client, server
+
+
+class TestDrop:
+    def test_dropped_frame_loses_only_itself(self):
+        """Drop the middle of three in-flight TSIs: the other two retire,
+        poll returns cleanly (loss is detected by idleness, not a wedge)."""
+        fabric, client, server = tsi_pair()
+        for v in (10, 20, 30):
+            client.send_ifunc("server0", "tsi", np.array([v], I32))
+        inbox = server.endpoint.inbox
+        assert len(inbox) == 3
+        del inbox[1]  # the wire ate frame #2
+        assert server.poll() == 2
+        assert server.region("counter")[0] == 40
+
+    def test_dropped_gather_frame_detected_not_hung(self):
+        """A dropped key-frame means one request can never complete: the
+        service must raise TimeoutError (idle detection), not spin, and
+        the un-dropped requests must already have completed."""
+        cl = Cluster(n_servers=2, wire="ideal")
+        svc = EmbedShardService(cl, vocab=64, dim=4, n_keys=4, max_slots=8)
+        svc.gather([np.array([1], I32)])  # warm code caches
+        rids = [svc.submit(np.array([k], I32)) for k in (3, 40, 7)]
+        svc._admit()
+        # eat the key-frame parked at server1 (owner of key 40)
+        assert len(cl.servers[1].endpoint.inbox) == 1
+        cl.servers[1].endpoint.inbox.clear()
+        with pytest.raises(TimeoutError):
+            svc.run()
+        done = {r.rid for r in svc.finished}
+        assert rids[0] in done and rids[2] in done and rids[1] not in done
+
+
+class TestDuplicate:
+    def test_duplicated_frame_is_at_least_once(self):
+        """The fabric re-delivering a frame must not error or stall —
+        one-sided PUT semantics are at-least-once; the payload re-runs."""
+        fabric, client, server = tsi_pair()
+        client.send_ifunc("server0", "tsi", np.array([5], I32))
+        inbox = server.endpoint.inbox
+        inbox.append(bytearray(inbox[0]))  # duplicate delivery
+        assert server.poll() == 2
+        assert server.region("counter")[0] == 10
+
+    def test_duplicated_gather_return_is_idempotent_on_rows(self):
+        """A duplicated partial RETURN ORs position bits already set and
+        scatters the SAME rows to the SAME positions — exactly idempotent,
+        results bit-identical.  (The early-completion variant of this
+        schedule is test_gather.py::test_duplicate_partial_return_cannot_
+        complete_early.)"""
+        cl = Cluster(n_servers=2, wire="ideal")
+        svc = EmbedShardService(cl, vocab=64, dim=4, n_keys=4, max_slots=8)
+        keys = np.array([3, 40], I32)  # spans both shards
+        svc.gather([keys])  # warm
+        fut = cl.client.submit("server0", "gatherer", svc._pad(keys), svc.cq,
+                               expected=len(keys))
+        # let the servers resolve; duplicate whatever lands at the client
+        for _ in range(4):
+            for pe in cl.pes():
+                pe.poll()
+            inbox = cl.client.endpoint.inbox
+            for buf in list(inbox):
+                inbox.append(bytearray(buf))
+        cl.run_until(fut.done)
+        np.testing.assert_array_equal(fut.result()[: len(keys)], svc.table[keys])
+
+
+class TestReorder:
+    def test_reordered_frames_commute(self):
+        """TSI is commutative and gather RETURNs are slot/position-addressed:
+        any delivery order of steady-state (code-cached) frames produces
+        the same state."""
+        fabric, client, server = tsi_pair()
+        client.send_ifunc("server0", "tsi", np.array([100], I32))
+        server.poll()  # code installed; everything later is payload-only
+        for v in (1, 2, 3, 4):
+            client.send_ifunc("server0", "tsi", np.array([v], I32))
+        server.endpoint.inbox.rotate(2)  # adversarial reordering
+        server.poll()
+        assert server.region("counter")[0] == 110
+
+    def test_code_frame_reordered_behind_its_payloads_is_loud(self):
+        """The one reordering the protocol cannot absorb: a truncated
+        frame arriving before the code it refers to.  The receiver must
+        refuse loudly (ProtocolError) — and still retire the code frame
+        and every later payload (error containment, batched path)."""
+        fabric, client, server = tsi_pair()
+        server.batching = True
+        for v in (1, 2, 3):
+            client.send_ifunc("server0", "tsi", np.array([v], I32))
+        server.endpoint.inbox.rotate(1)  # code frame now arrives last
+        with pytest.raises(ProtocolError, match="stale sender cache"):
+            server.poll()
+        # the code-carrying frame (v=1) and the frame behind it (v=2)
+        # both retired; only the too-early truncated v=3 was refused
+        assert server.region("counter")[0] == 3
+
+    def test_reordered_gather_returns_match_oracle(self):
+        cl = Cluster(n_servers=4, wire="ideal")
+        svc = EmbedShardService(cl, vocab=64, dim=4, n_keys=4, max_slots=8)
+        rng = np.random.default_rng(0)
+        batches = [rng.integers(0, 64, 4).astype(I32) for _ in range(6)]
+        svc.gather(batches)  # warm
+        futs = []
+        for keys in batches:
+            f = cl.client.submit(f"server{svc.owner(keys[0])}", "gatherer",
+                                 svc._pad(keys), svc.cq, expected=len(keys))
+            f.meta = keys
+            futs.append(f)
+        rounds = 0
+        while not all(f.done() for f in futs):
+            for pe in cl.pes():
+                pe.endpoint.inbox.rotate(1)  # shuffle every queue, every round
+                pe.poll()
+            rounds += 1
+            assert rounds < 100
+        for f in futs:
+            np.testing.assert_array_equal(f.result()[: len(f.meta)],
+                                          svc.table[f.meta])
+
+
+class TestCorruption:
+    def test_corrupt_frame_mid_batch_contained(self):
+        """Batched poll: [healthy, corrupt, healthy] — both healthy frames
+        retire, THEN the corruption surfaces as a ProtocolError."""
+        fabric, client, server = tsi_pair()
+        server.batching = True
+        client.send_ifunc("server0", "tsi", np.array([7], I32))
+        client.send_ifunc("server0", "tsi", np.array([2], I32))
+        client.send_ifunc("server0", "tsi", np.array([4], I32))
+        inbox = server.endpoint.inbox
+        mid = inbox[1]
+        mid[mid.index(MAGIC)] ^= 0xFF  # smash the payload sentinel
+        with pytest.raises(ProtocolError):
+            server.poll()
+        assert server.region("counter")[0] == 11  # 7 + 4 ran
+
+    def test_corrupt_batch_subheader_contained(self):
+        """A coalesced frame whose batch sub-header disagrees with its
+        payload section is rejected without discarding its batch-mates."""
+        fabric, client, server = tsi_pair()
+        client.batching = server.batching = True
+        for v in (1, 2, 3):
+            client.send_ifunc("server0", "tsi", np.array([v], I32))
+        client.flush()
+        client.send_ifunc("server0", "tsi", np.array([10], I32))
+        client.flush()
+        inbox = server.endpoint.inbox
+        assert len(inbox) == 2
+        # inflate the coalesced frame's payload count field
+        hdr_end = inbox[0].index(b"tsi") + 3
+        inbox[0][hdr_end] = 200  # count u32 LSB: 3 -> 200
+        with pytest.raises(ProtocolError):
+            server.poll()
+        assert server.region("counter")[0] == 10  # the healthy single ran
+
+    def test_garbage_delivery_then_healthy_traffic(self):
+        """Pure garbage on the wire: the per-message poll surfaces it and
+        the NEXT poll retires the healthy traffic behind it."""
+        fabric, client, server = tsi_pair()
+        fabric.put("client", "server0", b"\xde\xad\xbe\xef" * 16)
+        client.send_ifunc("server0", "tsi", np.array([9], I32))
+        with pytest.raises(CorruptFrame):
+            server.poll()
+        assert server.poll() == 1
+        assert server.region("counter")[0] == 9
+
+    def test_garbage_in_batched_poll_contained(self):
+        """Batched poll: garbage plus two healthy frames — both retire in
+        the same poll, then the error is re-raised."""
+        fabric, client, server = tsi_pair()
+        server.batching = True
+        client.send_ifunc("server0", "tsi", np.array([3], I32))
+        fabric.put("client", "server0", b"\x00" * 80)
+        client.send_ifunc("server0", "tsi", np.array([6], I32))
+        with pytest.raises(ProtocolError):
+            server.poll()
+        assert server.region("counter")[0] == 9

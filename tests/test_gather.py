@@ -1,0 +1,323 @@
+"""X-RDMA Gather: conformance, completion queue, multi-action ABI.
+
+Acceptance surface:
+* gather results bit-identical to the numpy take oracle across shard
+  counts {1, 4, 8} and both batching modes (ragged key batches included);
+* out-of-order RETURN matching by slot — many gathers overlapped in
+  flight, partial results from different shards interleaving;
+* the batched path amortizes: fewer network ops and lower modeled wire
+  time than the GET-per-row baseline at scale.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    A_FORWARD,
+    A_NOP,
+    A_RETURN,
+    Cluster,
+    CompletionQueue,
+    make_gather_return,
+    make_gatherer,
+)
+from repro.runtime.embed_service import EmbedShardService, ragged_batches
+
+I32 = np.int32
+
+
+def make_service(n_servers, vocab=256, dim=16, n_keys=8, max_slots=32, seed=3):
+    cl = Cluster(n_servers=n_servers, wire="ideal")
+    return EmbedShardService(
+        cl, vocab=vocab, dim=dim, n_keys=n_keys, max_slots=max_slots, seed=seed
+    )
+
+
+# ----------------------------------------------------------- conformance
+class TestGatherConformance:
+    @pytest.mark.parametrize("batching", [False, True])
+    @pytest.mark.parametrize("n_servers", [1, 4, 8])
+    def test_bit_identical_to_take_oracle(self, n_servers, batching):
+        svc = make_service(n_servers)
+        batches = ragged_batches(svc.vocab, 24, svc.n_keys, seed=11)
+        rep = svc.gather(batches, batching=batching)
+        for got, want in zip(rep.results, svc.oracle(batches)):
+            np.testing.assert_array_equal(got, want)
+
+    def test_single_key_and_full_batch(self):
+        svc = make_service(4)
+        batches = [np.array([5], I32), np.arange(8, dtype=I32) * 31 % svc.vocab]
+        rep = svc.gather(batches)
+        for got, want in zip(rep.results, svc.oracle(batches)):
+            np.testing.assert_array_equal(got, want)
+
+    def test_duplicate_keys_in_one_request(self):
+        svc = make_service(4)
+        batches = [np.array([7, 7, 200, 7], I32)]
+        rep = svc.gather(batches)
+        np.testing.assert_array_equal(rep.results[0], svc.table[[7, 7, 200, 7]])
+
+    def test_key_validation(self):
+        svc = make_service(4)
+        with pytest.raises(ValueError, match="range"):
+            svc.submit(np.array([svc.vocab], I32))
+        with pytest.raises(ValueError, match="range"):
+            svc.submit(np.array([-1], I32))
+        with pytest.raises(ValueError, match="keys"):
+            svc.submit(np.arange(svc.n_keys + 1, dtype=I32))
+
+    def test_forward_only_on_locality_breaks(self):
+        """A request whose keys all live on the first owner costs zero
+        FORWARDs; a request spanning m shards costs <= m-1 forward PUTs
+        plus m returns (the Chaser contract, serving-shaped)."""
+        svc = make_service(4)
+        local = np.arange(4, dtype=I32)  # all on server0
+        svc.gather([local])  # warm code caches
+        rep = svc.gather([local])
+        assert sum(pe.stats.forwards for pe in svc.cluster.servers) == 0
+        assert rep.puts == 2  # inject + one RETURN
+
+
+# ------------------------------------------------- completion queue layer
+class TestCompletionQueue:
+    def test_out_of_order_interleaved_returns(self):
+        """Many gathers in flight; every request's keys span every shard,
+        so partial RETURNs from 4 servers interleave across 16 slots and
+        must land in their own slots."""
+        svc = make_service(4, max_slots=16)
+        rng = np.random.default_rng(0)
+        batches = [
+            np.array(
+                [s * svc.rows_per_shard + rng.integers(svc.rows_per_shard)
+                 for s in range(4)] * 2,
+                I32,
+            )
+            for _ in range(16)
+        ]
+        rep = svc.gather(batches, batching=True)
+        for got, want in zip(rep.results, svc.oracle(batches)):
+            np.testing.assert_array_equal(got, want)
+
+    def test_slots_recycle_under_continuous_batching(self):
+        """3x more requests than slots: admission waits for retirements,
+        everything completes, all slots return to the free list."""
+        svc = make_service(4, max_slots=8)
+        batches = ragged_batches(svc.vocab, 24, svc.n_keys, seed=5)
+        rep = svc.gather(batches)
+        assert svc.cq.free_slots == 8
+        for got, want in zip(rep.results, svc.oracle(batches)):
+            np.testing.assert_array_equal(got, want)
+
+    def test_queue_full_raises(self):
+        cl = Cluster(n_servers=1, wire="ideal")
+        svc = EmbedShardService(cl, vocab=64, dim=4, n_keys=4, max_slots=2)
+        cl.toolchain.lookup("gatherer")  # artifacts exist
+        cl.client.submit("server0", "gatherer", svc._pad(np.array([1], I32)),
+                         svc.cq, expected=1)
+        cl.client.submit("server0", "gatherer", svc._pad(np.array([2], I32)),
+                         svc.cq, expected=1)
+        with pytest.raises(RuntimeError, match="full"):
+            cl.client.submit("server0", "gatherer", svc._pad(np.array([3], I32)),
+                             svc.cq, expected=1)
+
+    def test_future_misuse_raises(self):
+        cl = Cluster(n_servers=1, wire="ideal")
+        svc = EmbedShardService(cl, vocab=64, dim=4, n_keys=4, max_slots=2)
+        fut = cl.client.submit("server0", "gatherer", svc._pad(np.array([3], I32)),
+                               svc.cq, expected=1)
+        with pytest.raises(RuntimeError, match="incomplete"):
+            fut.result()
+        cl.run_until(fut.done)
+        np.testing.assert_array_equal(fut.result()[0], svc.table[3])
+        with pytest.raises(RuntimeError, match="consumed"):
+            fut.result()
+
+
+# ------------------------------------------------------- multi-action ABI
+class TestMultiActionABI:
+    def test_action_matrix_shape_and_nops(self):
+        """The gatherer's traced action matrix: one potential FORWARD row
+        per server + one RETURN row; NOP rows where nothing goes."""
+        import jax
+
+        S, rows_per, K, D = 4, 16, 4, 2
+        gat = make_gatherer(rows_per, S, K, D, targets=("cpu-host",))
+
+        exported = jax.export.deserialize(gat.fat.slices["cpu-host"])
+        table = np.arange(rows_per * D, dtype=np.float32).reshape(rows_per, D)
+        meta = np.array([0, rows_per, S], I32)
+        # hdr [requester=S, slot=0, epoch=7]; keys: one local (server0),
+        # one on server2, padding elsewhere
+        payload = np.array([S, 0, 7, 3, 2 * rows_per + 1, -1, -1], I32)
+        acts = np.asarray(exported.call(payload, table, meta))
+        assert acts.shape == (S + 1, 3 + 3 + K + K * D)
+        assert acts[0, 0] == A_NOP  # server0 keys were resolved locally
+        assert acts[1, 0] == A_NOP
+        assert acts[2, 0] == A_FORWARD and acts[2, 1] == 2
+        # forwarded hdr carries [requester, slot, epoch] verbatim ...
+        np.testing.assert_array_equal(acts[2, 3:6], [S, 0, 7])
+        # ... and keys preserve positions: pos 1 carries the remote key
+        fwd_keys = acts[2, 6 : 6 + K]
+        np.testing.assert_array_equal(fwd_keys, [-1, 2 * rows_per + 1, -1, -1])
+        ret = acts[S]
+        assert ret[0] == A_RETURN and ret[1] == S  # to the requester
+        assert ret[3] == 0 and ret[4] == 7  # slot + epoch echoed
+        assert ret[5] == 1  # nres: exactly the local key
+        # returned row 0 = table[3], bit-cast
+        row0 = ret[6 + K : 6 + K + D].view(np.float32)
+        np.testing.assert_array_equal(row0, table[3])
+
+    def test_gather_return_scatters_counts_and_drops_stale(self):
+        import jax
+
+        K, D, slots = 4, 2, 3
+        gr = make_gather_return(slots, K, D, targets=("cpu-host",))
+        exported = jax.export.deserialize(gr.fat.slices["cpu-host"])
+        results = np.zeros((slots, 2 + K * D), I32)
+        results[1, 1] = 7  # slot 1 is at generation 7
+        rows = np.zeros((K, D), np.float32)
+        rows[2] = [1.5, -2.5]
+        payload = np.concatenate(
+            [
+                np.array([1, 7, 1], I32),  # slot 1, epoch 7, one result
+                np.array([-1, -1, 2, -1], I32),  # only pos 2 valid
+                rows.view(I32).reshape(-1),
+            ]
+        )
+        out = np.asarray(exported.call(payload, results))
+        assert out[1, 0] == 1 << 2  # position bitmask, not a counter
+        assert out[0, 0] == out[2, 0] == 0
+        got = out[1, 2:].view(np.float32).reshape(K, D)
+        np.testing.assert_array_equal(got[2], rows[2])
+        assert not got[[0, 1, 3]].any()
+        # re-delivering the same partial is exactly idempotent (OR + same rows)
+        out_dup = np.asarray(exported.call(payload, out))
+        np.testing.assert_array_equal(out_dup, out)
+        # a stale-generation RETURN (epoch 6 != 7) is dropped whole
+        stale = payload.copy()
+        stale[1] = 6
+        out2 = np.asarray(exported.call(stale, out))
+        np.testing.assert_array_equal(out2, out)
+
+    def test_duplicate_partial_return_cannot_complete_early(self):
+        """The at-least-once hazard inside one generation: the wire
+        re-delivers shard A's partial RETURN before shard B's arrives.
+        A counter would hit `expected` and complete the future with B's
+        rows still zero; the position bitmask must not."""
+        cl = Cluster(n_servers=2, wire="ideal")
+        svc = EmbedShardService(cl, vocab=64, dim=4, n_keys=4, max_slots=2)
+        keys = np.array([3, 40], I32)  # spans both shards
+        svc.gather([keys])  # warm code caches everywhere
+        fut = cl.client.submit("server0", "gatherer", svc._pad(keys),
+                               svc.cq, expected=len(keys))
+        cl.servers[0].poll()  # server0: partial RETURN + FORWARD to server1
+        # duplicate server0's partial RETURN before server1 even runs
+        inbox = cl.client.endpoint.inbox
+        assert len(inbox) == 1
+        inbox.append(bytearray(inbox[0]))
+        cl.client.poll()
+        assert not fut.done()  # 1 distinct position arrived, not 2
+        cl.run_until(fut.done)  # server1's partial completes it
+        np.testing.assert_array_equal(fut.result()[: len(keys)], svc.table[keys])
+
+    def test_stale_return_after_slot_recycle_is_dropped(self):
+        """At-least-once hazard: a RETURN for a *retired* gather drained
+        after its slot was recycled must not scatter into (or complete)
+        the slot's new owner."""
+        cl = Cluster(n_servers=1, wire="ideal")
+        svc = EmbedShardService(cl, vocab=64, dim=4, n_keys=4, max_slots=1)
+        ka, kb = np.array([3], I32), np.array([40], I32)
+        fut_a = cl.client.submit("server0", "gatherer", svc._pad(ka),
+                                 svc.cq, expected=1)
+        cl.servers[0].poll()  # RETURN for A lands in the client inbox
+        stale = bytes(cl.client.endpoint.inbox[0])  # the wire re-delivers it later
+        cl.client.poll()
+        np.testing.assert_array_equal(fut_a.result()[0], svc.table[3])
+        # slot 0 recycles to request B (epoch bumps)
+        fut_b = cl.client.submit("server0", "gatherer", svc._pad(kb),
+                                 svc.cq, expected=1)
+        cl.client.endpoint.deliver(stale)  # late duplicate of A's RETURN
+        cl.client.poll()
+        assert not fut_b.done()  # stale epoch dropped: B is NOT spuriously done
+        cl.run_until(fut_b.done)
+        np.testing.assert_array_equal(fut_b.result()[0], svc.table[40])
+
+    def test_failed_send_does_not_leak_slot(self):
+        """A dead destination endpoint must not consume a completion-queue
+        slot: the slot frees, the error propagates, and later submits work."""
+        from repro.core import EndpointDead
+
+        cl = Cluster(n_servers=2, wire="ideal")
+        svc = EmbedShardService(cl, vocab=64, dim=4, n_keys=4, max_slots=2)
+        cl.fabric.kill("server1")
+        for _ in range(4):  # more failures than slots: would wedge if leaking
+            with pytest.raises(EndpointDead):
+                cl.client.submit("server1", "gatherer", svc._pad(np.array([40], I32)),
+                                 svc.cq, expected=1)
+        assert svc.cq.free_slots == 2
+        fut = cl.client.submit("server0", "gatherer", svc._pad(np.array([3], I32)),
+                               svc.cq, expected=1)
+        cl.run_until(fut.done)
+        np.testing.assert_array_equal(fut.result()[0], svc.table[3])
+
+    def test_cancel_recycles_slot_safely(self):
+        """cancel() on a lost-frame future frees its slot; the epoch guard
+        protects the recycled slot even if the lost gather's RETURN shows
+        up afterwards."""
+        cl = Cluster(n_servers=1, wire="ideal")
+        svc = EmbedShardService(cl, vocab=64, dim=4, n_keys=4, max_slots=1)
+        svc.gather([np.array([1], I32)])  # code caches warm on both sides
+        fut = cl.client.submit("server0", "gatherer", svc._pad(np.array([5], I32)),
+                               svc.cq, expected=1)
+        cl.servers[0].endpoint.inbox.clear()  # the wire ate the key-frame
+        fut.cancel()
+        fut.cancel()  # idempotent
+        assert svc.cq.free_slots == 1
+        fut2 = cl.client.submit("server0", "gatherer", svc._pad(np.array([6], I32)),
+                                svc.cq, expected=1)
+        cl.run_until(fut2.done)
+        np.testing.assert_array_equal(fut2.result()[0], svc.table[6])
+
+
+# --------------------------------------------------------- fat-bitcode
+class TestGathererToolchain:
+    def test_tpu_slice_carries_pallas_kernel(self):
+        """The per-platform toolchain: the gatherer's TPU bitcode slice is
+        lowered through the Pallas embed_lookup (Mosaic custom call), the
+        CPU slices through the masked-take reference — one op, per-ISA
+        bodies, same function."""
+        gat = make_gatherer(64, 4, 8, 16)
+        fat = gat.fat
+        assert "tpu-v5e" in fat.triples() and "cpu-host" in fat.triples()
+        tpu = fat.slices["tpu-v5e"]
+        assert b"tpu_custom_call" in tpu or b"Mosaic" in tpu
+        assert b"tpu_custom_call" not in fat.slices["cpu-host"]
+
+    def test_pallas_gate_falls_back_on_bad_blocking(self):
+        """A shard shape the kernel cannot block (v_loc > 512, not a
+        multiple of 512) still builds — portable entry in every slice."""
+        gat = make_gatherer(600, 2, 4, 8)
+        assert b"tpu_custom_call" not in gat.fat.slices["tpu-v5e"]
+
+
+# ----------------------------------------------------------- amortization
+class TestGatherAmortizes:
+    def test_batched_beats_get_per_row_at_scale(self):
+        """The acceptance numbers: >= 256 concurrent requests, 8 shards,
+        thor_xeon — batched X-RDMA must use fewer network dispatches and
+        lower modeled wire time than GET-per-row, bit-identically."""
+        cl = Cluster(n_servers=8, wire="thor_xeon")
+        svc = EmbedShardService(cl, vocab=1024, dim=16, n_keys=8, max_slots=64)
+        batches = ragged_batches(svc.vocab, 256, svc.n_keys, seed=1)
+        want = svc.oracle(batches)
+        svc.gather(batches, batching=True)  # warm code + pad buckets
+        get = svc.gather_get(batches)
+        bat = svc.gather(batches, batching=True)
+        for rep in (get, bat):
+            for got, w in zip(rep.results, want):
+                np.testing.assert_array_equal(got, w)
+        assert bat.network_ops < get.network_ops
+        assert bat.invokes < get.gets
+        assert bat.modeled_us < get.modeled_us
+        assert bat.coalesced_frames > 0
+        assert bat.coalesced_payloads > bat.coalesced_frames

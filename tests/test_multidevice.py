@@ -55,6 +55,13 @@ starts = rng.integers(0, n, 32).astype(np.int32)
 got = np.asarray(dapc_shard_map(jnp.asarray(table), jnp.asarray(starts), 17, mesh))
 results["dapc"] = int(np.sum(got != chase_oracle(table, starts, 17)))
 
+# ---- 3b. gather shard_map == take oracle (the serving-shape sibling)
+from repro.sharding.compute_to_data import gather_ref, gather_shard_map
+etab = jnp.asarray(rng.normal(0, 1, (512, 16)), jnp.float32)
+gkeys = rng.integers(0, 512, 64).astype(np.int32)
+ggot = np.asarray(gather_shard_map(etab, jnp.asarray(gkeys), mesh))
+results["gather"] = int(np.sum(ggot != gather_ref(etab, gkeys)))
+
 # ---- 4. sharded train step == single-device train step (loss + params)
 from repro.configs import get_config
 from repro.models.zoo import ShapeSpec, build_params, make_batch, make_train_step
@@ -136,6 +143,11 @@ def test_moe_a2a_matches_scatter(multidev_results):
 
 def test_dapc_shard_map_matches_oracle(multidev_results):
     assert multidev_results["dapc"] == 0
+
+
+def test_gather_shard_map_matches_oracle(multidev_results):
+    """8-way sharded gather_shard_map is bit-identical to the numpy take."""
+    assert multidev_results["gather"] == 0
 
 
 def test_sharded_train_step_matches_plain(multidev_results):

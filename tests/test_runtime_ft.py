@@ -31,6 +31,7 @@ def _driver(cfg, tmp, **kw):
     )
 
 
+@pytest.mark.slow
 def test_restart_replays_identically(tiny_cfg, tmp_path):
     clean = _driver(tiny_cfg, tmp_path / "a").run(12)
     faulty = _driver(tiny_cfg, tmp_path / "b").run(12, fail_at_step=8)
@@ -44,6 +45,7 @@ def test_restart_replays_identically(tiny_cfg, tmp_path):
     np.testing.assert_allclose(clean_by_step[5:12], faulty_tail, rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_resume_from_disk(tiny_cfg, tmp_path):
     d1 = _driver(tiny_cfg, tmp_path / "c")
     r1 = d1.run(10)
