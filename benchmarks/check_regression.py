@@ -1,0 +1,108 @@
+"""Perf-regression guard: fail the full CI lane if a freshly produced
+BENCH_*.json regresses >10% below the values committed at HEAD.
+
+Committed baselines are read from git (``git show HEAD:<file>``) so the
+fresh files the benchmark steps just (over)wrote in the worktree are never
+compared against themselves.  A fresh/committed config mismatch (different
+sweep sizes) skips that file loudly instead of comparing apples to pears.
+
+Guarded metrics — "higher is better" unless marked ``<``:
+
+  BENCH_dapc.json    dispatch_ratio, modeled_us_reduction_pct
+  BENCH_gather.json  dispatch_ratio, batched_vs_get_ops_ratio,
+                     batched_vs_get_modeled_pct,
+                     zerocopy_vs_batched_modeled_pct,
+                     zerocopy_vs_get_bytes_ratio (<)
+
+``python -m benchmarks.check_regression`` (run from the repo root after
+regenerating the BENCH files); exits non-zero on any regression.
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+
+TOLERANCE = 0.10  # >10% below (or above, for lower-is-better) committed fails
+
+#: file -> [(metric, higher_is_better)]
+GUARDS = {
+    "BENCH_dapc.json": [
+        ("dispatch_ratio", True),
+        ("modeled_us_reduction_pct", True),
+    ],
+    "BENCH_gather.json": [
+        ("dispatch_ratio", True),
+        ("batched_vs_get_ops_ratio", True),
+        ("batched_vs_get_modeled_pct", True),
+        ("zerocopy_vs_batched_modeled_pct", True),
+        ("zerocopy_vs_get_bytes_ratio", False),
+    ],
+}
+
+
+def committed(path: str) -> dict | None:
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{path}"], capture_output=True, check=True
+        ).stdout
+        return json.loads(out)
+    except (subprocess.CalledProcessError, FileNotFoundError, json.JSONDecodeError):
+        return None
+
+
+def check_file(path: str) -> list[str]:
+    failures: list[str] = []
+    base = committed(path)
+    if base is None:
+        print(f"[guard] {path}: no committed baseline at HEAD — skipping")
+        return failures
+    try:
+        with open(path) as f:
+            fresh = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: fresh file unreadable ({e})"]
+    if fresh.get("config") != base.get("config"):
+        print(
+            f"[guard] {path}: fresh config {fresh.get('config')} != committed "
+            f"{base.get('config')} — skipping (not comparable)"
+        )
+        return failures
+    if not fresh.get("oracle_checked"):
+        return [f"{path}: fresh run is not oracle_checked"]
+    for metric, higher_better in GUARDS[path]:
+        if metric not in base:
+            print(f"[guard] {path}: {metric} not in committed baseline — skipping")
+            continue
+        b, f = float(base[metric]), float(fresh.get(metric, float("nan")))
+        # widen the band away from the baseline by |b|*TOLERANCE so the
+        # check keeps its direction for negative committed values
+        if higher_better:
+            ok = f >= b - abs(b) * TOLERANCE
+            rel = "below"
+        else:
+            ok = f <= b + abs(b) * TOLERANCE
+            rel = "above"
+        status = "ok" if ok else "REGRESSED"
+        print(f"[guard] {path}: {metric} fresh={f:g} committed={b:g} -> {status}")
+        if not ok:
+            failures.append(
+                f"{path}: {metric} {f:g} is >{TOLERANCE:.0%} {rel} committed {b:g}"
+            )
+    return failures
+
+
+def main() -> int:
+    failures: list[str] = []
+    for path in GUARDS:
+        failures.extend(check_file(path))
+    if failures:
+        print("\nPERF REGRESSION:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    print("[guard] all perf metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,7 +27,7 @@ import time
 
 import numpy as np
 
-from repro.core import Cluster, PointerChaseApp, chase_ref
+from repro.core import Cluster, DataPlaneConfig, PointerChaseApp, chase_ref
 
 from .hw_model import PROFILES
 
@@ -136,17 +136,30 @@ def batched_ab(
     app.dapc(starts, depth, mode=mode, batching=True)  # warm batched buckets
 
     sides = {}
-    for label, batching in (("per_message", False), ("batched", True)):
+    arms = (
+        ("per_message", dict(batching=False)),
+        ("batched", dict(batching=True)),
+        # data-plane A/B on the batched runtime: the chase RETURN is 8
+        # payload bytes, so eager_max=0 forces every RETURN one-sided and
+        # rndv_min=0 forces descriptor+GET — the two off-threshold corners
+        # the decision table exists to avoid (see benchmarks/wire_model.py)
+        ("zerocopy", dict(batching=True, dataplane=DataPlaneConfig.zero_copy(eager_max=0))),
+        ("rendezvous", dict(batching=True, dataplane=DataPlaneConfig.rendezvous(rndv_min=0))),
+    )
+    for label, kwargs in arms:
         t0 = time.perf_counter()
-        rep = app.dapc(starts, depth, mode=mode, batching=batching)
+        rep = app.dapc(starts, depth, mode=mode, **kwargs)
         wall_s = time.perf_counter() - t0
         assert np.array_equal(rep.results, expect), f"{label} diverged from oracle"
         sides[label] = {
             "puts": rep.puts,
+            "gets": rep.gets,
+            "region_puts": rep.region_puts,
             "invokes": rep.invokes,
             "coalesced_frames": rep.coalesced_frames,
             "coalesced_payloads": rep.coalesced_payloads,
-            "wire_bytes": rep.put_bytes,
+            "wire_bytes": rep.wire_bytes,
+            "wire_bytes_by_kind": rep.wire_bytes_by_kind,
             "modeled_us": round(rep.modeled_us, 3),
             "measured_compute_s": round(wall_s, 4),
         }

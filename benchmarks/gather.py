@@ -2,7 +2,7 @@
 
 The serving-shaped workload (DOLMA's data-object disaggregation): N
 concurrent gather requests, each a batch of up to K row ids against a
-row-sharded (V, D) table.  Three paths on ONE cluster so the comparison
+row-sharded (V, D) table.  Five paths on ONE cluster so the comparison
 is exact (same table, same requests, caches warm):
 
   * ``get``          move-data-to-compute: one one-sided GET round trip
@@ -10,7 +10,13 @@ is exact (same table, same requests, caches warm):
   * ``xrdma``        the Gatherer ifunc, per-message runtime.
   * ``xrdma+batch``  the same over PR 1's batched runtime: coalesced
                      key-frames, one XLA dispatch per (PE, tick), partial
-                     RETURNs folded in one masked-scan dispatch.
+                     RETURNs folded in one masked-scan dispatch (the
+                     ``framed`` data plane).
+  * ``zerocopy``     batched, with partial RETURNs written one-sidedly
+                     into the requester's registered completion slab +
+                     doorbell — no RETURN frames, no requester dispatch.
+  * ``rendezvous``   batched, with partial RETURNs shipped as 16-byte
+                     descriptors the requester GETs against.
 
 Every path is verified bit-identical to the numpy take oracle before any
 number is reported.  ``python -m benchmarks.gather --ab --json
@@ -23,7 +29,7 @@ import time
 
 import numpy as np
 
-from repro.core import Cluster
+from repro.core import Cluster, DataPlaneConfig
 from repro.runtime.embed_service import EmbedShardService, ragged_batches
 
 from .hw_model import PROFILES
@@ -57,6 +63,24 @@ def gather_ab(
         ("get_per_row", lambda: svc.gather_get(batches)),
         ("per_message", lambda: svc.gather(batches, batching=False)),
         ("batched", lambda: svc.gather(batches, batching=True)),
+        # the data-plane A/B rides the batched runtime: same coalesced
+        # key-frames, different RETURN protocol
+        (
+            "zerocopy",
+            lambda: svc.gather(
+                batches, batching=True, dataplane=DataPlaneConfig.zero_copy()
+            ),
+        ),
+        (
+            "rendezvous",
+            lambda: svc.gather(
+                batches,
+                batching=True,
+                # RETURN payloads here are ~(3+K+K*D)*4 bytes; pin the
+                # threshold below that so every partial goes descriptor+GET
+                dataplane=DataPlaneConfig.rendezvous(rndv_min=256),
+            ),
+        ),
     )
     for label, run in runs:
         t0 = time.perf_counter()
@@ -67,16 +91,18 @@ def gather_ab(
         sides[label] = {
             "puts": rep.puts,
             "gets": rep.gets,
+            "region_puts": rep.region_puts,
             "network_ops": rep.network_ops,
             "invokes": rep.invokes,
             "coalesced_frames": rep.coalesced_frames,
             "coalesced_payloads": rep.coalesced_payloads,
-            "wire_bytes": rep.put_bytes + rep.get_bytes,
+            "wire_bytes": rep.wire_bytes,
+            "wire_bytes_by_kind": rep.wire_bytes_by_kind,
             "modeled_us": round(rep.modeled_us, 3),
             "measured_compute_s": round(wall_s, 4),
         }
     get, bat = sides["get_per_row"], sides["batched"]
-    per = sides["per_message"]
+    per, zc = sides["per_message"], sides["zerocopy"]
     n_rows = int(sum(len(b) for b in batches))
     return {
         "config": {
@@ -98,6 +124,15 @@ def gather_ab(
         ),
         "batched_vs_get_modeled_pct": round(
             100 * (1 - bat["modeled_us"] / get["modeled_us"]), 2
+        ),
+        # the data-plane acceptance: zero-copy kills the framing tax —
+        # wire bytes fall toward the GET baseline's pure-row floor while
+        # keeping the network-op and dispatch advantages
+        "zerocopy_vs_get_bytes_ratio": round(
+            zc["wire_bytes"] / max(get["wire_bytes"], 1), 2
+        ),
+        "zerocopy_vs_batched_modeled_pct": round(
+            100 * (1 - zc["modeled_us"] / bat["modeled_us"]), 2
         ),
         "oracle_checked": True,
     }

@@ -109,7 +109,7 @@ def bench_gather(fast: bool = False) -> dict:
     ab = gather_ab(n_requests=64 if fast else 256)
     _section("X-RDMA Gather (embedding-shard service vs GET-per-row)")
     print("path,network_ops,invokes,coalesced_frames,wire_bytes,modeled_us")
-    for label in ("get_per_row", "per_message", "batched"):
+    for label in ("get_per_row", "per_message", "batched", "zerocopy", "rendezvous"):
         r = ab[label]
         print(
             f"{label},{r['network_ops']},{r['invokes']},{r['coalesced_frames']},"
@@ -119,7 +119,8 @@ def bench_gather(fast: bool = False) -> dict:
         f"A/B @ {ab['config']['n_requests']} requests, "
         f"{ab['config']['n_servers']} shards, {ab['config']['profile']}: "
         f"{ab['batched_vs_get_ops_ratio']}x fewer network ops, "
-        f"{ab['batched_vs_get_modeled_pct']}% lower modeled wire time vs GET"
+        f"{ab['batched_vs_get_modeled_pct']}% lower modeled wire time vs GET, "
+        f"zerocopy wire bytes {ab['zerocopy_vs_get_bytes_ratio']}x the GET floor"
     )
     bench_path = Path(__file__).resolve().parent.parent / "BENCH_gather.json"
     bench_path.write_text(json.dumps(ab, indent=1, default=float) + "\n")

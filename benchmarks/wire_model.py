@@ -1,0 +1,95 @@
+"""Protocol-crossover microbenchmark: where does rendezvous start to win?
+
+Sweeps RETURN payload sizes per calibrated wire profile through the three
+modeled delivery costs (see repro.core.dataplane):
+
+  framed eager   alpha + (hdr + n)/beta + n/COPY_BUS   (bounce copy out of
+                 the receive buffer — the cost real NICs pay for
+                 unexpected eager messages)
+  zerocopy       alpha + (n + 4)/beta                  (lands in place)
+  rendezvous     alpha + (hdr + 16)/beta + 2*alpha + n/beta
+
+and emits the eager->rendezvous crossover point per profile, validating
+the default thresholds: ``DEFAULT_EAGER_MAX`` must sit well below every
+profile's crossover (payloads that small should never pay the rendezvous
+round trip) and ``DEFAULT_RNDV_MIN`` within the band the calibrated
+profiles span (tens of KB — the same order as UCX's default).
+
+``python -m benchmarks.wire_model --json BENCH_wire_model.json``
+"""
+
+from __future__ import annotations
+
+from repro.core.dataplane import (
+    DEFAULT_EAGER_MAX,
+    DEFAULT_RNDV_MIN,
+    eager_rndv_crossover,
+    framed_us,
+    rendezvous_us,
+    zerocopy_us,
+)
+from repro.core.transport import WIRE_PROFILES
+
+SWEEP = [64, 256, 1024, 4096, 16384, 32768, 65536, 262144, 1048576]
+CALIBRATED = ("ookami", "thor_bf2", "thor_xeon")
+
+
+def sweep_profile(name: str) -> dict:
+    wire = WIRE_PROFILES[name]
+    rows = []
+    for n in SWEEP:
+        rows.append(
+            {
+                "payload_bytes": n,
+                "framed_us": round(framed_us(wire, n), 3),
+                "zerocopy_us": round(zerocopy_us(wire, n), 3),
+                "rendezvous_us": round(rendezvous_us(wire, n), 3),
+            }
+        )
+    crossover = eager_rndv_crossover(wire)
+    return {
+        "profile": name,
+        "alpha_us": wire.alpha_us,
+        "beta_Bus": wire.beta_Bus,
+        "sweep": rows,
+        "eager_rndv_crossover_bytes": crossover,
+    }
+
+
+def validate(results: list[dict]) -> dict:
+    """The threshold-validation claims the CI lane asserts on."""
+    crossovers = {r["profile"]: r["eager_rndv_crossover_bytes"] for r in results}
+    lo, hi = min(crossovers.values()), max(crossovers.values())
+    return {
+        "crossovers": crossovers,
+        "default_eager_max": DEFAULT_EAGER_MAX,
+        "default_rndv_min": DEFAULT_RNDV_MIN,
+        # eager_max far below any crossover: small payloads never pay 2*alpha
+        "eager_max_below_all_crossovers": DEFAULT_EAGER_MAX < lo,
+        # rndv_min inside the calibrated band (order-of-magnitude check:
+        # within [lo/4, hi*4] of the profiles' crossovers)
+        "rndv_min_within_band": lo / 4 <= DEFAULT_RNDV_MIN <= hi * 4,
+    }
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", help="write the result dict to PATH")
+    args = ap.parse_args()
+
+    results = [sweep_profile(p) for p in CALIBRATED]
+    out = {"profiles": results, "validation": validate(results)}
+    assert out["validation"]["eager_max_below_all_crossovers"], out["validation"]
+    assert out["validation"]["rndv_min_within_band"], out["validation"]
+    text = json.dumps(out, indent=1, default=float)
+    print(text)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

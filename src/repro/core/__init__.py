@@ -15,6 +15,7 @@ Public API re-exports.  Layering:
 from .bitcode import BitcodeSlice, FatBitcode, local_triple, platform_of
 from .cache import CacheStats, SenderCache, TargetCodeCache
 from .cluster import Cluster
+from .dataplane import DataPlaneConfig, SlabLayout
 from .frame import (
     CorruptFrame,
     Frame,
@@ -43,7 +44,14 @@ from .ifunc import (
     Toolchain,
 )
 from .pointer_chase import ChaseReport, PointerChaseApp, chase_ref, make_chain
-from .transport import Endpoint, EndpointDead, Fabric, WIRE_PROFILES, WireModel
+from .transport import (
+    Endpoint,
+    EndpointDead,
+    Fabric,
+    RegionWrite,
+    WIRE_PROFILES,
+    WireModel,
+)
 from .xrdma import (
     make_chaser,
     make_gather_return,
@@ -66,6 +74,7 @@ __all__ = [
     "Cluster",
     "CompletionQueue",
     "CorruptFrame",
+    "DataPlaneConfig",
     "Endpoint",
     "EndpointDead",
     "Fabric",
@@ -80,7 +89,9 @@ __all__ = [
     "PE",
     "PointerChaseApp",
     "ProtocolError",
+    "RegionWrite",
     "SenderCache",
+    "SlabLayout",
     "TargetCodeCache",
     "Toolchain",
     "WIRE_PROFILES",

@@ -51,6 +51,13 @@ class SenderCache:
         self._lock = threading.Lock()
         self.stats = CacheStats()
 
+    def has(self, endpoint: str, digest: str) -> bool:
+        """Non-mutating peek: does the target already hold this code?  Used
+        by the data plane to decide protocols (a rendezvous descriptor
+        cannot carry code) without claiming a send happened."""
+        with self._lock:
+            return (endpoint, digest) in self._seen
+
     def check_and_add(self, endpoint: str, digest: str, code_nbytes: int) -> bool:
         """True if the target already has the code (=> truncate the send)."""
         key = (endpoint, digest)

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 from typing import Callable, Sequence
 
+from .dataplane import DataPlaneConfig
 from .ifunc import PE, Toolchain
 from .transport import Fabric, WireModel
 
@@ -47,6 +48,14 @@ class Cluster:
         (coalesced sends + grouped polls)."""
         for pe in self.pes():
             pe.batching = enabled
+
+    def set_dataplane(self, config: DataPlaneConfig | None) -> None:
+        """Install one data-plane protocol selection (framed / zero-copy /
+        rendezvous thresholds) on every PE; ``None`` restores the default
+        all-framed plane."""
+        cfg = config or DataPlaneConfig()
+        for pe in self.pes():
+            pe.dataplane = cfg
 
     def pes(self) -> list[PE]:
         return [*self.servers, self.client]

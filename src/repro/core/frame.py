@@ -21,17 +21,21 @@ Multi-payload frames (coalescing)
 A frame whose ``flags`` carry :attr:`FrameFlags.BATCH` packs N payloads of
 the *same* ifunc type behind one header and (at most) one code section::
 
-    HEADER | count(u32) item_nbytes(u32) payload0 .. payloadN-1 | MAGIC | CODE | DEPS | MAGIC
-            `------------------ PAYLOAD section -------------------'
+    HEADER | count(varint) item(varint) [len0..lenN-1(varint)] payload0 .. payloadN-1 | MAGIC | CODE | DEPS | MAGIC
+            `--------------------------- PAYLOAD section ---------------------------'
 
-All N items are same-size (one ifunc type means one payload aval), so the
-batch sub-header is just ``count`` and ``item_nbytes``.  The truncation
-protocol is unchanged — the PAYLOAD section (including the sub-header) sits
-before the first MAGIC, so a cached coalesced send is still a prefix PUT —
-and the wire model charges one ``alpha_us`` for all N payloads, which is the
-whole point: per-message latency amortizes across a burst to one peer.
-:func:`coalesce` builds such a frame from same-type frames and
-:func:`split_payloads` recovers the individual payloads on the target.
+The batch sub-header is a varint offset table: ``count`` then ``item``.
+``item > 0`` is the compressed uniform case — every payload is ``item``
+bytes, no per-payload table (2-6 bytes total, vs the 8-byte fixed
+sub-header it replaced).  ``item == 0`` marks the ragged form: ``count``
+varint lengths follow, one per payload (the scatter-gather offset table).
+The truncation protocol is unchanged — the PAYLOAD section (including
+the sub-header) sits before the first MAGIC, so a cached coalesced send
+is still a prefix PUT — and the wire model charges one ``alpha_us`` for
+all N payloads, which is the whole point: per-message latency amortizes
+across a burst to one peer.  :func:`coalesce` builds such a frame from
+same-type frames and :func:`split_payloads` recovers the individual
+payloads on the target.
 """
 
 from __future__ import annotations
@@ -64,6 +68,7 @@ class FrameKind(IntEnum):
     BINARY = 2  # binary ifunc (Sec. III-B): single-triple, no target JIT
     ACTIVE_MESSAGE = 3  # pre-deployed handler, payload-only (baseline)
     GET_RESPONSE = 4  # transport-internal: RDMA GET reply
+    RNDV = 5  # rendezvous descriptor: 16B control, data pulled by GET
 
 
 class FrameFlags(IntEnum):
@@ -72,7 +77,92 @@ class FrameFlags(IntEnum):
     BATCH = 2  # PAYLOAD section is a multi-payload pack (see module docstring)
 
 
-_BATCH_SUBHDR = struct.Struct("<II")  # count, item_nbytes
+# 16-byte rendezvous descriptor: [src_peer_index, token, data_nbytes, reserved].
+# The receiver reconstructs the staging region name from (src, token) and
+# pulls the payload with a one-sided GET — correct when the payload dwarfs
+# 2*alpha, and the only RETURN shape whose eager cost grows with size.
+RNDV_DESC = struct.Struct("<IIII")
+RNDV_DESC_NBYTES = RNDV_DESC.size
+
+
+def rndv_region(src_name: str, token: int) -> str:
+    """Staging-region naming convention shared by both ends of a rendezvous."""
+    return f"rndv/{src_name}/{token}"
+
+
+# ------------------------------------------------------------------ varint
+def uvarint_encode(n: int) -> bytes:
+    """LEB128 unsigned varint (u32 range)."""
+    if n < 0:
+        raise ValueError("uvarint is unsigned")
+    out = bytearray()
+    while True:
+        b = n & 0x7F
+        n >>= 7
+        if n:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def uvarint_decode(buf: bytes, off: int) -> tuple[int, int]:
+    """Decode one varint at ``off``; returns (value, next_off).  Truncated
+    or over-long (>5 byte) encodings raise :class:`CorruptFrame`."""
+    val = shift = 0
+    for i in range(5):
+        if off + i >= len(buf):
+            raise CorruptFrame("corrupt batch frame: truncated varint")
+        b = buf[off + i]
+        val |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return val, off + i + 1
+        shift += 7
+    raise CorruptFrame("corrupt batch frame: over-long varint")
+
+
+def pack_payloads(payloads: "list[bytes]") -> bytes:
+    """Build a BATCH payload section: varint sub-header + concatenated
+    payloads (uniform compressed form when sizes agree, offset table
+    otherwise)."""
+    lens = [len(p) for p in payloads]
+    uniform = lens[0] if lens and all(n == lens[0] for n in lens) else 0
+    head = uvarint_encode(len(payloads)) + uvarint_encode(uniform)
+    if not uniform:
+        head += b"".join(uvarint_encode(n) for n in lens)
+    return head + b"".join(payloads)
+
+
+def unpack_payloads(section: bytes) -> "list[bytes]":
+    """Inverse of :func:`pack_payloads`; size disagreements are loud."""
+    count, off = uvarint_decode(section, 0)
+    item, off = uvarint_decode(section, off)
+    if count > len(section):  # cheap sanity bound before allocating a table
+        raise CorruptFrame("corrupt batch frame: payload count exceeds section")
+    if item:
+        lens = [item] * count
+    else:
+        lens = []
+        for _ in range(count):
+            n, off = uvarint_decode(section, off)
+            lens.append(n)
+    if len(section) != off + sum(lens):
+        raise CorruptFrame("corrupt batch frame: payload section size mismatch")
+    out = []
+    for n in lens:
+        out.append(section[off : off + n])
+        off += n
+    return out
+
+
+def batch_subheader_nbytes(section: bytes) -> int:
+    """How many bytes of a BATCH payload section are offset-table overhead."""
+    count, off = uvarint_decode(section, 0)
+    item, off = uvarint_decode(section, off)
+    if not item:
+        for _ in range(count):
+            _, off = uvarint_decode(section, off)
+    return off
 
 
 @dataclass
@@ -94,7 +184,7 @@ class Frame:
         """1 for a plain frame, the packed count for a BATCH frame."""
         if not self.flags & FrameFlags.BATCH:
             return 1
-        return _BATCH_SUBHDR.unpack_from(self.payload, 0)[0]
+        return uvarint_decode(self.payload, 0)[0]
 
     # ------------------------------------------------------------------ pack
     def pack(self) -> bytes:
@@ -138,6 +228,17 @@ class Frame:
         a cached send is a shorter PUT of the same buffer."""
         full = self.pack()
         return full[: self.cached_nbytes] if cached else full
+
+    def kind_breakdown(self, cached: bool) -> dict[str, int]:
+        """Attribute this frame's wire bytes across the fabric's byte-kind
+        accounting: ifunc payload data vs framing (header, name, sentinels,
+        batch sub-header) vs code+deps."""
+        payload = len(self.payload)
+        if self.flags & FrameFlags.BATCH:
+            payload -= batch_subheader_nbytes(self.payload)
+        header = self.cached_nbytes - payload
+        code = 0 if cached else self.full_nbytes - self.cached_nbytes
+        return {"header": header, "payload": payload, "code": code}
 
 
 # ---------------------------------------------------------------- unpacking
@@ -244,9 +345,12 @@ def coalesce(frames: "list[Frame]") -> Frame:
     """Pack N same-ifunc frames into one multi-payload frame.
 
     All frames must agree on (kind, name, digest) — they are instances of one
-    ifunc type — and carry equal-size payloads.  The code/deps sections come
-    from the first frame that has them (every member of a batch shares the
-    same code by construction, digest equality enforces it).
+    ifunc type — and carry equal-size payloads (the wire format's ragged
+    offset table exists, but one ifunc type means one payload aval, so the
+    runtime only ever emits the uniform compressed form; a ragged batch here
+    is a caller bug).  The code/deps sections come from the first frame that
+    has them (every member of a batch shares the same code by construction,
+    digest equality enforces it).
     """
     if len(frames) == 1:
         return frames[0]
@@ -258,11 +362,10 @@ def coalesce(frames: "list[Frame]") -> Frame:
         if len(f.payload) != item:
             raise ValueError("coalesce: ragged payload sizes in one batch")
     carrier = next((f for f in frames if f.code), head)
-    pack = _BATCH_SUBHDR.pack(len(frames), item) + b"".join(f.payload for f in frames)
     return Frame(
         kind=head.kind,
         name=head.name,
-        payload=pack,
+        payload=pack_payloads([f.payload for f in frames]),
         code=carrier.code,
         deps=carrier.deps,
         digest=head.digest,
@@ -275,8 +378,4 @@ def split_payloads(frame: Frame) -> list[bytes]:
     """Individual payloads of a (possibly multi-payload) frame, in order."""
     if not frame.flags & FrameFlags.BATCH:
         return [frame.payload]
-    count, item = _BATCH_SUBHDR.unpack_from(frame.payload, 0)
-    off = _BATCH_SUBHDR.size
-    if len(frame.payload) != off + count * item:
-        raise CorruptFrame("corrupt batch frame: payload section size mismatch")
-    return [frame.payload[off + i * item : off + (i + 1) * item] for i in range(count)]
+    return unpack_payloads(frame.payload)

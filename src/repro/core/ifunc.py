@@ -69,19 +69,27 @@ from jax import lax
 
 from .bitcode import DEFAULT_TOOLCHAIN_TARGETS, FatBitcode, platform_of
 from .cache import CachedExecutable, SenderCache, TargetCodeCache
+from .dataplane import DataPlaneConfig, SlabLayout
 from .frame import (
     Frame,
     FrameKind,
     ProtocolError,
+    RNDV_DESC,
     coalesce,
     peek_header,
+    rndv_region,
     split_payloads,
     unpack,
 )
-from .transport import Fabric
+from .transport import EndpointDead, Fabric, RegionWrite
 
 ACTION_WIDTH = 11  # [action, dst, plen, p0..p7]
 A_DONE, A_FORWARD, A_RETURN, A_SPAWN, A_NOP = 0, 1, 2, 3, 4
+
+# rendezvous staging ring depth: outstanding staged RETURN payloads per PE
+# before the oldest registration is reclaimed (bounds pinned memory the way
+# a real transport bounds its rendezvous buffer pool)
+RNDV_STAGING_DEPTH = 1024
 
 
 class ISAMismatch(RuntimeError):
@@ -99,6 +107,10 @@ class IFunc:
     abi: str
     payload_aval: jax.ShapeDtypeStruct
     kind: FrameKind = FrameKind.BITCODE
+    # Optional zero-copy layout for RETURN-type ifuncs: lets a sender map
+    # this ifunc's payload onto one-sided slab writes instead of a frame.
+    # Sender-side only — never travels on the wire, never affects digest.
+    slab: SlabLayout | None = None
 
     @property
     def code_bytes(self) -> bytes:
@@ -122,6 +134,7 @@ class IFunc:
         targets: Sequence[str] = DEFAULT_TOOLCHAIN_TARGETS,
         kind: FrameKind = FrameKind.BITCODE,
         fn_by_platform=None,
+        slab: SlabLayout | None = None,
     ) -> "IFunc":
         """Run the Three-Chains toolchain: cross-compile ``fn`` for every
         target triple into a fat-bitcode archive.
@@ -145,6 +158,7 @@ class IFunc:
             abi=abi,
             payload_aval=payload_aval,
             kind=kind,
+            slab=slab,
         )
 
     def make_frame(self, payload: bytes, seq: int = 0) -> Frame:
@@ -196,6 +210,8 @@ class PEStats:
     forwards: int = 0
     returns: int = 0
     spawns: int = 0
+    zerocopy_returns: int = 0  # RETURNs that went one-sided (no frame/dispatch)
+    rndv_returns: int = 0  # RETURNs that went descriptor + GET
     am_handled: int = 0
     flushes: int = 0
     jit_ms_total: float = 0.0
@@ -240,15 +256,17 @@ class PE:
         self.stats = PEStats()
         self.caching_enabled = True  # benchmark switch: uncached mode
         self.batching = False  # batched runtime: coalesced sends + grouped polls
+        self.dataplane = DataPlaneConfig()  # protocol selection (default: framed)
         self._seq = 0
         self._region_dev: dict[str, tuple[int, jax.Array]] = {}
-        self._region_ver: dict[str, int] = {}
         self._sendq: dict[str, list[Frame]] = {}  # per-destination pending frames
+        self._regionq: dict[str, list[RegionWrite]] = {}  # pending one-sided writes
+        self._rndv_tokens: deque[str] = deque()  # staged rendezvous regions (ring)
+        self._rndv_seq = 0
 
     # --- local state ------------------------------------------------------
     def register_region(self, name: str, arr: np.ndarray) -> None:
         self.endpoint.register_region(name, arr)
-        self._region_ver[name] = self._region_ver.get(name, 0) + 1
 
     def region(self, name: str) -> np.ndarray:
         return self.endpoint.regions[name]
@@ -256,8 +274,11 @@ class PE:
     def _region_device(self, name: str) -> jax.Array:
         """Device-resident view of a region, cached until the region is
         rewritten (read-mostly shards stay resident, like RDMA-registered
-        memory staying pinned)."""
-        ver = self._region_ver.get(name, 0)
+        memory staying pinned).  Versioning lives on the endpoint so that
+        *remote* one-sided writes (zero-copy RETURNs landing in a slab)
+        also invalidate the device mirror — otherwise a framed fold could
+        read a stale snapshot and overwrite bytes the fabric just wrote."""
+        ver = self.endpoint.region_ver.get(name, 0)
         hit = self._region_dev.get(name)
         if hit is not None and hit[0] == ver:
             return hit[1]
@@ -267,7 +288,7 @@ class PE:
 
     def _write_region(self, name: str, value: np.ndarray) -> None:
         np.copyto(self.endpoint.regions[name], value)
-        self._region_ver[name] = self._region_ver.get(name, 0) + 1
+        self.endpoint.touch_region(name)
 
     def register_cap(self, name: str, arr: np.ndarray) -> None:
         self.caps[name] = np.asarray(arr)
@@ -350,25 +371,36 @@ class PE:
         return self._put_now(dst, frame)
 
     def _put_now(self, dst: str, frame: Frame) -> int:
-        if frame.kind == FrameKind.ACTIVE_MESSAGE:
-            cached = True  # AM never carries code
+        if frame.kind in (FrameKind.ACTIVE_MESSAGE, FrameKind.RNDV):
+            cached = True  # AM / rendezvous descriptors never carry code
         else:
             cached = self.caching_enabled and self.sender_cache.check_and_add(
                 dst, frame.digest.hex(), len(frame.code)
             )
         wire = frame.wire_bytes(cached=cached)
-        self.fabric.put(self.name, dst, wire, n_payloads=frame.n_payloads)
+        self.fabric.put(
+            self.name,
+            dst,
+            wire,
+            n_payloads=frame.n_payloads,
+            kinds=frame.kind_breakdown(cached),
+        )
         return len(wire)
 
     def flush(self) -> int:
-        """Emit every queued frame; a burst of same-type frames to one peer
-        travels as a single coalesced PUT (one ``alpha_us``, summed bytes).
+        """Emit every queued frame and one-sided write burst.
 
-        A failing destination (e.g. a killed endpoint) loses only its own
-        frames — every other destination's queue is still delivered, then
-        the first error is re-raised.  Returns the number of PUTs issued.
+        A burst of same-type frames to one peer travels as a single
+        coalesced PUT (one ``alpha_us``, summed bytes); a burst of queued
+        zero-copy slab writes to one peer travels as a single doorbell-
+        batched WQE chain (one ``alpha_us``, one ``o_us`` per extra
+        segment).  A failing destination (e.g. a killed endpoint) loses
+        only its own traffic — every other destination's queue is still
+        delivered, then the first error is re-raised.  Returns the number
+        of wire operations issued.
         """
         queued, self._sendq = self._sendq, {}
+        regionq, self._regionq = self._regionq, {}
         puts = 0
         errors: list[Exception] = []
         for dst, frames in queued.items():
@@ -386,6 +418,12 @@ class PE:
                     puts += 1
                 except Exception as e:  # noqa: BLE001 - deliver the rest first
                     errors.append(e)
+        for dst, writes in regionq.items():
+            try:
+                self.fabric.put_region_multi(self.name, dst, writes)
+                puts += 1
+            except Exception as e:  # noqa: BLE001 - deliver the rest first
+                errors.append(e)
         if puts:
             self.stats.flushes += 1
         if errors:
@@ -435,6 +473,35 @@ class PE:
             self.stats.am_handled += 1
             handler(self, pay)
 
+    def _rndv_pull(self, name: str, desc: bytes) -> tuple[CachedExecutable, bytes]:
+        """Resolve a rendezvous descriptor: GET the staged payload from the
+        source's staging region.  The executable must already be cached —
+        descriptors cannot carry code (the sender only selects rendezvous
+        for cache-warm peers), so a miss here means a stale sender cache."""
+        if len(desc) != RNDV_DESC.size:
+            raise ProtocolError(f"{self.name}: malformed rendezvous descriptor")
+        src_idx, token, nbytes, _ = RNDV_DESC.unpack(desc)
+        exe = self.target_cache.lookup(name)
+        if exe is None:
+            raise ProtocolError(
+                f"{self.name}: rendezvous descriptor for unregistered ifunc "
+                f"{name!r} (stale sender cache — was this PE restarted?)"
+            )
+        if not 0 <= src_idx < len(self.peers):
+            raise ProtocolError(f"{self.name}: rendezvous src index {src_idx} out of range")
+        src = self.peers[src_idx]
+        try:
+            data = self.fabric.get(self.name, src, rndv_region(src, token), 0, nbytes)
+        except KeyError:
+            # staging ring evicted the region, or the source restarted with
+            # fresh (empty) registered memory — loud but contained, like the
+            # framed path's stale-sender-cache refusal
+            raise ProtocolError(
+                f"{self.name}: rendezvous staging region for token {token} "
+                f"gone at {src!r} (evicted or source restarted)"
+            ) from None
+        return exe, data
+
     def _resolve_exe(self, buf: bytes, hdr) -> tuple[CachedExecutable, Frame]:
         """Find (or install) the executable a frame refers to; returns it
         with the frame unpacked exactly once (code-carrying frames are
@@ -475,6 +542,12 @@ class PE:
         if hdr.kind == FrameKind.ACTIVE_MESSAGE:
             self._handle_am(unpack(buf, has_code=False))
             return
+        if hdr.kind == FrameKind.RNDV:
+            frame = unpack(buf, has_code=False)
+            for desc in split_payloads(frame):
+                exe, data = self._rndv_pull(frame.name, desc)
+                self._invoke(exe, data)
+            return
         # ifunc path: does this wire carry code? (sender truncates iff it
         # believes we have it; len tells the truth, the registry must agree)
         exe, frame = self._resolve_exe(buf, hdr)
@@ -500,10 +573,20 @@ class PE:
                 if hdr.kind == FrameKind.ACTIVE_MESSAGE:
                     self._handle_am(unpack(buf, has_code=False))
                     continue
+                if hdr.kind == FrameKind.RNDV:
+                    # pull each staged payload, then fold it into the same
+                    # digest group as any framed payloads of the same ifunc:
+                    # rendezvous and eager arrivals retire in ONE dispatch
+                    frame = unpack(buf, has_code=False)
+                    for desc in split_payloads(frame):
+                        exe, data = self._rndv_pull(frame.name, desc)
+                        entry = groups.setdefault(bytes.fromhex(exe.digest), (exe, []))
+                        entry[1].append(data)
+                    continue
                 exe, frame = self._resolve_exe(buf, hdr)
                 entry = groups.setdefault(hdr.digest, (exe, []))
                 entry[1].extend(split_payloads(frame))
-            except (ProtocolError, ValueError, ISAMismatch) as e:
+            except (ProtocolError, ValueError, ISAMismatch, EndpointDead) as e:
                 errors.append(e)
         for exe, pays in groups.values():
             try:
@@ -774,7 +857,7 @@ class PE:
             self.stats.returns += 1
             target = self._dep_named(exe, "returns")
             assert target is not None, "RETURN requires a returns: dep"
-            self.send_ifunc(dst, target, pay)
+            self._return_payload(dst, target, pay)
         elif code == A_SPAWN:
             self.stats.spawns += 1
             target = self._dep_named(exe, "spawn")
@@ -782,6 +865,59 @@ class PE:
             self.send_ifunc(dst, target, pay)
         else:
             raise ProtocolError(f"bad action code {code}")
+
+    # --- data plane: protocol-selected RETURNs ------------------------------
+    def _return_payload(self, dst: str, target: str, pay: np.ndarray) -> None:
+        """Ship one RETURN payload under the data plane's protocol selection.
+
+        ``framed`` re-injects the RETURN ifunc (PR 1 path, coalescable);
+        ``zerocopy`` writes the payload one-sidedly into the requester's
+        registered slab per the ifunc's :class:`SlabLayout` and bumps the
+        doorbell — no frame, no requester-side dispatch; ``rendezvous``
+        stages the payload locally and frames only a 16-byte descriptor
+        the requester GETs against.
+        """
+        ifn = self._resolve_source(target)
+        proto = self.dataplane.select(
+            int(pay.nbytes),
+            slab=ifn.slab is not None,
+            code_cached=self.caching_enabled
+            and self.sender_cache.has(dst, ifn.digest.hex()),
+        )
+        if proto == "zerocopy":
+            self.stats.zerocopy_returns += 1
+            writes = ifn.slab.plan(np.ascontiguousarray(pay, np.int32))
+            if self.batching:
+                self._regionq.setdefault(dst, []).extend(writes)
+            else:
+                self.fabric.put_region_multi(self.name, dst, writes)
+        elif proto == "rendezvous":
+            self.stats.rndv_returns += 1
+            self._rndv_send(dst, ifn, pay)
+        else:
+            self.send_ifunc(dst, target, pay)
+
+    def _rndv_send(self, dst: str, ifn: IFunc, pay: np.ndarray) -> None:
+        """Rendezvous RETURN: stage the payload in a source-registered
+        region and frame only the 16-byte descriptor; the requester pulls
+        the data with a one-sided GET (cost ``2*alpha + n/beta``, correct
+        when the payload dwarfs ``2*alpha``)."""
+        token = self._rndv_seq
+        self._rndv_seq += 1
+        staging = rndv_region(self.name, token)
+        # explicit copy: `pay` may be a view into a whole batched action
+        # matrix, and registering the view would pin that matrix in the
+        # staging ring long after the dispatch that produced it
+        data = np.array(pay, np.int32)
+        self.endpoint.register_region(staging, data)
+        self._rndv_tokens.append(staging)
+        while len(self._rndv_tokens) > RNDV_STAGING_DEPTH:
+            self.endpoint.unregister_region(self._rndv_tokens.popleft())
+        desc = RNDV_DESC.pack(self.peer_index(self.name), token, data.nbytes, 0)
+        self._seq += 1
+        self._put_frame(
+            dst, Frame(kind=FrameKind.RNDV, name=ifn.name, payload=desc, seq=self._seq)
+        )
 
 
 # ----------------------------------------------------- completion queue
@@ -813,6 +949,13 @@ class CompletionQueue:
     ``(n_keys, dim)`` for a gather); ``dtype`` its logical element type —
     the wire/region representation is always int32 (bit-cast, never
     converted, so float rows survive bit-identically).
+
+    The results region doubles as the zero-copy data plane's registered
+    slab: under ``DataPlaneConfig.zero_copy`` the remote PE WRITEs partial
+    rows straight into the slot's data words and the fabric ORs the
+    arrived-position bits into ``row[0]`` as the doorbell, guarded by the
+    generation word ``row[1]`` — so ``done()``/``result()`` poll the same
+    memory whether results arrived framed, one-sided, or mixed.
     """
 
     def __init__(

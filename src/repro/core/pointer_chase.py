@@ -16,13 +16,15 @@ one one-sided READ round-trip per hop (move-data-to-compute).
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
 from .cluster import Cluster
+from .dataplane import DataPlaneConfig
 from .frame import FrameKind
 from .ifunc import PE
+from .transport import WireReportMixin
 from .xrdma import make_chaser, make_return_result
 
 RESULT_SENTINEL = -1
@@ -46,7 +48,7 @@ def chase_ref(table: np.ndarray, start: int, depth: int) -> int:
 
 
 @dataclass
-class ChaseReport:
+class ChaseReport(WireReportMixin):
     results: np.ndarray
     rounds: int
     puts: int
@@ -57,6 +59,9 @@ class ChaseReport:
     invokes: int = 0  # XLA dispatches across all PEs (batched dispatch = 1)
     coalesced_frames: int = 0  # PUTs that carried >1 payload
     coalesced_payloads: int = 0  # payloads carried inside those PUTs
+    region_puts: int = 0  # one-sided slab-write batches (zero-copy RETURNs)
+    region_put_bytes: int = 0  # data + doorbell bytes those writes carried
+    wire_bytes_by_kind: dict = field(default_factory=dict)
 
 
 class PointerChaseApp:
@@ -105,6 +110,9 @@ class PointerChaseApp:
         res = self.cluster.client.region("results")
         res.fill(0)
         res[: self.max_slots] = RESULT_SENTINEL
+        # in-place mutation under the registration: invalidate any device-
+        # resident mirror so the first RETURN fold reads the reset state
+        self.cluster.client.endpoint.touch_region("results")
         return res
 
     def _finish(self, n: int, rounds: int, invokes0: int = 0) -> ChaseReport:
@@ -113,14 +121,8 @@ class PointerChaseApp:
         return ChaseReport(
             results=res,
             rounds=rounds,
-            puts=st.puts,
-            gets=st.gets,
-            put_bytes=st.put_bytes,
-            get_bytes=st.get_bytes,
-            modeled_us=st.modeled_us,
             invokes=self._total_invokes() - invokes0,
-            coalesced_frames=st.coalesced_frames,
-            coalesced_payloads=st.coalesced_payloads,
+            **st.report_kwargs(),
         )
 
     def _total_invokes(self) -> int:
@@ -133,6 +135,7 @@ class PointerChaseApp:
         depth: int,
         mode: str = "bitcode",
         batching: bool = False,
+        dataplane: DataPlaneConfig | None = None,
     ) -> ChaseReport:
         """Launch one X-RDMA Chaser per start and run to completion.
 
@@ -141,7 +144,10 @@ class PointerChaseApp:
         per destination, every PE retires same-type arrivals in one XLA
         dispatch, and FORWARD/RETURN bursts coalesce per destination.  The
         per-message path (``batching=False``, the default) is kept as the
-        A/B baseline.
+        A/B baseline.  ``dataplane`` selects the RETURN protocol for this
+        run (framed / zero-copy slab writes / rendezvous); the chase
+        result buffer doubles as the zero-copy slab, so the completion
+        predicate (the counter word) is identical on every path.
         """
         starts = np.asarray(starts, np.int32)
         n = len(starts)
@@ -152,6 +158,7 @@ class PointerChaseApp:
         self._reset_results()
         cl.fabric.stats.reset()
         cl.set_batching(batching)
+        cl.set_dataplane(dataplane)
         invokes0 = self._total_invokes()
         name = {"bitcode": "chaser", "binary": "chaser_bin"}.get(mode)
         results = cl.client.region("results")
@@ -169,9 +176,11 @@ class PointerChaseApp:
         try:
             rounds = cl.run_until(lambda: results[self.max_slots] >= n)
         finally:
-            # don't leak batched mode into later traffic on this cluster:
-            # a send after dapc() would queue silently and never flush
+            # don't leak batched mode or a non-default data plane into later
+            # traffic on this cluster: a send after dapc() would queue
+            # silently / keep writing slabs nobody is polling
             cl.set_batching(False)
+            cl.set_dataplane(None)
         return self._finish(n, rounds, invokes0)
 
     # ----------------------------------------------------------------- GBPC

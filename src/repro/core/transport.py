@@ -18,10 +18,11 @@ about — are exact, not modeled.
 
 from __future__ import annotations
 
+import struct
 import threading
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Iterator
+from typing import Iterator, Sequence
 
 import numpy as np
 
@@ -83,6 +84,15 @@ WIRE_PROFILES: dict[str, WireModel] = {
 
 
 # ------------------------------------------------------------------ fabric
+#: Categories every wire byte falls into (``TrafficStats.by_kind``):
+#: ``header`` frame headers + sentinels + batch sub-headers, ``payload``
+#: actual ifunc payload bytes, ``code`` fat-bitcode + deps sections,
+#: ``region`` one-sided data (RDMA READ/WRITE of registered memory,
+#: including doorbell words).  Benchmarks report the framing tax directly
+#: from this split instead of deriving it by hand.
+BYTE_KINDS = ("header", "payload", "code", "region")
+
+
 @dataclass
 class TrafficStats:
     """Per-fabric aggregate accounting (resettable by benchmarks)."""
@@ -95,6 +105,10 @@ class TrafficStats:
     modeled_tput_us: float = 0.0  # back-to-back (message-rate) accounting
     coalesced_frames: int = 0  # PUTs that carried >1 payload (multi-payload frames)
     coalesced_payloads: int = 0  # payloads that travelled inside those PUTs
+    region_puts: int = 0  # one-sided RDMA WRITE batches into registered memory
+    region_put_bytes: int = 0  # data + doorbell bytes those writes carried
+    region_guard_drops: int = 0  # guarded writes dropped by a stale generation
+    by_kind: dict[str, int] = field(default_factory=dict)  # see BYTE_KINDS
 
     def reset(self) -> None:
         self.puts = self.gets = 0
@@ -103,6 +117,35 @@ class TrafficStats:
         self.modeled_tput_us = 0.0
         self.coalesced_frames = 0
         self.coalesced_payloads = 0
+        self.region_puts = self.region_put_bytes = 0
+        self.region_guard_drops = 0
+        self.by_kind = {}
+
+    def add_kinds(self, kinds: dict[str, int] | None) -> None:
+        for k, v in (kinds or {}).items():
+            if v:
+                self.by_kind[k] = self.by_kind.get(k, 0) + v
+
+    @property
+    def wire_bytes_by_kind(self) -> dict[str, int]:
+        return {k: self.by_kind.get(k, 0) for k in BYTE_KINDS}
+
+    def report_kwargs(self) -> dict:
+        """Snapshot of the wire-side fields every per-run report shares —
+        ChaseReport and GatherReport construct themselves from this one
+        definition so the two benchmarks' accounting cannot drift."""
+        return {
+            "puts": self.puts,
+            "gets": self.gets,
+            "put_bytes": self.put_bytes,
+            "get_bytes": self.get_bytes,
+            "modeled_us": self.modeled_us,
+            "coalesced_frames": self.coalesced_frames,
+            "coalesced_payloads": self.coalesced_payloads,
+            "region_puts": self.region_puts,
+            "region_put_bytes": self.region_put_bytes,
+            "wire_bytes_by_kind": self.wire_bytes_by_kind,
+        }
 
     def as_dict(self) -> dict[str, float]:
         return {
@@ -114,7 +157,50 @@ class TrafficStats:
             "modeled_tput_us": round(self.modeled_tput_us, 3),
             "coalesced_frames": self.coalesced_frames,
             "coalesced_payloads": self.coalesced_payloads,
+            "region_puts": self.region_puts,
+            "region_put_bytes": self.region_put_bytes,
+            "region_guard_drops": self.region_guard_drops,
+            "wire_bytes_by_kind": self.wire_bytes_by_kind,
         }
+
+
+class WireReportMixin:
+    """Derived wire totals shared by the per-run report dataclasses (which
+    carry the :meth:`TrafficStats.report_kwargs` field set)."""
+
+    @property
+    def wire_bytes(self) -> int:
+        return self.put_bytes + self.get_bytes + self.region_put_bytes
+
+    @property
+    def network_ops(self) -> int:
+        """Wire operations: PUTs + GETs + slab-write batches (what
+        batching and the zero-copy plane amortize)."""
+        return self.puts + self.gets + self.region_puts
+
+
+@dataclass(frozen=True)
+class RegionWrite:
+    """One one-sided write into a peer's registered memory.
+
+    ``doorbell`` — optional ``(byte_offset, value, op)`` with ``op`` in
+    {"or", "add"}: after the data lands, the fabric atomically folds
+    ``value`` into the int32 word at ``byte_offset`` of the same region
+    (RDMA atomic FETCH_ADD / masked-CAS).  The receiver discovers
+    completion by polling that word — no inbox, no frame, no dispatch.
+
+    ``guard`` — optional ``(byte_offset, expected)``: the write applies
+    only while the int32 word at ``byte_offset`` still equals
+    ``expected``.  This models generation-tagged memory registration (a
+    retired slot's rkey is invalidated): a stale write's bytes still
+    cross the wire but the NIC refuses to apply them.
+    """
+
+    region: str
+    offset: int
+    data: bytes
+    doorbell: tuple[int, int, str] | None = None
+    guard: tuple[int, int] | None = None
 
 
 class EndpointDead(RuntimeError):
@@ -133,12 +219,29 @@ class Endpoint:
         self.name = name
         self.inbox: deque[bytearray] = deque()
         self.regions: dict[str, np.ndarray] = {}
+        self.region_ver: dict[str, int] = {}  # bumped on every (re)register/write
         self.alive = True
         self._lock = threading.Lock()
 
     # registered memory -----------------------------------------------------
     def register_region(self, name: str, arr: np.ndarray) -> None:
-        self.regions[name] = arr
+        # RDMA registration pins physical pages: a non-C-contiguous view
+        # (transpose, stride slice) has no single pinnable extent, so it is
+        # materialized contiguously at registration time — same rule as
+        # ibv_reg_mr over a copy buffer.  Contiguous arrays register
+        # in place (zero copy), preserving caller aliasing.
+        self.regions[name] = np.ascontiguousarray(arr)
+        self.region_ver[name] = self.region_ver.get(name, 0) + 1
+
+    def touch_region(self, name: str) -> None:
+        """Record that a region's bytes changed underneath its registration
+        (local in-place mutation): device-resident mirrors must refresh."""
+        self.region_ver[name] = self.region_ver.get(name, 0) + 1
+
+    def unregister_region(self, name: str) -> None:
+        """Drop a registration and its version bookkeeping (rkey invalidated)."""
+        self.regions.pop(name, None)
+        self.region_ver.pop(name, None)
 
     def read_region(self, region: str, offset: int, nbytes: int) -> bytes:
         buf = self.regions[region].view(np.uint8).reshape(-1)
@@ -147,6 +250,10 @@ class Endpoint:
     def write_region(self, region: str, offset: int, data: bytes) -> None:
         buf = self.regions[region].view(np.uint8).reshape(-1)
         buf[offset : offset + len(data)] = np.frombuffer(data, np.uint8)
+        self.touch_region(region)
+
+    def read_region_i32(self, region: str, offset: int) -> int:
+        return struct.unpack("<i", self.read_region(region, offset, 4))[0]
 
     # receive side ----------------------------------------------------------
     def deliver(self, wire: bytes) -> None:
@@ -182,7 +289,14 @@ class Fabric:
         return ep
 
     # one-sided ops ---------------------------------------------------------
-    def put(self, src: str, dst: str, wire_bytes: bytes, n_payloads: int = 1) -> float:
+    def put(
+        self,
+        src: str,
+        dst: str,
+        wire_bytes: bytes,
+        n_payloads: int = 1,
+        kinds: dict[str, int] | None = None,
+    ) -> float:
         """One-sided PUT of a (possibly truncated, possibly coalesced) frame.
 
         Returns the modeled wire time in us.  The receiver is not notified;
@@ -190,7 +304,8 @@ class Fabric:
         PUT (``n_payloads > 1``) is *one* wire message: one ``alpha_us`` /
         ``o_us`` charge for the summed bytes — exactly the amortization the
         batched runtime is after — and is counted in ``coalesced_frames`` so
-        benchmarks can report it.
+        benchmarks can report it.  ``kinds`` attributes the bytes across
+        :data:`BYTE_KINDS` (omitted = all counted as payload).
         """
         ep = self._target(dst)
         n = len(wire_bytes)
@@ -200,10 +315,77 @@ class Fabric:
             self.stats.put_bytes += n
             self.stats.modeled_us += t
             self.stats.modeled_tput_us += self.wire.inverse_throughput_us(n)
+            self.stats.add_kinds(kinds if kinds is not None else {"payload": n})
             if n_payloads > 1:
                 self.stats.coalesced_frames += 1
                 self.stats.coalesced_payloads += n_payloads
         ep.deliver(wire_bytes)
+        return t
+
+    def put_region(
+        self,
+        src: str,
+        dst: str,
+        region: str,
+        offset: int,
+        data: bytes,
+        *,
+        doorbell: tuple[int, int, str] | None = None,
+        guard: tuple[int, int] | None = None,
+    ) -> float:
+        """One-sided RDMA WRITE into ``dst``'s registered region.
+
+        No frame, no inbox, no receiver dispatch: the bytes land in memory
+        and the optional ``doorbell`` word is bumped atomically so the
+        receiver discovers completion by polling memory (the paper's
+        pointer chase 'returns its result with a final PUT').  See
+        :class:`RegionWrite` for doorbell/guard semantics.
+        """
+        return self.put_region_multi(
+            src,
+            dst,
+            [RegionWrite(region, offset, data, doorbell=doorbell, guard=guard)],
+        )
+
+    def put_region_multi(self, src: str, dst: str, writes: Sequence[RegionWrite]) -> float:
+        """A doorbell-batched chain of one-sided writes to one peer.
+
+        Models a posted WQE chain: the first segment pays the full
+        ``alpha_us`` latency, each further segment only the pipelined
+        per-message overhead ``o_us``, and all data bytes share the wire at
+        ``beta_Bus``.  Each write's guard is checked independently — a
+        stale-generation write is dropped at the 'NIC' without disturbing
+        its chain-mates — and each doorbell folds in only after its own
+        data landed.
+        """
+        if not writes:
+            return 0.0
+        ep = self._target(dst)
+        nbytes = sum(len(w.data) for w in writes) + 4 * sum(
+            1 for w in writes if w.doorbell is not None
+        )
+        t = self.wire.latency_us(nbytes) + (len(writes) - 1) * self.wire.o_us
+        with self._lock:
+            self.stats.region_puts += 1
+            self.stats.region_put_bytes += nbytes
+            self.stats.modeled_us += t
+            self.stats.modeled_tput_us += (
+                len(writes) - 1
+            ) * self.wire.o_us + self.wire.inverse_throughput_us(nbytes)
+            self.stats.add_kinds({"region": nbytes})
+            for w in writes:
+                if w.guard is not None:
+                    g_off, g_want = w.guard
+                    if ep.read_region_i32(w.region, g_off) != g_want:
+                        self.stats.region_guard_drops += 1
+                        continue
+                if w.data:
+                    ep.write_region(w.region, w.offset, w.data)
+                if w.doorbell is not None:
+                    d_off, d_val, d_op = w.doorbell
+                    cur = ep.read_region_i32(w.region, d_off)
+                    new = (cur | d_val) if d_op == "or" else (cur + d_val)
+                    ep.write_region(w.region, d_off, struct.pack("<i", new))
         return t
 
     def get(self, src: str, dst: str, region: str, offset: int, nbytes: int) -> bytes:
@@ -220,6 +402,7 @@ class Fabric:
             self.stats.get_bytes += nbytes
             self.stats.modeled_us += t
             self.stats.modeled_tput_us += t  # GETs are round-trips; no pipelining
+            self.stats.add_kinds({"region": nbytes})
         return data
 
     # fault injection ---------------------------------------------------------

@@ -13,12 +13,15 @@ stay bf16/f32-default).
 
 from __future__ import annotations
 
+import struct
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
+from .dataplane import SlabLayout
 from .frame import FrameKind
 from .ifunc import (
     ACTION_WIDTH,
@@ -29,6 +32,7 @@ from .ifunc import (
     A_SPAWN,
     IFunc,
 )
+from .transport import RegionWrite
 
 I32 = jnp.int32
 CHASER_PAYLOAD = 4  # [addr, depth, requester, slot]
@@ -102,6 +106,26 @@ def return_result_entry(payload: jax.Array, results: jax.Array) -> jax.Array:
     return results.at[slot].set(value).at[results.shape[0] - 1].add(1)
 
 
+def _chase_slab(max_slots: int, region: str = "results") -> SlabLayout:
+    """Zero-copy layout of the chase result buffer: one i32 word per slot
+    plus the completion counter at the end.  A RETURN payload ``[slot,
+    value]`` becomes one 4-byte WRITE at ``slot*4`` whose doorbell
+    FETCH_ADDs the counter word — the paper's 'final PUT' verbatim."""
+
+    def plan(pay: np.ndarray) -> list[RegionWrite]:
+        slot, value = int(pay[0]), int(pay[1])
+        return [
+            RegionWrite(
+                region,
+                slot * 4,
+                struct.pack("<i", value),
+                doorbell=(max_slots * 4, 1, "add"),
+            )
+        ]
+
+    return SlabLayout(region=region, plan=plan)
+
+
 def make_return_result(
     max_slots: int,
     targets: Sequence[str] = ("cpu-host", "cpu-bf2", "cpu-a64fx", "tpu-v5e"),
@@ -116,6 +140,7 @@ def make_return_result(
         abi="update",
         targets=targets,
         kind=kind,
+        slab=_chase_slab(max_slots),
     )
 
 
@@ -260,6 +285,54 @@ def make_gatherer(
     )
 
 
+def _gather_slab(n_keys: int, dim: int, region: str = "cq_results") -> SlabLayout:
+    """Zero-copy layout of one completion-queue slot: row ``[posmask,
+    epoch, data(K*D)]`` of i32 words.  A partial RETURN's resolved rows
+    become contiguous-run WRITE segments at their position offsets; the
+    doorbell ORs the arrived-position bits into ``posmask`` (idempotent
+    under re-delivery, same as the framed fold) and the guard pins the
+    slot's generation — a stale write for a retired gather is refused at
+    the 'NIC' instead of corrupting the slot's next owner."""
+    K, D = n_keys, dim
+    stride = (2 + K * D) * 4  # slot row bytes
+
+    def plan(pay: np.ndarray) -> list[RegionWrite]:
+        slot, epoch = int(pay[0]), int(pay[1])
+        pos = pay[3 : 3 + K]
+        rows = pay[3 + K :].reshape(K, D)
+        base = slot * stride
+        guard = (base + 4, epoch)
+        valid = np.flatnonzero(pos >= 0)
+        if valid.size == 0:
+            return []
+        bits = int(np.bitwise_or.reduce(1 << (pos[valid].astype(np.int64))))
+        # contiguous (index, position) runs -> one scatter segment each
+        breaks = np.where(
+            (np.diff(valid) != 1) | (np.diff(pos[valid]) != 1)
+        )[0] + 1
+        writes = []
+        for run in np.split(valid, breaks):
+            i0, i1 = int(run[0]), int(run[-1])
+            writes.append(
+                RegionWrite(
+                    region,
+                    base + (2 + int(pos[i0]) * D) * 4,
+                    rows[i0 : i1 + 1].tobytes(),
+                    guard=guard,
+                )
+            )
+        # the doorbell rides the last segment: it fires only after every
+        # data word of this partial landed (fenced WQE chain)
+        last = writes[-1]
+        writes[-1] = RegionWrite(
+            last.region, last.offset, last.data,
+            doorbell=(base, bits, "or"), guard=guard,
+        )
+        return writes
+
+    return SlabLayout(region=region, plan=plan)
+
+
 def make_gather_return(
     max_slots: int,
     n_keys: int,
@@ -313,6 +386,7 @@ def make_gather_return(
         abi="update",
         targets=targets,
         kind=kind,
+        slab=_gather_slab(n_keys, dim, region),
     )
 
 

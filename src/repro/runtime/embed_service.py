@@ -26,7 +26,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core import Cluster, CompletionQueue, GatherFuture
+from repro.core import Cluster, CompletionQueue, DataPlaneConfig, GatherFuture
+from repro.core.transport import WireReportMixin
 from repro.core.xrdma import make_gather_return, make_gatherer
 
 
@@ -55,7 +56,7 @@ class GatherRequest:
 
 
 @dataclass
-class GatherReport:
+class GatherReport(WireReportMixin):
     """Per-run accounting, the gather sibling of ChaseReport."""
 
     results: list[np.ndarray]
@@ -68,11 +69,9 @@ class GatherReport:
     invokes: int = 0  # XLA dispatches across all PEs (batched dispatch = 1)
     coalesced_frames: int = 0
     coalesced_payloads: int = 0
-
-    @property
-    def network_ops(self) -> int:
-        """Wire operations: PUTs + GET round-trips (what batching amortizes)."""
-        return self.puts + self.gets
+    region_puts: int = 0  # one-sided slab-write batches (zero-copy RETURNs)
+    region_put_bytes: int = 0  # data + doorbell bytes those writes carried
+    wire_bytes_by_kind: dict = field(default_factory=dict)
 
 
 class EmbedShardService:
@@ -217,25 +216,26 @@ class EmbedShardService:
         return GatherReport(
             results=results,
             rounds=rounds,
-            puts=st.puts,
-            gets=st.gets,
-            put_bytes=st.put_bytes,
-            get_bytes=st.get_bytes,
-            modeled_us=st.modeled_us,
             invokes=self._invokes() - invokes0,
-            coalesced_frames=st.coalesced_frames,
-            coalesced_payloads=st.coalesced_payloads,
+            **st.report_kwargs(),
         )
 
     def gather(
-        self, key_batches: list[np.ndarray], batching: bool = False
+        self,
+        key_batches: list[np.ndarray],
+        batching: bool = False,
+        dataplane: DataPlaneConfig | None = None,
     ) -> GatherReport:
         """Submit a burst of requests, run to completion, report results in
-        submission order plus wire/dispatch accounting for this run only."""
+        submission order plus wire/dispatch accounting for this run only.
+        ``dataplane`` selects the partial-RETURN protocol: framed (default),
+        zero-copy slab writes into the completion queue's registered region,
+        or rendezvous descriptor + GET."""
         self.cluster.fabric.stats.reset()
         invokes0 = self._invokes()
         n0 = len(self.finished)
         self.cluster.set_batching(batching)
+        self.cluster.set_dataplane(dataplane)
         self.batching = batching
         try:
             rids = [self.submit(k) for k in key_batches]
@@ -243,6 +243,7 @@ class EmbedShardService:
         finally:
             self.batching = False
             self.cluster.set_batching(False)
+            self.cluster.set_dataplane(None)
         # consume this burst's retirements: a long-running service must not
         # accumulate result rows for requests already handed back
         done_now, self.finished = self.finished[n0:], self.finished[:n0]

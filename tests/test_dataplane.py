@@ -1,0 +1,381 @@
+"""Data-plane protocol selection: framed / zero-copy / rendezvous RETURNs.
+
+Acceptance surface:
+* the three protocols are oracle-identical across the ``eager_max`` /
+  ``rndv_min`` thresholds, including payloads exactly AT each threshold
+  (the boundary is part of the contract: ``> eager_max`` goes one-sided,
+  ``>= rndv_min`` goes rendezvous);
+* one-sided slab writes honor doorbell (or/add) and generation-guard
+  semantics — a stale write for a retired slot is refused at the 'NIC';
+* fault injection: a killed requester means the doorbell is never set and
+  ``cancel()`` releases the slab slot; duplicated rendezvous descriptors
+  stay idempotent;
+* registered regions survive non-C-contiguous arrays (transposed views
+  materialize contiguously at registration, like pinning a copy buffer);
+* ``TrafficStats.wire_bytes_by_kind`` reports the framing tax directly.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Cluster,
+    DataPlaneConfig,
+    EndpointDead,
+    Fabric,
+    PointerChaseApp,
+    RegionWrite,
+    chase_ref,
+)
+from repro.core.frame import pack_payloads, unpack_payloads
+from repro.runtime.embed_service import EmbedShardService, ragged_batches
+
+I32 = np.int32
+
+
+def make_service(n_servers, vocab=64, dim=4, n_keys=4, max_slots=8, seed=3):
+    cl = Cluster(n_servers=n_servers, wire="ideal")
+    return EmbedShardService(
+        cl, vocab=vocab, dim=dim, n_keys=n_keys, max_slots=max_slots, seed=seed
+    )
+
+
+# ----------------------------------------------------- registered regions
+class TestRegionContiguity:
+    def test_transposed_view_registers_and_roundtrips(self):
+        """A non-C-contiguous registered array (transposed view) must still
+        byte-address correctly: registration materializes it contiguously."""
+        fab = Fabric("ideal")
+        ep = fab.connect("pe")
+        base = np.arange(12, dtype=I32).reshape(3, 4)
+        view = base.T  # (4, 3), not C-contiguous
+        assert not view.flags.c_contiguous
+        ep.register_region("t", view)
+        assert ep.regions["t"].flags.c_contiguous
+        # reads follow the view's logical (row-major) order, not base's
+        want = np.ascontiguousarray(view).tobytes()
+        assert ep.read_region("t", 0, len(want)) == want
+        # writes round-trip through the same addressing
+        ep.write_region("t", 4, b"\xff\xff\xff\xff")
+        got = np.frombuffer(ep.read_region("t", 0, len(want)), I32)
+        assert got[1] == -1
+        np.testing.assert_array_equal(
+            np.delete(got, 1), np.delete(np.ascontiguousarray(view).reshape(-1), 1)
+        )
+
+    def test_strided_slice_registers(self):
+        fab = Fabric("ideal")
+        ep = fab.connect("pe")
+        arr = np.arange(20, dtype=I32)[::2]  # strided, not contiguous
+        ep.register_region("s", arr)
+        assert ep.read_region("s", 0, 8) == arr[:2].tobytes()
+
+
+# ------------------------------------------------------- one-sided writes
+class TestPutRegion:
+    def setup_method(self):
+        self.fab = Fabric("thor_xeon")
+        self.ep = self.fab.connect("dst")
+        self.ep.register_region("slab", np.zeros(8, I32))
+
+    def test_write_plus_doorbell_or_and_add(self):
+        self.fab.put_region(
+            "src", "dst", "slab", 4, np.array([7], I32).tobytes(),
+            doorbell=(0, 1 << 3, "or"),
+        )
+        self.fab.put_region(
+            "src", "dst", "slab", 8, np.array([9], I32).tobytes(),
+            doorbell=(0, 1 << 3, "or"),  # re-delivery: OR is idempotent
+        )
+        self.fab.put_region("src", "dst", "slab", 12, b"", doorbell=(28, 2, "add"))
+        slab = self.ep.regions["slab"]
+        assert slab[0] == 1 << 3 and slab[1] == 7 and slab[2] == 9
+        assert slab[7] == 2
+        assert self.fab.stats.region_puts == 3
+        # data + one 4-byte doorbell word per op
+        assert self.fab.stats.region_put_bytes == (4 + 4) + (4 + 4) + (0 + 4)
+        assert self.fab.stats.wire_bytes_by_kind["region"] == 20
+
+    def test_guard_refuses_stale_generation(self):
+        self.ep.regions["slab"][1] = 5  # current generation
+        t = self.fab.put_region(
+            "src", "dst", "slab", 8, np.array([42], I32).tobytes(),
+            doorbell=(0, 1, "or"), guard=(4, 4),  # expects retired gen 4
+        )
+        assert t > 0  # the bytes still crossed the wire
+        slab = self.ep.regions["slab"]
+        assert slab[2] == 0 and slab[0] == 0  # neither data nor doorbell applied
+        assert self.fab.stats.region_guard_drops == 1
+        # a live-generation write on the same chain applies
+        self.fab.put_region(
+            "src", "dst", "slab", 8, np.array([42], I32).tobytes(),
+            doorbell=(0, 1, "or"), guard=(4, 5),
+        )
+        assert slab[2] == 42 and slab[0] == 1
+
+    def test_batched_chain_is_one_wire_op(self):
+        writes = [
+            RegionWrite("slab", 4 * i, np.array([i], I32).tobytes()) for i in range(1, 4)
+        ]
+        self.fab.put_region_multi("src", "dst", writes)
+        assert self.fab.stats.region_puts == 1
+        wire = self.fab.wire
+        # one alpha for the chain, o_us per extra segment
+        assert self.fab.stats.modeled_us == pytest.approx(
+            wire.latency_us(12) + 2 * wire.o_us
+        )
+
+    def test_dead_endpoint_raises(self):
+        self.fab.kill("dst")
+        with pytest.raises(EndpointDead):
+            self.fab.put_region("src", "dst", "slab", 0, b"\x00" * 4)
+
+
+# ------------------------------------------------- protocol boundaries
+class TestProtocolBoundaries:
+    """The RETURN payload here is (3 + K + K*D)*4 bytes; thresholds are
+    pinned exactly at/around it to exercise both sides of each boundary."""
+
+    RET_NBYTES = (3 + 4 + 4 * 4) * 4  # K=4, D=4 -> 92
+
+    def _run(self, dataplane, batching=True, seed=11):
+        svc = make_service(2)
+        batches = ragged_batches(svc.vocab, 12, svc.n_keys, seed=seed)
+        svc.gather(batches)  # warm code caches (selection needs cache-warm peers)
+        rep = svc.gather(batches, batching=batching, dataplane=dataplane)
+        for got, want in zip(rep.results, svc.oracle(batches)):
+            np.testing.assert_array_equal(got, want)
+        return svc, rep
+
+    def test_payload_exactly_at_eager_max_stays_framed(self):
+        svc, rep = self._run(DataPlaneConfig.zero_copy(eager_max=self.RET_NBYTES))
+        assert sum(pe.stats.zerocopy_returns for pe in svc.cluster.pes()) == 0
+        assert rep.region_puts == 0
+
+    def test_payload_one_below_eager_max_goes_zerocopy(self):
+        svc, rep = self._run(DataPlaneConfig.zero_copy(eager_max=self.RET_NBYTES - 1))
+        assert sum(pe.stats.zerocopy_returns for pe in svc.cluster.pes()) > 0
+        assert rep.region_puts > 0
+
+    def test_payload_exactly_at_rndv_min_goes_rendezvous(self):
+        svc, rep = self._run(DataPlaneConfig.rendezvous(rndv_min=self.RET_NBYTES))
+        assert sum(pe.stats.rndv_returns for pe in svc.cluster.pes()) > 0
+        assert rep.gets > 0  # descriptors were pulled against
+
+    def test_payload_one_above_rndv_min_stays_framed(self):
+        svc, rep = self._run(DataPlaneConfig.rendezvous(rndv_min=self.RET_NBYTES + 1))
+        assert sum(pe.stats.rndv_returns for pe in svc.cluster.pes()) == 0
+        assert rep.gets == 0
+
+    @pytest.mark.parametrize("batching", [False, True])
+    @pytest.mark.parametrize(
+        "dataplane",
+        [
+            DataPlaneConfig.framed(),
+            DataPlaneConfig.zero_copy(eager_max=0),
+            DataPlaneConfig.rendezvous(rndv_min=0),
+        ],
+        ids=["framed", "zerocopy", "rendezvous"],
+    )
+    @pytest.mark.parametrize("seed", [7, 23])
+    def test_oracle_identical_across_protocols(self, dataplane, batching, seed):
+        self._run(dataplane, batching=batching, seed=seed)
+
+    def test_first_contact_never_selects_rendezvous(self):
+        """A rendezvous descriptor cannot carry code: against a cold peer
+        the RETURN must go framed (code travels and installs), and only
+        later RETURNs ride the descriptor."""
+        svc = make_service(1)
+        cl = svc.cluster
+        cl.set_dataplane(DataPlaneConfig.rendezvous(rndv_min=0))
+        try:
+            fut = cl.client.submit(
+                "server0", "gatherer", svc._pad(np.array([3], I32)), svc.cq, expected=1
+            )
+            cl.run_until(fut.done)
+            np.testing.assert_array_equal(fut.result()[0], svc.table[3])
+        finally:
+            cl.set_dataplane(None)
+        srv = cl.servers[0]
+        assert srv.stats.returns == 1 and srv.stats.rndv_returns == 0
+
+    def test_chase_protocols_match_oracle(self):
+        cl = Cluster(n_servers=2, wire="ideal")
+        app = PointerChaseApp(cl, n_entries=128, max_slots=8, seed=5)
+        starts = np.arange(6, dtype=I32) * 17 % 128
+        want = np.array([chase_ref(app.table, s, 19) for s in starts], I32)
+        app.dapc(starts, 19)  # warm
+        for dp in (
+            None,
+            DataPlaneConfig.zero_copy(eager_max=0),
+            DataPlaneConfig.rendezvous(rndv_min=0),
+        ):
+            rep = app.dapc(starts, 19, batching=True, dataplane=dp)
+            np.testing.assert_array_equal(rep.results, want)
+
+
+# --------------------------------------------------------- fault injection
+class TestDataPlaneFaults:
+    def test_killed_requester_doorbell_never_set_cancel_releases_slot(self):
+        """Kill the requester mid-gather under zero-copy: the server's slab
+        write fails loudly (contained in the batched poll), no doorbell is
+        ever set, and cancel() releases the slab slot for reuse."""
+        svc = make_service(1, max_slots=2)
+        cl = svc.cluster
+        svc.gather([np.array([1], I32)])  # warm code caches
+        cl.set_dataplane(DataPlaneConfig.zero_copy(eager_max=0))
+        try:
+            fut = cl.client.submit(
+                "server0", "gatherer", svc._pad(np.array([5], I32)), svc.cq, expected=1
+            )
+            cl.fabric.kill("client")
+            srv = cl.servers[0]
+            srv.batching = True
+            with pytest.raises(EndpointDead):
+                srv.poll()  # gatherer runs; the one-sided RETURN hits a corpse
+            assert svc.cq._count(fut.slot) == 0  # doorbell never set
+            assert not fut.done()
+            fut.cancel()
+            assert svc.cq.free_slots == 2
+        finally:
+            cl.set_dataplane(None)
+
+    def test_stale_zerocopy_write_refused_by_guard(self):
+        """A zero-copy RETURN for a retired generation must not corrupt the
+        slot's next owner: the guard drops it at the fabric."""
+        svc = make_service(1, max_slots=1)
+        cl = svc.cluster
+        cl.set_dataplane(DataPlaneConfig.zero_copy(eager_max=0))
+        try:
+            fut_a = cl.client.submit(
+                "server0", "gatherer", svc._pad(np.array([3], I32)), svc.cq, expected=1
+            )
+            old_epoch = int(svc.cq.pe.region(svc.cq.region)[fut_a.slot, 1])
+            cl.run_until(fut_a.done)
+            np.testing.assert_array_equal(fut_a.result()[0], svc.table[3])
+            # slot recycles to request B (epoch bumps)
+            fut_b = cl.client.submit(
+                "server0", "gatherer", svc._pad(np.array([40], I32)), svc.cq, expected=1
+            )
+            # replay A's RETURN as a raw stale slab write (old generation)
+            gr = cl.toolchain.lookup("gather_return")
+            K, D = svc.n_keys, svc.dim
+            pay = np.zeros(3 + K + K * D, I32)
+            pay[0], pay[1], pay[2] = fut_a.slot, old_epoch, 1
+            pay[3:3 + K] = [0, -1, -1, -1]
+            drops0 = cl.fabric.stats.region_guard_drops
+            cl.fabric.put_region_multi("server0", "client", gr.slab.plan(pay))
+            assert cl.fabric.stats.region_guard_drops > drops0
+            assert not fut_b.done()  # stale write neither scattered nor completed B
+            cl.run_until(fut_b.done)
+            np.testing.assert_array_equal(fut_b.result()[0], svc.table[40])
+        finally:
+            cl.set_dataplane(None)
+
+    def test_evicted_rndv_staging_is_loud_but_contained(self):
+        """A descriptor whose staging region is gone (ring eviction / source
+        restart) must raise ProtocolError without taking healthy frames in
+        the same batched poll down with it."""
+        from repro.core import ProtocolError
+        from repro.core.frame import rndv_region
+
+        svc = make_service(1, max_slots=2)
+        cl = svc.cluster
+        svc.gather([np.array([1], I32)])  # warm
+        cl.set_dataplane(DataPlaneConfig.rendezvous(rndv_min=0))
+        try:
+            fut_a = cl.client.submit(
+                "server0", "gatherer", svc._pad(np.array([3], I32)), svc.cq, expected=1
+            )
+            fut_b = cl.client.submit(
+                "server0", "gatherer", svc._pad(np.array([5], I32)), svc.cq, expected=1
+            )
+            cl.servers[0].poll()  # two descriptors now parked at the client
+            # evict A's staging region (token 0) before the client pulls
+            cl.servers[0].endpoint.unregister_region(rndv_region("server0", 0))
+            cl.client.batching = True
+            with pytest.raises(ProtocolError, match="staging region"):
+                cl.client.poll()
+            assert fut_b.done()  # the healthy descriptor still retired
+            np.testing.assert_array_equal(fut_b.result()[0], svc.table[5])
+            assert not fut_a.done()
+            fut_a.cancel()
+        finally:
+            cl.client.batching = False
+            cl.set_dataplane(None)
+
+    def test_duplicated_rndv_descriptor_is_idempotent(self):
+        """The wire re-delivering a rendezvous descriptor re-pulls the same
+        staged payload — the position-bitmask fold stays exactly idempotent."""
+        svc = make_service(2)
+        cl = svc.cluster
+        keys = np.array([3, 40], I32)  # spans both shards
+        svc.gather([keys])  # warm
+        cl.set_dataplane(DataPlaneConfig.rendezvous(rndv_min=0))
+        try:
+            fut = cl.client.submit(
+                "server0", "gatherer", svc._pad(keys), svc.cq, expected=len(keys)
+            )
+            for _ in range(4):
+                for pe in cl.pes():
+                    pe.poll()
+                inbox = cl.client.endpoint.inbox
+                for buf in list(inbox):
+                    inbox.append(bytearray(buf))
+            cl.run_until(fut.done)
+            np.testing.assert_array_equal(fut.result()[: len(keys)], svc.table[keys])
+        finally:
+            cl.set_dataplane(None)
+
+
+# --------------------------------------------------------- byte accounting
+class TestWireBytesByKind:
+    def test_framing_tax_reported_directly(self):
+        """header + payload + code + region must tile the wire exactly, and
+        the zero-copy plane must move the row bytes from ``payload`` (inside
+        frames) to ``region`` (one-sided)."""
+        svc = make_service(4)
+        batches = ragged_batches(svc.vocab, 16, svc.n_keys, seed=2)
+        svc.gather(batches)  # warm
+        framed = svc.gather(batches, batching=True)
+        k = framed.wire_bytes_by_kind
+        assert k["region"] == 0 and k["code"] == 0  # steady state, all framed
+        assert k["header"] + k["payload"] == framed.wire_bytes
+        zc = svc.gather(
+            batches, batching=True, dataplane=DataPlaneConfig.zero_copy(eager_max=0)
+        )
+        kz = zc.wire_bytes_by_kind
+        assert kz["region"] == zc.region_put_bytes > 0
+        assert sum(kz.values()) == zc.wire_bytes
+        assert kz["payload"] < k["payload"]  # the framing tax left the frames
+
+    def test_code_bytes_attributed_on_first_contact(self):
+        svc = make_service(1)
+        rep = svc.gather([np.array([1], I32)])  # cold: code travels
+        assert rep.wire_bytes_by_kind["code"] > 0
+
+    def test_get_baseline_is_pure_region_bytes(self):
+        svc = make_service(2)
+        rep = svc.gather_get([np.array([1, 40], I32)])
+        assert rep.wire_bytes_by_kind["region"] == rep.get_bytes == rep.wire_bytes
+
+
+# ------------------------------------------------------- varint batch wire
+class TestVarintBatchFormat:
+    def test_uniform_subheader_is_smaller_than_fixed(self):
+        """The varint sub-header undercuts the 8-byte fixed (count, item)
+        pair it replaced for every realistic burst."""
+        payloads = [bytes([i]) * 44 for i in range(16)]
+        section = pack_payloads(payloads)
+        overhead = len(section) - sum(len(p) for p in payloads)
+        assert overhead < 8
+        assert unpack_payloads(section) == payloads
+
+    def test_ragged_offset_table_roundtrips(self):
+        payloads = [b"", b"a", b"bc" * 100, bytes(300)]
+        assert unpack_payloads(pack_payloads(payloads)) == payloads
+
+    def test_large_uniform_roundtrips(self):
+        payloads = [bytes(556)] * 300  # multi-byte varints on both fields
+        section = pack_payloads(payloads)
+        assert unpack_payloads(section) == payloads
