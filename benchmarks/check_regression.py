@@ -8,11 +8,13 @@ sweep sizes) skips that file loudly instead of comparing apples to pears.
 
 Guarded metrics — "higher is better" unless marked ``<``:
 
-  BENCH_dapc.json    dispatch_ratio, modeled_us_reduction_pct
-  BENCH_gather.json  dispatch_ratio, batched_vs_get_ops_ratio,
-                     batched_vs_get_modeled_pct,
-                     zerocopy_vs_batched_modeled_pct,
-                     zerocopy_vs_get_bytes_ratio (<)
+  BENCH_dapc.json       dispatch_ratio, modeled_us_reduction_pct
+  BENCH_gather.json     dispatch_ratio, batched_vs_get_ops_ratio,
+                        batched_vs_get_modeled_pct,
+                        zerocopy_vs_batched_modeled_pct,
+                        zerocopy_vs_get_bytes_ratio (<)
+  BENCH_propagate.json  client_dispatch_ratio, modeled_us_reduction_pct,
+                        warm_modeled_us_reduction_pct, warm_code_bytes (<)
 
 ``python -m benchmarks.check_regression`` (run from the repo root after
 regenerating the BENCH files); exits non-zero on any regression.
@@ -38,6 +40,12 @@ GUARDS = {
         ("batched_vs_get_modeled_pct", True),
         ("zerocopy_vs_batched_modeled_pct", True),
         ("zerocopy_vs_get_bytes_ratio", False),
+    ],
+    "BENCH_propagate.json": [
+        ("client_dispatch_ratio", True),
+        ("modeled_us_reduction_pct", True),
+        ("warm_modeled_us_reduction_pct", True),
+        ("warm_code_bytes", False),  # a warm tree must ship zero code bytes
     ],
 }
 

@@ -1,0 +1,166 @@
+"""Recursive code propagation A/B — flat push vs tree multicast vs warm tree.
+
+The paper's signature claim (Sec. I) is that injected code "can recursively
+propagate itself to other remote machines"; this benchmark measures what
+that buys over the point-to-point distribution every pre-propagation
+workload paid:
+
+  ``flat``   the client pushes the ifunc (code + payload) to each of the N
+             servers itself: N client dispatches, N code frames serialized
+             through one NIC.
+  ``tree``   ``xrdma_bcast``: the client publishes to its spanning-tree
+             children only (ceil(log2(N+1)) sends for the binomial
+             default); every PE that installs the code re-publishes one
+             level down.  Same N code deliveries in total — the win is the
+             root's dispatch count and the *parallel completion time*.
+  ``warm``   the same tree again with every cache warm: hops are
+             digest-only frames, zero code bytes move.
+
+Accounting: ``modeled_us`` per arm is the LogP-style multicast completion
+time (:func:`repro.core.propagate.tree_completion_us` — sender serializes
+successive child frames ``o_us`` apart, each hop pays ``alpha_us``,
+subtrees proceed in parallel); ``modeled_serial_us`` is the fabric's
+serial wire-latency sum, reported for honesty — the tree never wins that
+one (same code bytes plus hop headers), which is exactly why the
+completion model exists.  Every arm is oracle-checked: the broadcast TSI
+payload must have incremented every server's counter exactly once per
+multicast.
+
+``python -m benchmarks.propagate --ab --json BENCH_propagate.json``
+records the committed trajectory; ``--tiny`` is the CI fast-lane smoke.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Cluster, PropagationConfig, make_tsi
+from repro.sharding.collectives import (
+    PropagateReport,
+    xrdma_bcast,
+    xrdma_flat_push,
+)
+
+from .hw_model import PROFILES
+
+
+def _fresh_cluster(n_servers: int, profile: str) -> Cluster:
+    cl = Cluster(n_servers=n_servers, wire=profile)
+    for pe in cl.servers:
+        pe.register_region("counter", np.zeros(1, np.int32))
+    cl.toolchain.publish(make_tsi())
+    return cl
+
+
+def _check_counters(cl: Cluster, want: int) -> None:
+    got = [int(pe.region("counter")[0]) for pe in cl.servers]
+    assert got == [want] * cl.n_servers, (got, want)
+
+
+def _arm_dict(rep: PropagateReport) -> dict:
+    return {
+        "client_sends": rep.client_sends,
+        "client_code_sends": rep.client_code_sends,
+        "publishes": rep.publishes,
+        "hop_frames": rep.hop_frames,
+        "covered": rep.covered,
+        "n_targets": rep.n_targets,
+        "wire_bytes": rep.wire_bytes,
+        "wire_bytes_by_kind": rep.wire_bytes_by_kind,
+        "modeled_us": round(rep.modeled_completion_us, 3),
+        "modeled_serial_us": round(rep.modeled_us, 3),
+    }
+
+
+def propagate_ab(
+    n_servers: int = 16,
+    profile: str = "thor_bf2",
+    topology: str = "binomial",
+    k: int = 2,
+    ttl: int = 16,
+    value: int = 7,
+) -> dict:
+    """Flat-push vs tree vs warm-tree multicast of one TSI (code+payload).
+
+    Fresh clusters for the two cold arms so both pay first-contact code
+    movement; the warm arm reruns the tree cluster with every cache hot.
+    """
+    cfg = PropagationConfig(topology=topology, k=k, ttl=ttl)
+    payload = np.array([value], np.int32)
+
+    cl_flat = _fresh_cluster(n_servers, profile)
+    flat = xrdma_flat_push(cl_flat, "tsi", payload)
+    _check_counters(cl_flat, value)
+
+    cl_tree = _fresh_cluster(n_servers, profile)
+    tree = xrdma_bcast(cl_tree, "tsi", payload, config=cfg)
+    _check_counters(cl_tree, value)
+
+    warm = xrdma_bcast(cl_tree, "tsi", payload, config=cfg)
+    _check_counters(cl_tree, 2 * value)
+
+    assert flat.covered == flat.n_targets == n_servers
+    assert tree.covered == tree.n_targets == n_servers
+    assert warm.covered == n_servers
+
+    return {
+        "config": {
+            "n_servers": n_servers,
+            "profile": profile,
+            "topology": topology,
+            "k": k,
+            "ttl": ttl,
+        },
+        "flat": _arm_dict(flat),
+        "tree": _arm_dict(tree),
+        "warm": _arm_dict(warm),
+        "client_dispatch_ratio": round(
+            flat.client_sends / max(tree.client_sends, 1), 2
+        ),
+        "modeled_us_reduction_pct": round(
+            100 * (1 - tree.modeled_completion_us / flat.modeled_completion_us),
+            2,
+        ),
+        "warm_modeled_us_reduction_pct": round(
+            100 * (1 - warm.modeled_completion_us / flat.modeled_completion_us),
+            2,
+        ),
+        "warm_code_bytes": warm.wire_bytes_by_kind.get("code", 0),
+        "oracle_checked": True,
+    }
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ab", action="store_true", help="flat/tree/warm A/B (the only mode)")
+    ap.add_argument("--json", metavar="PATH", help="write the result dict to PATH")
+    ap.add_argument("--servers", type=int, default=16)
+    ap.add_argument("--profile", default="thor_bf2", choices=PROFILES)
+    ap.add_argument("--topology", default="binomial", choices=("binomial", "kary"))
+    ap.add_argument("--k", type=int, default=2)
+    ap.add_argument("--tiny", action="store_true", help="smoke-test size (4 servers)")
+    args = ap.parse_args()
+
+    out = propagate_ab(
+        n_servers=4 if args.tiny else args.servers,
+        profile=args.profile,
+        topology=args.topology,
+        k=args.k,
+    )
+    if not args.tiny:
+        # acceptance floor: the tree must beat flat push on both headline
+        # metrics at >= 16 PEs (at 4 it merely has to be correct)
+        assert out["client_dispatch_ratio"] >= 3.0, out["client_dispatch_ratio"]
+        assert out["modeled_us_reduction_pct"] > 0.0, out["modeled_us_reduction_pct"]
+    text = json.dumps(out, indent=1, default=float)
+    print(text)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

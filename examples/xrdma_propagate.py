@@ -1,0 +1,90 @@
+"""Recursive code propagation, end to end (paper Sec. I's signature claim).
+
+Three escalating demos on the simulated RDMA fabric:
+
+1. tree multicast — one TSI ifunc reaches every server with O(log N)
+   client dispatches (vs the flat O(N) push), warm re-broadcast moves
+   zero code bytes;
+2. multi-hop reduction — every PE contributes a vector, partials fold
+   at each tree level (propagate-ABI masked scan) and only completed
+   subtrees forward up;
+3. self-propagation — a gossiper ifunc whose *shipped code* re-publishes
+   itself around a ring: the client sends one frame, the code does the
+   rest.
+
+Run:  PYTHONPATH=src python examples/xrdma_propagate.py [--tiny]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core import Cluster, PropagationConfig, make_gossiper, make_tsi
+from repro.sharding.collectives import xrdma_bcast, xrdma_flat_push, xrdma_reduce
+
+
+def bcast_demo(n_servers: int) -> None:
+    print(f"== tree multicast vs flat push ({n_servers} servers, thor_bf2) ==")
+
+    def fresh() -> Cluster:
+        cl = Cluster(n_servers=n_servers, wire="thor_bf2")
+        for pe in cl.servers:
+            pe.register_region("counter", np.zeros(1, np.int32))
+        cl.toolchain.publish(make_tsi())
+        return cl
+
+    payload = np.array([7], np.int32)
+    flat = xrdma_flat_push(fresh(), "tsi", payload)
+    cl = fresh()
+    tree = xrdma_bcast(cl, "tsi", payload)
+    warm = xrdma_bcast(cl, "tsi", payload)
+    assert all(int(pe.region("counter")[0]) == 14 for pe in cl.servers)
+    print("arm    client_sends  code_KB  completion_us")
+    for label, rep in (("flat", flat), ("tree", tree), ("warm", warm)):
+        print(
+            f"{label:6s} {rep.client_sends:12d} "
+            f"{rep.wire_bytes_by_kind['code'] / 1024:8.1f} "
+            f"{rep.modeled_completion_us:13.1f}"
+        )
+    print(f"tree multicast verified: every counter incremented exactly once "
+          f"per broadcast, {flat.client_sends}->{tree.client_sends} client "
+          f"dispatches")
+
+
+def reduce_demo(n_servers: int) -> None:
+    print(f"\n== multi-hop tree reduction ({n_servers} servers) ==")
+    cl = Cluster(n_servers=n_servers, wire="thor_bf2")
+    rng = np.random.default_rng(0)
+    values = rng.integers(0, 100, (n_servers + 1, 4)).astype(np.int32)
+    rep = xrdma_reduce(cl, values)
+    assert np.array_equal(rep.result, values.sum(axis=0))
+    print(f"reduced {n_servers + 1} x 4-vector in {rep.rounds} rounds, "
+          f"{rep.forwards} upward partials (tree-folded), result "
+          f"{rep.result.tolist()} verified against numpy sum")
+
+
+def gossip_demo() -> None:
+    print("\n== self-propagating code (gossiper ring) ==")
+    cl = Cluster(n_servers=3, wire="ideal")
+    n = 4
+    for i, pe in enumerate(cl.pes()):
+        pe.register_region("gossip_log", np.zeros(2, np.int32))
+        pe.register_cap("gossip_meta", np.array([i, n], np.int32))
+    cl.toolchain.publish(make_gossiper())
+    cl.client.send_ifunc("server0", "gossiper", np.array([2, 5], np.int32))
+    cl.drain()
+    visited = [pe.name for pe in cl.pes() if pe.region("gossip_log")[0]]
+    print(f"client sent ONE frame to server0; the code then re-published "
+          f"itself: visited {visited}")
+    assert visited == ["server0", "server1", "server2"]
+    print("gossip verified: one visit per ring hop, zero further client sends")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true", help="smoke-test sizes")
+    args = ap.parse_args()
+    n = 4 if args.tiny else 16
+    bcast_demo(n)
+    reduce_demo(4 if args.tiny else 8)
+    gossip_demo()

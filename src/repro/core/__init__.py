@@ -3,11 +3,12 @@
 Public API re-exports.  Layering:
 
   transport  — fabric, endpoints, one-sided PUT/GET, wire models
-  frame      — message frames + truncation protocol (Figs. 2/3)
+  frame      — message frames + truncation protocol (Figs. 2/3) + hop headers
   bitcode    — fat-bitcode archives over jax.export blobs (Sec. III-C)
   cache      — SenderCache / TargetCodeCache (Sec. III-D, Fig. 4)
-  ifunc      — IFunc + PE runtime + action ABI
-  xrdma      — Chaser / ReturnResult / TSI / Spawner operations
+  propagate  — spanning-tree multicast shapes + completion model (Sec. I)
+  ifunc      — IFunc + PE runtime + action ABI + PUBLISH propagation path
+  xrdma      — Chaser / ReturnResult / TSI / Gatherer / Reducer / Gossiper
   cluster    — in-process cluster + deterministic scheduler
   pointer_chase — DAPC miniapp + GBPC baseline (Secs. IV-C/D)
 """
@@ -21,18 +22,23 @@ from .frame import (
     Frame,
     FrameFlags,
     FrameKind,
+    HopHeader,
     MAGIC,
     coalesce,
     delivery_complete,
+    pack_hop,
     peek_header,
+    split_hop,
     split_payloads,
     unpack,
+    unpack_hop,
 )
 from .ifunc import (
     ACTION_WIDTH,
     A_DONE,
     A_FORWARD,
     A_NOP,
+    A_PUBLISH,
     A_RETURN,
     A_SPAWN,
     CompletionQueue,
@@ -44,6 +50,15 @@ from .ifunc import (
     Toolchain,
 )
 from .pointer_chase import ChaseReport, PointerChaseApp, chase_ref, make_chain
+from .propagate import (
+    PropagationConfig,
+    subtree_sizes,
+    tree_children,
+    tree_children_map,
+    tree_completion_us,
+    tree_depth,
+    tree_parent,
+)
 from .transport import (
     Endpoint,
     EndpointDead,
@@ -56,6 +71,8 @@ from .xrdma import (
     make_chaser,
     make_gather_return,
     make_gatherer,
+    make_gossiper,
+    make_reducer,
     make_return_result,
     make_spawner,
     make_tsi,
@@ -66,6 +83,7 @@ __all__ = [
     "A_DONE",
     "A_FORWARD",
     "A_NOP",
+    "A_PUBLISH",
     "A_RETURN",
     "A_SPAWN",
     "BitcodeSlice",
@@ -83,11 +101,13 @@ __all__ = [
     "FrameFlags",
     "FrameKind",
     "GatherFuture",
+    "HopHeader",
     "IFunc",
     "ISAMismatch",
     "MAGIC",
     "PE",
     "PointerChaseApp",
+    "PropagationConfig",
     "ProtocolError",
     "RegionWrite",
     "SenderCache",
@@ -104,11 +124,22 @@ __all__ = [
     "make_chaser",
     "make_gather_return",
     "make_gatherer",
+    "make_gossiper",
+    "make_reducer",
     "make_return_result",
     "make_spawner",
     "make_tsi",
+    "pack_hop",
     "peek_header",
     "platform_of",
+    "split_hop",
     "split_payloads",
+    "subtree_sizes",
+    "tree_children",
+    "tree_children_map",
+    "tree_completion_us",
+    "tree_depth",
+    "tree_parent",
     "unpack",
+    "unpack_hop",
 ]

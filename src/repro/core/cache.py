@@ -58,6 +58,15 @@ class SenderCache:
         with self._lock:
             return (endpoint, digest) in self._seen
 
+    def mark(self, endpoint: str, digest: str) -> None:
+        """Record that the target holds this code *without* a send having
+        happened: a completed tree publish confirmed coverage (the paper's
+        predeployment-by-propagation), so later sends may truncate.  Unlike
+        :meth:`check_and_add` this neither counts a hit nor a miss — no
+        frame moved."""
+        with self._lock:
+            self._seen.add((endpoint, digest))
+
     def check_and_add(self, endpoint: str, digest: str, code_nbytes: int) -> bool:
         """True if the target already has the code (=> truncate the send)."""
         key = (endpoint, digest)
@@ -69,6 +78,13 @@ class SenderCache:
             self._seen.add(key)
             self.stats.misses += 1
             return False
+
+    def forget(self, endpoint: str, digest: str) -> None:
+        """Drop one (endpoint, digest) entry: the sender has reason to
+        believe this specific delivery never happened (failed PUT, subtree
+        re-parent after a drop) and must re-send the full frame."""
+        with self._lock:
+            self._seen.discard((endpoint, digest))
 
     def invalidate_endpoint(self, endpoint: str) -> None:
         """Drop all entries for an endpoint (e.g. PE restarted after a fault:

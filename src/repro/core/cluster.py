@@ -15,6 +15,7 @@ from typing import Callable, Sequence
 
 from .dataplane import DataPlaneConfig
 from .ifunc import PE, Toolchain
+from .propagate import PropagationConfig
 from .transport import Fabric, WireModel
 
 
@@ -57,8 +58,92 @@ class Cluster:
         for pe in self.pes():
             pe.dataplane = cfg
 
+    def set_propagation(self, config: PropagationConfig | None) -> None:
+        """Install one propagation policy (tree topology / fanout / ttl)
+        on every PE, the way :meth:`set_dataplane` threads the data plane;
+        ``None`` restores the default (binomial, DEFAULT_TTL)."""
+        cfg = config or PropagationConfig()
+        for pe in self.pes():
+            pe.propagation = cfg
+
     def pes(self) -> list[PE]:
         return [*self.servers, self.client]
+
+    def drain_rounds(self, max_rounds: int = 100_000) -> int:
+        """Poll every live PE until a full round makes no progress; returns
+        the round count.  (Unlike :meth:`drain` this needs no idle-grace
+        heuristics: propagation traffic is self-contained, so one
+        zero-progress round means the fabric is empty.)"""
+        rounds = 0
+        while rounds < max_rounds:
+            rounds += 1
+            if sum(pe.poll() for pe in self.alive_pes()) == 0:
+                break
+        return rounds
+
+    def publish_and_cover(
+        self,
+        name: str,
+        payload: bytes = b"",
+        config: PropagationConfig | None = None,
+        ttl: int | None = None,
+        reparent: bool = True,
+        max_rounds: int = 100_000,
+    ) -> tuple[int, int, list[PE]]:
+        """The fault-handling core every tree publish shares: publish from
+        the client down the spanning tree, drain, and re-cover any alive
+        server a dropped hop or dead mid-tree PE left without the code by
+        a *direct* root publish (ttl=1; ``publish_to`` forgets the stale
+        sender-cache row so the code travels again).  Returns ``(rounds,
+        reparented, still_uncovered)`` — reporting layers
+        (:func:`repro.sharding.collectives.xrdma_bcast`) and strict layers
+        (:meth:`distribute_code`) decide what partial coverage means.
+        """
+        cfg = config or PropagationConfig()
+        self.set_propagation(cfg)
+        client = self.client
+        hexd = client._resolve_source(name).digest.hex()
+        alive = [pe for pe in self.servers if pe.endpoint.alive]
+
+        def uncovered() -> list[PE]:
+            return [
+                pe for pe in alive if pe.target_cache.lookup_digest(hexd) is None
+            ]
+
+        client.publish_ifunc(name, payload, ttl=ttl, config=cfg)
+        rounds = self.drain_rounds(max_rounds)
+        reparented = 0
+        if reparent:
+            missing = uncovered()
+            for pe in missing:
+                client.publish_to(pe.name, name, payload, ttl=1)
+                reparented += 1
+            if missing:
+                rounds += self.drain_rounds(max_rounds)
+        return rounds, reparented, uncovered()
+
+    def distribute_code(self, name: str, config: PropagationConfig | None = None) -> None:
+        """Tree-publish an ifunc's code from the client to every alive
+        server (code-only publish: install + re-publish, no invoke), then
+        mark *every* sender's cache for the covered peers so the whole
+        subsequent request stream — client launches and server-to-server
+        FORWARDs alike — travels digest-only.  A degraded cluster
+        distributes exactly as a healthy one minus its corpses
+        (:meth:`publish_and_cover` re-parents orphaned subtrees); residual
+        gaps are an error here, because a workload is about to send
+        digest-only frames that an uncovered PE cannot decode.
+        """
+        _, _, still = self.publish_and_cover(name, b"", config=config)
+        if still:  # direct publishes cannot be lost on this fabric
+            raise TimeoutError(
+                f"code distribution of {name!r} left "
+                f"{[pe.name for pe in still]} uncovered"
+            )
+        hexd = self.client._resolve_source(name).digest.hex()
+        alive = [pe for pe in self.servers if pe.endpoint.alive]
+        for sender in self.alive_pes():
+            for pe in alive:
+                sender.sender_cache.mark(pe.name, hexd)
 
     def alive_pes(self) -> list[PE]:
         return [pe for pe in self.pes() if pe.endpoint.alive]
@@ -101,9 +186,12 @@ class Cluster:
         self.fabric.kill(f"server{idx}")
 
     def restart_server(self, idx: int) -> PE:
-        """Process restart: fresh endpoint, empty caches — every sender's
-        cache entry for this endpoint is now stale (tested by the runtime
-        layer, which invalidates via SenderCache.invalidate_endpoint)."""
+        """Process restart: fresh endpoint, empty caches — and every other
+        PE's sender-cache entries for this endpoint dropped, because the
+        restarted process no longer holds any code a sender believes it
+        sent.  Without the invalidation a sender would ship digest-only
+        (truncated) frames the fresh PE cannot decode; with it, the next
+        send pays the full code frame once and re-warms."""
         name = f"server{idx}"
         # PE() connects a fresh endpoint, displacing the dead one: fresh
         # inbox, no regions, empty caches — exactly a restarted process.
@@ -115,4 +203,10 @@ class Cluster:
             peers=self.servers[idx].peers,
         )
         self.servers[idx] = pe
+        for peer in self.pes():
+            peer.sender_cache.invalidate_endpoint(name)
+            # the restarted process re-mints publish ids from zero: peers
+            # must drop the dedup keys of its previous life or its fresh
+            # publishes of known code are silently swallowed as duplicates
+            peer.forget_publisher(idx)
         return pe

@@ -75,6 +75,7 @@ class FrameFlags(IntEnum):
     NONE = 0
     RESULT = 1  # carries a ReturnResult payload
     BATCH = 2  # PAYLOAD section is a multi-payload pack (see module docstring)
+    HOP = 4  # PAYLOAD section starts with a propagation hop header (PUBLISH)
 
 
 # 16-byte rendezvous descriptor: [src_peer_index, token, data_nbytes, reserved].
@@ -88,6 +89,132 @@ RNDV_DESC_NBYTES = RNDV_DESC.size
 def rndv_region(src_name: str, token: int) -> str:
     """Staging-region naming convention shared by both ends of a rendezvous."""
     return f"rndv/{src_name}/{token}"
+
+
+def pack_rndv(src_idx: int, token: int, nbytes: int) -> bytes:
+    """Build one 16-byte rendezvous descriptor (reserved word always 0)."""
+    return RNDV_DESC.pack(src_idx, token, nbytes, 0)
+
+
+def unpack_rndv(desc: bytes) -> tuple[int, int, int]:
+    """Parse + validate one rendezvous descriptor -> (src_idx, token,
+    nbytes).  Anything that is not exactly one well-formed descriptor —
+    truncation, trailing bytes, a set reserved word — is a loud
+    :class:`CorruptFrame`, never a silent misparse."""
+    if len(desc) != RNDV_DESC.size:
+        raise CorruptFrame(
+            f"malformed rendezvous descriptor: {len(desc)} bytes "
+            f"(want {RNDV_DESC.size})"
+        )
+    src_idx, token, nbytes, reserved = RNDV_DESC.unpack(desc)
+    if reserved != 0:
+        raise CorruptFrame("malformed rendezvous descriptor: reserved word set")
+    return src_idx, token, nbytes
+
+
+# ------------------------------------------------------- propagation hops
+# A PUBLISH frame (``FrameFlags.HOP``) prefixes its PAYLOAD section with a
+# hop header: the recursive-propagation state a re-publishing PE needs to
+# keep the multicast a *tree* —
+#
+#     ttl(u8)  k(u8)  root(u16)  pub_id(u32)  n_path(u16)  pad(2B)
+#     path_digest(u64)  path[n_path](u16 each)
+#
+# ``ttl``    remaining hops this publish may still travel; a frame arriving
+#            with ttl == 0 is expired and refused, a PE republishing sends
+#            ttl - 1 and stops (silently) once that would hit zero.
+# ``k``      tree shape on the wire: 0 = binomial, else k-ary fanout — so a
+#            mid-tree PE needs no out-of-band config agreement.
+# ``root``   peer index the publish originated at (tree root).
+# ``pub_id`` root-chosen id; (code digest, root, pub_id) is the dedup key
+#            that makes delivery exactly-once per PE under a fabric that is
+#            only at-least-once (and is what breaks forwarding cycles).
+# ``path``   peer indices visited so far, root first; a PE that finds its
+#            own index here refuses the hop (cycle).  ``path_digest`` is a
+#            FNV-1a over (k, root, pub_id, path): truncated or tampered hop
+#            headers are rejected before any of their fields are trusted.
+_HOP_FMT = struct.Struct("<BBHIH2xQ")
+HOP_FIXED_NBYTES = _HOP_FMT.size  # 20
+MAX_HOP_PATH = 1024  # sanity bound: longest admissible visited-path
+
+
+def _fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+@dataclass(frozen=True)
+class HopHeader:
+    """Parsed propagation hop state (see wire layout above)."""
+
+    ttl: int
+    root: int
+    pub_id: int
+    path: tuple[int, ...]
+    k: int = 0  # 0 = binomial tree, else k-ary fanout
+
+    @property
+    def nbytes(self) -> int:
+        return HOP_FIXED_NBYTES + 2 * len(self.path)
+
+    def digest(self) -> int:
+        body = struct.pack("<BHI", self.k, self.root, self.pub_id)
+        body += struct.pack(f"<{len(self.path)}H", *self.path)
+        return _fnv1a64(body)
+
+    def child_hop(self, me: int) -> "HopHeader":
+        """The header a PE at index ``me`` republishes with: one hop spent,
+        itself appended to the visited path."""
+        return HopHeader(
+            ttl=self.ttl - 1,
+            root=self.root,
+            pub_id=self.pub_id,
+            path=(*self.path, me),
+            k=self.k,
+        )
+
+
+def hop_nbytes(n_path: int) -> int:
+    return HOP_FIXED_NBYTES + 2 * n_path
+
+
+def pack_hop(hop: HopHeader) -> bytes:
+    if not 0 <= hop.ttl <= 255:
+        raise ValueError(f"hop ttl {hop.ttl} out of u8 range")
+    if len(hop.path) > MAX_HOP_PATH:
+        raise ValueError(f"hop path longer than {MAX_HOP_PATH}")
+    head = _HOP_FMT.pack(
+        hop.ttl, hop.k, hop.root, hop.pub_id, len(hop.path), hop.digest()
+    )
+    return head + struct.pack(f"<{len(hop.path)}H", *hop.path)
+
+
+def unpack_hop(buf: bytes, off: int = 0) -> tuple[HopHeader, int]:
+    """Parse one hop header at ``off``; returns (hop, next_off).  Truncated,
+    over-long, or digest-mismatched headers raise :class:`CorruptFrame`."""
+    if len(buf) < off + HOP_FIXED_NBYTES:
+        raise CorruptFrame("corrupt hop header: truncated")
+    ttl, k, root, pub_id, n_path, digest = _HOP_FMT.unpack_from(buf, off)
+    if n_path > MAX_HOP_PATH:
+        raise CorruptFrame(f"corrupt hop header: path length {n_path}")
+    end = off + HOP_FIXED_NBYTES + 2 * n_path
+    if len(buf) < end:
+        raise CorruptFrame("corrupt hop header: truncated path")
+    path = struct.unpack_from(f"<{n_path}H", buf, off + HOP_FIXED_NBYTES)
+    hop = HopHeader(ttl=ttl, root=root, pub_id=pub_id, path=tuple(path), k=k)
+    if hop.digest() != digest:
+        raise CorruptFrame("corrupt hop header: path digest mismatch")
+    return hop, end
+
+
+def split_hop(payload: bytes) -> tuple[HopHeader, bytes]:
+    """Strip the hop header off a PUBLISH frame's payload section; returns
+    (hop, inner payload bytes — possibly empty for a code-only publish)."""
+    hop, off = unpack_hop(payload, 0)
+    return hop, payload[off:]
 
 
 # ------------------------------------------------------------------ varint
@@ -236,6 +363,8 @@ class Frame:
         payload = len(self.payload)
         if self.flags & FrameFlags.BATCH:
             payload -= batch_subheader_nbytes(self.payload)
+        if self.flags & FrameFlags.HOP:
+            payload -= unpack_hop(self.payload)[1]  # hop header is framing
         header = self.cached_nbytes - payload
         code = 0 if cached else self.full_nbytes - self.cached_nbytes
         return {"header": header, "payload": payload, "code": code}
@@ -354,6 +483,10 @@ def coalesce(frames: "list[Frame]") -> Frame:
     """
     if len(frames) == 1:
         return frames[0]
+    if any(f.flags & FrameFlags.HOP for f in frames):
+        # each hop frame's PAYLOAD starts with its own per-edge path header;
+        # packing them behind one header would splice paths together
+        raise ValueError("coalesce: PUBLISH hop frames travel individually")
     head = frames[0]
     item = len(head.payload)
     for f in frames[1:]:

@@ -28,7 +28,17 @@ against):
   all, to peer ``dst`` with payload ``p[:plen]``) | 2 RETURN (send the
   ifunc named by the ``returns:`` dep to ``dst``) | 3 SPAWN (send the
   ifunc named by the ``spawn:`` dep — "generate new code") | 4 NOP
-  (no action; skipped by the runtime).
+  (no action; skipped by the runtime) | 5 PUBLISH (re-publish *this same
+  ifunc* to peer ``dst`` under a fresh propagation hop header — ``p0`` is
+  the hop ttl, ``p[1:plen]`` the published payload; this is how shipped
+  code recursively propagates itself, Sec. I).
+* ``propagate`` ABI — ``entry(payload, region, *deps) -> (new_region,
+  actions)``: one entry both folds into its linked region (like
+  ``update``) *and* emits action rows (like ``xrdma``).  Under the
+  batched runtime the region fold is the same masked ``lax.scan`` as
+  ``update`` — which is exactly what a tree reduction needs: child
+  partials fold into the accumulator in one dispatch, and the row whose
+  fold completes the subtree emits the upward FORWARD.
 
   An xrdma entry may instead return an ``(R, W)`` i32 *matrix* of action
   rows; the runtime applies the rows in order.  ``W`` only has to satisfy
@@ -57,6 +67,7 @@ Dependency tags (the wire ``DEPS`` list, Sec. III-C):
 
 from __future__ import annotations
 
+import hashlib
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -72,19 +83,25 @@ from .cache import CachedExecutable, SenderCache, TargetCodeCache
 from .dataplane import DataPlaneConfig, SlabLayout
 from .frame import (
     Frame,
+    FrameFlags,
     FrameKind,
+    HopHeader,
     ProtocolError,
-    RNDV_DESC,
     coalesce,
+    pack_hop,
+    pack_rndv,
     peek_header,
     rndv_region,
+    split_hop,
     split_payloads,
     unpack,
+    unpack_rndv,
 )
+from .propagate import PropagationConfig, tree_children
 from .transport import EndpointDead, Fabric, RegionWrite
 
 ACTION_WIDTH = 11  # [action, dst, plen, p0..p7]
-A_DONE, A_FORWARD, A_RETURN, A_SPAWN, A_NOP = 0, 1, 2, 3, 4
+A_DONE, A_FORWARD, A_RETURN, A_SPAWN, A_NOP, A_PUBLISH = 0, 1, 2, 3, 4, 5
 
 # rendezvous staging ring depth: outstanding staged RETURN payloads per PE
 # before the oldest registration is reclaimed (bounds pinned memory the way
@@ -210,10 +227,21 @@ class PEStats:
     forwards: int = 0
     returns: int = 0
     spawns: int = 0
+    sends: int = 0  # frames this PE PUT on the wire (any kind)
+    code_sends: int = 0  # of those, frames that carried code bytes
     zerocopy_returns: int = 0  # RETURNs that went one-sided (no frame/dispatch)
     rndv_returns: int = 0  # RETURNs that went descriptor + GET
     am_handled: int = 0
     flushes: int = 0
+    # --- recursive propagation (PUBLISH hops) ---
+    publishes: int = 0  # hop frames sent (root fan-out + re-publishes)
+    publish_handled: int = 0  # publishes accepted (installed/invoked) here
+    publish_dupes: int = 0  # re-delivered publishes dropped by the dedup key
+    publish_refused_ttl: int = 0  # arrived with ttl already expired (loud)
+    publish_refused_cycle: int = 0  # own index on the visited path (loud)
+    publish_refused_digest: int = 0  # code bytes != header digest (poisoned)
+    publish_stopped_ttl: int = 0  # had children but no hop budget left
+    publish_send_failures: int = 0  # child endpoint dead at re-publish time
     jit_ms_total: float = 0.0
 
     def as_dict(self) -> dict[str, float]:
@@ -257,12 +285,15 @@ class PE:
         self.caching_enabled = True  # benchmark switch: uncached mode
         self.batching = False  # batched runtime: coalesced sends + grouped polls
         self.dataplane = DataPlaneConfig()  # protocol selection (default: framed)
+        self.propagation = PropagationConfig()  # tree multicast policy
         self._seq = 0
         self._region_dev: dict[str, tuple[int, jax.Array]] = {}
         self._sendq: dict[str, list[Frame]] = {}  # per-destination pending frames
         self._regionq: dict[str, list[RegionWrite]] = {}  # pending one-sided writes
         self._rndv_tokens: deque[str] = deque()  # staged rendezvous regions (ring)
         self._rndv_seq = 0
+        self._pub_seq = 0  # publish ids minted by this PE as a tree root
+        self._seen_pubs: set[tuple[bytes, int, int]] = set()  # publish dedup
 
     # --- local state ------------------------------------------------------
     def register_region(self, name: str, arr: np.ndarray) -> None:
@@ -321,6 +352,138 @@ class PE:
         frame = Frame(kind=FrameKind.ACTIVE_MESSAGE, name=name, payload=pay, seq=self._seq)
         return self._put_frame(dst, frame)
 
+    # --- recursive propagation: source side ---------------------------------
+    def publish_ifunc(
+        self,
+        name: str,
+        payload: np.ndarray | bytes = b"",
+        *,
+        ttl: int | None = None,
+        config: PropagationConfig | None = None,
+    ) -> list[str]:
+        """Publish an ifunc down this PE's spanning tree (paper Sec. I:
+        code that "recursively propagate[s] itself to other remote
+        machines").
+
+        Sends one PUBLISH hop frame to each of this PE's *tree children*
+        only — O(log n) for the binomial default — and every child that
+        installs the code re-publishes it to its own children, so coverage
+        reaches all n peers without the root sending n frames.  An empty
+        ``payload`` is a pure code distribution (install + re-publish, no
+        invoke); a non-empty payload is invoked at every covered PE (the
+        broadcast the multi-hop collectives build on).  Returns the peer
+        names actually sent to.
+        """
+        cfg = config or self.propagation
+        ifunc = self._resolve_source(name)
+        pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
+        me = self.peer_index(self.name)
+        self._pub_seq += 1
+        hop = HopHeader(
+            ttl=ttl if ttl is not None else cfg.ttl,
+            root=me,
+            pub_id=self._pub_seq,
+            path=(me,),
+            k=cfg.k_code,
+        )
+        return self._publish_to_children(
+            hop, ifunc.kind, name, pay, ifunc.code_bytes, ifunc.deps, ifunc.digest
+        )
+
+    def forget_publisher(self, root: int) -> None:
+        """Drop publish-dedup state for one root peer index.  A restarted
+        peer re-mints pub_ids from zero; without this, its fresh publishes
+        of already-seen code collide with the stale (digest, root, pub_id)
+        keys recorded for its previous life and are silently dropped as
+        duplicates — exactly-once would quietly become at-most-zero."""
+        self._seen_pubs = {k for k in self._seen_pubs if k[1] != root}
+
+    def publish_to(
+        self,
+        dst: str,
+        name: str,
+        payload: np.ndarray | bytes = b"",
+        *,
+        ttl: int = 1,
+    ) -> None:
+        """Publish directly to one named peer (no tree fan-out at this end;
+        the receiver still re-publishes if ``ttl`` allows).  This is the
+        re-parenting primitive: when a mid-tree PE dies, the root re-covers
+        the orphaned subtree by publishing straight to its survivors."""
+        ifunc = self._resolve_source(name)
+        # a direct publish exists because the normal delivery is in doubt —
+        # drop our cache belief so the code travels again (a dropped hop
+        # upstream may have warmed this entry without the bytes ever landing)
+        self.sender_cache.forget(dst, ifunc.digest.hex())
+        pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
+        me = self.peer_index(self.name)
+        self._pub_seq += 1
+        hop = HopHeader(
+            ttl=ttl, root=me, pub_id=self._pub_seq, path=(me,),
+            k=self.propagation.k_code,
+        )
+        self._send_publish(
+            dst, hop, ifunc.kind, name, pay, ifunc.code_bytes, ifunc.deps,
+            ifunc.digest,
+        )
+
+    def _publish_to_children(
+        self,
+        hop: HopHeader,
+        kind: FrameKind,
+        name: str,
+        inner: bytes,
+        code: bytes,
+        deps: tuple[str, ...],
+        digest: bytes,
+    ) -> list[str]:
+        """Send one hop frame per tree child; a dead child loses only its
+        own subtree's frame (counted), the rest of the fan-out proceeds."""
+        me = self.peer_index(self.name)
+        sent: list[str] = []
+        for child in tree_children(hop.k, hop.root, me, len(self.peers)):
+            dst = self.peers[child]
+            try:
+                self._send_publish(dst, hop, kind, name, inner, code, deps, digest)
+                sent.append(dst)
+            except EndpointDead:
+                self.stats.publish_send_failures += 1
+                # the PUT never landed: roll back the cache entry the send
+                # just added, or a later re-publish would wrongly truncate
+                self.sender_cache.forget(dst, digest.hex())
+        return sent
+
+    def _send_publish(
+        self,
+        dst: str,
+        hop: HopHeader,
+        kind: FrameKind,
+        name: str,
+        inner: bytes,
+        code: bytes,
+        deps: tuple[str, ...],
+        digest: bytes,
+    ) -> None:
+        self._seq += 1
+        frame = Frame(
+            kind=kind,
+            name=name,
+            payload=pack_hop(hop) + inner,
+            code=code,
+            deps=deps,
+            digest=digest,
+            seq=self._seq,
+            flags=FrameFlags.HOP,
+        )
+        self.stats.publishes += 1
+        # publishes bypass the batching send queue even when batching is on:
+        # hop frames never coalesce (per-edge path headers), and a dead
+        # child must surface EndpointDead HERE — synchronously — so the
+        # fan-out's per-child containment and sender-cache rollback apply
+        # identically on both runtimes (a queued send would defer the error
+        # to flush() and skip both).
+        self._put_now(dst, frame)
+
     def submit(
         self,
         dst: str,
@@ -378,12 +541,16 @@ class PE:
                 dst, frame.digest.hex(), len(frame.code)
             )
         wire = frame.wire_bytes(cached=cached)
+        self.stats.sends += 1
+        if not cached and frame.code:
+            self.stats.code_sends += 1
         self.fabric.put(
             self.name,
             dst,
             wire,
             n_payloads=frame.n_payloads,
             kinds=frame.kind_breakdown(cached),
+            hop=bool(frame.flags & FrameFlags.HOP),
         )
         return len(wire)
 
@@ -407,17 +574,23 @@ class PE:
             # group by ifunc type AND payload size (AM payloads are caller-
             # defined and xrdma plen varies, so same-name frames can be
             # ragged — those travel as separate coalesced PUTs), preserving
-            # first-seen order
-            groups: dict[tuple[int, str, bytes, int], list[Frame]] = {}
+            # first-seen order.  PUBLISH hop frames never coalesce: each
+            # carries its own per-edge path header.
+            groups: dict[tuple[int, str, bytes, int, int], list[Frame]] = {}
             for f in frames:
-                key = (int(f.kind), f.name, f.digest, len(f.payload))
+                key = (
+                    int(f.kind), f.name, f.digest, len(f.payload),
+                    int(f.flags) & FrameFlags.HOP,
+                )
                 groups.setdefault(key, []).append(f)
-            for members in groups.values():
-                try:
-                    self._put_now(dst, coalesce(members))
-                    puts += 1
-                except Exception as e:  # noqa: BLE001 - deliver the rest first
-                    errors.append(e)
+            for key, members in groups.items():
+                batch = [coalesce(members)] if not key[4] else members
+                for frame in batch:
+                    try:
+                        self._put_now(dst, frame)
+                        puts += 1
+                    except Exception as e:  # noqa: BLE001 - deliver the rest first
+                        errors.append(e)
         for dst, writes in regionq.items():
             try:
                 self.fabric.put_region_multi(self.name, dst, writes)
@@ -473,14 +646,110 @@ class PE:
             self.stats.am_handled += 1
             handler(self, pay)
 
+    # --- recursive propagation: target side ---------------------------------
+    def _handle_publish(self, buf: bytes, hdr) -> None:
+        """One PUBLISH hop: validate -> install -> invoke -> re-publish.
+
+        The validation ladder runs *before* anything is installed or
+        invoked, in blast-radius order (Kourtis et al.: injected code must
+        be validated at every hop, not only at the origin):
+
+        1. poisoned code — the code section's sha256 must equal the header
+           digest; a mismatch is refused loudly and, crucially, is NOT
+           re-published, so a poisoned frame cannot ride the tree.
+        2. duplicate — (code digest, root, pub_id) already handled here:
+           dropped silently (the fabric is at-least-once; re-delivery is
+           normal, and the drop is what makes a forwarding loop starve).
+        3. ttl expired — a frame arriving with no hop budget left was
+           forwarded by a peer that should have stopped: refused loudly.
+        4. cycle — this PE's own index on the visited path: refused loudly
+           (the path digest was already verified by the hop parser).
+
+        An accepted publish installs the code, invokes the payload (if the
+        publish carries one — a bare publish is pure code distribution),
+        and re-publishes code + payload to its tree children with one hop
+        spent and itself appended to the path.  Warm children receive
+        digest-only frames: the SenderCache truncation applies to hop
+        frames exactly as to point-to-point sends.
+        """
+        has_code = len(buf) >= hdr.full_total and hdr.code_len > 0
+        frame = unpack(buf, has_code=has_code)
+        if frame.flags & FrameFlags.BATCH:
+            raise ProtocolError(f"{self.name}: publish frames never coalesce")
+        hop, inner = split_hop(frame.payload)  # CorruptFrame on tampering
+        me = self.peer_index(self.name)
+        if has_code and hashlib.sha256(frame.code).digest() != frame.digest:
+            self.stats.publish_refused_digest += 1
+            raise ProtocolError(
+                f"{self.name}: publish of {hdr.name!r} carries code that does "
+                f"not match its digest (poisoned code refused, not re-published)"
+            )
+        key = (hdr.digest, hop.root, hop.pub_id)
+        if key in self._seen_pubs:
+            self.stats.publish_dupes += 1
+            return
+        if hop.ttl <= 0:
+            self.stats.publish_refused_ttl += 1
+            raise ProtocolError(
+                f"{self.name}: publish of {hdr.name!r} arrived with expired "
+                f"ttl (path {hop.path})"
+            )
+        if me in hop.path:
+            self.stats.publish_refused_cycle += 1
+            raise ProtocolError(
+                f"{self.name}: publish of {hdr.name!r} would cycle — own "
+                f"index {me} already on path {hop.path}"
+            )
+        if has_code:
+            exe = self._install(frame)
+        else:
+            exe = self.target_cache.lookup(hdr.name)
+            if exe is None or exe.digest != hdr.digest.hex():
+                hit = self.target_cache.lookup_digest(hdr.digest.hex())
+                if hit is None:
+                    raise ProtocolError(
+                        f"{self.name}: digest-only publish for unknown code "
+                        f"{hdr.name!r} (stale sender cache — was this PE "
+                        f"restarted?)"
+                    )
+                exe = CachedExecutable(
+                    name=hdr.name,
+                    digest=hit.digest,
+                    fn=hit.fn,
+                    in_avals=hit.in_avals,
+                    deps=hit.deps,
+                    kind=int(hdr.kind),
+                    extras=dict(hit.extras),
+                )
+                self.target_cache.install(exe, jit_ms=0.0)
+                self.stats.ifunc_installs += 1
+        self._seen_pubs.add(key)
+        self.stats.publish_handled += 1
+        if inner:
+            self._invoke(exe, inner)
+        children = tree_children(hop.k, hop.root, me, len(self.peers))
+        if not children:
+            return
+        if hop.ttl < 2:
+            self.stats.publish_stopped_ttl += 1
+            return
+        code = frame.code if has_code else exe.extras.get("code", b"")
+        self._publish_to_children(
+            hop.child_hop(me),
+            FrameKind(exe.kind),
+            exe.name,
+            inner,
+            code,
+            exe.deps,
+            bytes.fromhex(exe.digest),
+        )
+
     def _rndv_pull(self, name: str, desc: bytes) -> tuple[CachedExecutable, bytes]:
         """Resolve a rendezvous descriptor: GET the staged payload from the
         source's staging region.  The executable must already be cached —
         descriptors cannot carry code (the sender only selects rendezvous
         for cache-warm peers), so a miss here means a stale sender cache."""
-        if len(desc) != RNDV_DESC.size:
-            raise ProtocolError(f"{self.name}: malformed rendezvous descriptor")
-        src_idx, token, nbytes, _ = RNDV_DESC.unpack(desc)
+        src_idx, token, nbytes = unpack_rndv(desc)  # CorruptFrame if malformed
         exe = self.target_cache.lookup(name)
         if exe is None:
             raise ProtocolError(
@@ -539,6 +808,9 @@ class PE:
         hdr = peek_header(buf)
         if hdr is None:
             raise ProtocolError("short frame")
+        if hdr.flags & FrameFlags.HOP:
+            self._handle_publish(buf, hdr)
+            return
         if hdr.kind == FrameKind.ACTIVE_MESSAGE:
             self._handle_am(unpack(buf, has_code=False))
             return
@@ -570,6 +842,12 @@ class PE:
                 hdr = peek_header(buf)
                 if hdr is None:
                     raise ProtocolError("short frame")
+                if hdr.flags & FrameFlags.HOP:
+                    # publishes are install-dominated and rare (one per PE
+                    # per code distribution): handled inline, re-publishes
+                    # ride the post-poll flush as everything else does
+                    self._handle_publish(buf, hdr)
+                    continue
                 if hdr.kind == FrameKind.ACTIVE_MESSAGE:
                     self._handle_am(unpack(buf, has_code=False))
                     continue
@@ -698,6 +976,12 @@ class PE:
             region = self._dep_named(exe, "region")
             assert region is not None, "update ABI requires a region dep"
             self._write_region(region, np.asarray(out))
+        elif abi == "propagate":
+            region = self._dep_named(exe, "region")
+            assert region is not None, "propagate ABI requires a region dep"
+            new_region, actions = out
+            self._write_region(region, np.asarray(new_region))
+            self._apply_actions(exe, np.asarray(actions))
         elif abi == "xrdma":
             self._apply_actions(exe, np.asarray(out))
         else:  # pure
@@ -747,9 +1031,12 @@ class PE:
         block_aval = jax.ShapeDtypeStruct((bucket, *pay_aval.shape), pay_aval.dtype)
         dep_avals = tuple(exe.in_avals[1:])
         t0 = time.perf_counter()
-        if abi == "update":
-            # entry(payload, ..region.., ...) -> new_region, folded as a scan
-            # carry; padded rows are masked out so the fold is exact.
+        if abi in ("update", "propagate"):
+            # entry(payload, ..region.., ...) -> new_region (update) or
+            # (new_region, actions) (propagate), folded as a scan carry;
+            # padded rows are masked out so the fold is exact — a masked
+            # propagate row contributes neither to the region nor an action
+            # (its row is overwritten with NOPs).
             valid_aval = jax.ShapeDtypeStruct((bucket,), jnp.bool_)
             rpos = self._region_arg_pos(exe)
 
@@ -758,9 +1045,14 @@ class PE:
                     p, v = pv
                     dep_args = list(extra)
                     dep_args.insert(rpos, r)
+                    if abi == "propagate":
+                        nr, acts = call(p, *dep_args)
+                        nops = jnp.zeros_like(acts).at[..., 0].set(A_NOP)
+                        return jnp.where(v, nr, r), jnp.where(v, acts, nops)
                     return jnp.where(v, call(p, *dep_args), r), None
 
-                return lax.scan(step, region, (pays, valid))[0]
+                carry, ys = lax.scan(step, region, (pays, valid))
+                return (carry, ys) if abi == "propagate" else carry
 
             extra_avals = [a for i, a in enumerate(dep_avals) if i != rpos]
             compiled = (
@@ -803,14 +1095,23 @@ class PE:
         self.stats.invokes += 1
         self.stats.batched_invokes += 1
         self.stats.invoked_payloads += n
-        if abi == "update":
+        if abi in ("update", "propagate"):
             region = self._dep_named(exe, "region")
-            assert region is not None, "update ABI requires a region dep"
+            assert region is not None, f"{abi} ABI requires a region dep"
             valid = np.arange(bucket) < n
             rpos = self._region_arg_pos(exe)
             extra = [a for i, a in enumerate(args) if i != rpos]
             out = fn(block, valid, args[rpos], *extra)
-            self._write_region(region, np.asarray(out))
+            if abi == "propagate":
+                out, acts = out
+                self._write_region(region, np.asarray(out))
+                # padded rows were masked to NOPs inside the scan; applying
+                # the real rows in payload order preserves the sequential
+                # semantics (the row that completes a fold emits the action)
+                for per_payload in np.asarray(acts)[:n]:
+                    self._apply_actions(exe, per_payload)
+            else:
+                self._write_region(region, np.asarray(out))
         elif abi == "xrdma":
             actions = np.asarray(fn(block, *args))[:n]
             for per_payload in actions:
@@ -863,6 +1164,33 @@ class PE:
             target = self._dep_named(exe, "spawn")
             assert target is not None, "SPAWN requires a spawn: dep"
             self.send_ifunc(dst, target, pay)
+        elif code == A_PUBLISH:
+            # shipped code re-publishing *itself*: p0 is the hop budget it
+            # grants, the rest travels as the published payload — the
+            # paper's "recursively propagate itself" emitted by the code,
+            # not the runtime
+            me = self.peer_index(self.name)
+            self._pub_seq += 1
+            hop = HopHeader(
+                ttl=int(pay[0]),
+                root=me,
+                pub_id=self._pub_seq,
+                path=(me,),
+                k=self.propagation.k_code,
+            )
+            try:
+                self._send_publish(
+                    dst,
+                    hop,
+                    FrameKind(exe.kind),
+                    exe.name,
+                    np.ascontiguousarray(pay[1:]).tobytes(),
+                    exe.extras.get("code", b""),
+                    exe.deps,
+                    bytes.fromhex(exe.digest),
+                )
+            except EndpointDead:
+                self.stats.publish_send_failures += 1
         else:
             raise ProtocolError(f"bad action code {code}")
 
@@ -913,7 +1241,7 @@ class PE:
         self._rndv_tokens.append(staging)
         while len(self._rndv_tokens) > RNDV_STAGING_DEPTH:
             self.endpoint.unregister_region(self._rndv_tokens.popleft())
-        desc = RNDV_DESC.pack(self.peer_index(self.name), token, data.nbytes, 0)
+        desc = pack_rndv(self.peer_index(self.name), token, data.nbytes)
         self._seq += 1
         self._put_frame(
             dst, Frame(kind=FrameKind.RNDV, name=ifn.name, payload=desc, seq=self._seq)

@@ -24,6 +24,7 @@ from .cluster import Cluster
 from .dataplane import DataPlaneConfig
 from .frame import FrameKind
 from .ifunc import PE
+from .propagate import PropagationConfig
 from .transport import WireReportMixin
 from .xrdma import make_chaser, make_return_result
 
@@ -61,6 +62,7 @@ class ChaseReport(WireReportMixin):
     coalesced_payloads: int = 0  # payloads carried inside those PUTs
     region_puts: int = 0  # one-sided slab-write batches (zero-copy RETURNs)
     region_put_bytes: int = 0  # data + doorbell bytes those writes carried
+    hop_frames: int = 0  # PUBLISH hop frames (tree code distribution)
     wire_bytes_by_kind: dict = field(default_factory=dict)
 
 
@@ -136,6 +138,7 @@ class PointerChaseApp:
         mode: str = "bitcode",
         batching: bool = False,
         dataplane: DataPlaneConfig | None = None,
+        propagation: PropagationConfig | None = None,
     ) -> ChaseReport:
         """Launch one X-RDMA Chaser per start and run to completion.
 
@@ -148,6 +151,10 @@ class PointerChaseApp:
         run (framed / zero-copy slab writes / rendezvous); the chase
         result buffer doubles as the zero-copy slab, so the completion
         predicate (the counter word) is identical on every path.
+        ``propagation`` switches code distribution from the implicit flat
+        push (each launch's first contact carries the code) to a tree
+        multicast ahead of the launches — fewer client-side code sends,
+        identical results.
         """
         starts = np.asarray(starts, np.int32)
         n = len(starts)
@@ -161,6 +168,8 @@ class PointerChaseApp:
         cl.set_dataplane(dataplane)
         invokes0 = self._total_invokes()
         name = {"bitcode": "chaser", "binary": "chaser_bin"}.get(mode)
+        if propagation is not None and name is not None:
+            cl.distribute_code(name, propagation)
         results = cl.client.region("results")
         if mode == "am":
             for slot, start in enumerate(starts):

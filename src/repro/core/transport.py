@@ -108,6 +108,8 @@ class TrafficStats:
     region_puts: int = 0  # one-sided RDMA WRITE batches into registered memory
     region_put_bytes: int = 0  # data + doorbell bytes those writes carried
     region_guard_drops: int = 0  # guarded writes dropped by a stale generation
+    hop_frames: int = 0  # PUBLISH frames (propagation hop header on board)
+    hop_bytes: int = 0  # wire bytes those publish frames carried
     by_kind: dict[str, int] = field(default_factory=dict)  # see BYTE_KINDS
 
     def reset(self) -> None:
@@ -119,6 +121,7 @@ class TrafficStats:
         self.coalesced_payloads = 0
         self.region_puts = self.region_put_bytes = 0
         self.region_guard_drops = 0
+        self.hop_frames = self.hop_bytes = 0
         self.by_kind = {}
 
     def add_kinds(self, kinds: dict[str, int] | None) -> None:
@@ -144,6 +147,7 @@ class TrafficStats:
             "coalesced_payloads": self.coalesced_payloads,
             "region_puts": self.region_puts,
             "region_put_bytes": self.region_put_bytes,
+            "hop_frames": self.hop_frames,
             "wire_bytes_by_kind": self.wire_bytes_by_kind,
         }
 
@@ -160,6 +164,8 @@ class TrafficStats:
             "region_puts": self.region_puts,
             "region_put_bytes": self.region_put_bytes,
             "region_guard_drops": self.region_guard_drops,
+            "hop_frames": self.hop_frames,
+            "hop_bytes": self.hop_bytes,
             "wire_bytes_by_kind": self.wire_bytes_by_kind,
         }
 
@@ -296,6 +302,7 @@ class Fabric:
         wire_bytes: bytes,
         n_payloads: int = 1,
         kinds: dict[str, int] | None = None,
+        hop: bool = False,
     ) -> float:
         """One-sided PUT of a (possibly truncated, possibly coalesced) frame.
 
@@ -305,7 +312,9 @@ class Fabric:
         ``o_us`` charge for the summed bytes — exactly the amortization the
         batched runtime is after — and is counted in ``coalesced_frames`` so
         benchmarks can report it.  ``kinds`` attributes the bytes across
-        :data:`BYTE_KINDS` (omitted = all counted as payload).
+        :data:`BYTE_KINDS` (omitted = all counted as payload).  ``hop``
+        marks a propagation PUBLISH frame (hop header on board) so tree
+        multicasts are visible in the fabric accounting.
         """
         ep = self._target(dst)
         n = len(wire_bytes)
@@ -319,6 +328,9 @@ class Fabric:
             if n_payloads > 1:
                 self.stats.coalesced_frames += 1
                 self.stats.coalesced_payloads += n_payloads
+            if hop:
+                self.stats.hop_frames += 1
+                self.stats.hop_bytes += n
         ep.deliver(wire_bytes)
         return t
 

@@ -28,6 +28,7 @@ from .ifunc import (
     A_DONE,
     A_FORWARD,
     A_NOP,
+    A_PUBLISH,
     A_RETURN,
     A_SPAWN,
     IFunc,
@@ -410,6 +411,120 @@ def make_tsi(
         abi="update",
         targets=targets,
         kind=kind,
+    )
+
+
+# ------------------------------------------------------------------ Reduce
+def make_reducer(
+    width: int,
+    targets: Sequence[str] = ("cpu-host", "cpu-bf2", "cpu-a64fx", "tpu-v5e"),
+    kind: FrameKind = FrameKind.BITCODE,
+    name: str = "reducer",
+) -> IFunc:
+    """The multi-hop X-RDMA reduction op (one node's step of
+    :func:`repro.sharding.collectives.xrdma_reduce`).
+
+    Propagate-ABI: every invocation folds one contribution into this PE's
+    ``reduce_acc`` region — ``[count, acc(width)]`` — and emits at most one
+    action row.  Payload ``[count, value(width)]``:
+
+    * ``count == 0`` is the broadcast *seed* (delivered by the tree
+      publish): fold this PE's own ``reduce_src`` contribution, count 1.
+    * ``count > 0`` is a child subtree's partial: fold ``value``, count
+      the subtree's nodes.
+
+    When the fold's count reaches the subtree size in ``reduce_meta``
+    (``[expected, parent, is_root]``), the completing invocation FORWARDs
+    the folded partial — this same ifunc, code and all — to the tree
+    parent; at the root it emits DONE with the cluster-wide result.  Under
+    the batched runtime several children's partials fold in one masked
+    ``lax.scan`` dispatch and only the row that completes the subtree
+    carries the upward FORWARD — the scan's sequential carry is exactly
+    the fold-before-forward the tree needs.
+
+    At-least-once caveat: seed delivery is deduplicated by the publish
+    layer, but a *duplicated child partial* would double-fold and overshoot
+    ``expected`` — the count then never equals it and the reduction
+    surfaces as an idle timeout (loud containment), matching the paper's
+    reliable-connection transport assumption for RETURN traffic.
+    """
+    W = width
+
+    def entry(
+        payload: jax.Array, acc: jax.Array, src: jax.Array, meta: jax.Array
+    ) -> tuple[jax.Array, jax.Array]:
+        count, val = payload[0], payload[1:]
+        seed = count == 0
+        new_cnt = acc[0] + jnp.where(seed, jnp.asarray(1, I32), count)
+        new_val = acc[1:] + jnp.where(seed, src, val)
+        expected, parent, is_root = meta[0], meta[1], meta[2]
+        done = new_cnt == expected
+        action = jnp.where(
+            done, jnp.where(is_root > 0, A_DONE, A_FORWARD), A_NOP
+        ).astype(I32)
+        dst = jnp.where(done & (is_root == 0), parent, 0).astype(I32)
+        plen = jnp.where(done, 1 + W, 0).astype(I32)
+        new_acc = jnp.concatenate([new_cnt[None], new_val])
+        row = jnp.concatenate([jnp.stack([action, dst, plen]), new_acc])
+        return new_acc, row
+
+    return IFunc.build(
+        name=name,
+        fn=entry,
+        payload_aval=jax.ShapeDtypeStruct((1 + W,), I32),
+        dep_avals=(
+            jax.ShapeDtypeStruct((1 + W,), I32),
+            jax.ShapeDtypeStruct((W,), I32),
+            jax.ShapeDtypeStruct((3,), I32),
+        ),
+        deps=("region:reduce_acc", "region:reduce_src", "cap:reduce_meta"),
+        abi="propagate",
+        targets=targets,
+        kind=kind,
+    )
+
+
+# ------------------------------------------------------------------ Gossip
+def make_gossiper(
+    targets: Sequence[str] = ("cpu-host", "cpu-bf2", "cpu-a64fx", "tpu-v5e"),
+    name: str = "gossiper",
+) -> IFunc:
+    """Injected code that re-publishes *itself* (paper Sec. I, literally).
+
+    Payload ``[hops_left, value]``; deps ``region:gossip_log`` (``[visits,
+    sum]``) and ``cap:gossip_meta`` (``[my_index, n_peers]``).  Each
+    arrival logs itself locally and, while ``hops_left > 0``, emits
+    ``A_PUBLISH`` to the next peer on the ring — the *code* decides where
+    its next copy goes; the runtime only carries it.  Hop budget 1 per
+    publish, so the tree layer never fans this out: the recursion is
+    entirely the ifunc's own.
+    """
+
+    def entry(
+        payload: jax.Array, log: jax.Array, meta: jax.Array
+    ) -> tuple[jax.Array, jax.Array]:
+        hops, value = payload[0], payload[1]
+        me, n = meta[0], meta[1]
+        new_log = jnp.stack([log[0] + 1, log[1] + value])
+        nxt = jnp.where(me + 1 >= n, 0, me + 1)
+        row = jnp.where(
+            hops > 0,
+            _vec(A_PUBLISH, nxt, 3, 1, hops - 1, value),
+            _vec(A_NOP, 0, 0),
+        )
+        return new_log, row
+
+    return IFunc.build(
+        name=name,
+        fn=entry,
+        payload_aval=jax.ShapeDtypeStruct((2,), I32),
+        dep_avals=(
+            jax.ShapeDtypeStruct((2,), I32),
+            jax.ShapeDtypeStruct((2,), I32),
+        ),
+        deps=("region:gossip_log", "cap:gossip_meta"),
+        abi="propagate",
+        targets=targets,
     )
 
 

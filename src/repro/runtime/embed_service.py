@@ -26,7 +26,13 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core import Cluster, CompletionQueue, DataPlaneConfig, GatherFuture
+from repro.core import (
+    Cluster,
+    CompletionQueue,
+    DataPlaneConfig,
+    GatherFuture,
+    PropagationConfig,
+)
 from repro.core.transport import WireReportMixin
 from repro.core.xrdma import make_gather_return, make_gatherer
 
@@ -71,6 +77,7 @@ class GatherReport(WireReportMixin):
     coalesced_payloads: int = 0
     region_puts: int = 0  # one-sided slab-write batches (zero-copy RETURNs)
     region_put_bytes: int = 0  # data + doorbell bytes those writes carried
+    hop_frames: int = 0  # PUBLISH hop frames (tree code distribution)
     wire_bytes_by_kind: dict = field(default_factory=dict)
 
 
@@ -220,23 +227,37 @@ class EmbedShardService:
             **st.report_kwargs(),
         )
 
+    def distribute_code(self, propagation: PropagationConfig) -> None:
+        """Tree-publish the Gatherer to every alive server (code-only: no
+        invoke) and mark every sender's cache for the covered peers, so the
+        whole request stream — client key-frames and server-to-server
+        FORWARDs alike — travels digest-only from the first request.
+        Orphaned subtrees (dead mid-tree PE, dropped hop) are re-covered
+        by the shared :meth:`repro.core.cluster.Cluster.distribute_code`."""
+        self.cluster.distribute_code("gatherer", propagation)
+
     def gather(
         self,
         key_batches: list[np.ndarray],
         batching: bool = False,
         dataplane: DataPlaneConfig | None = None,
+        propagation: PropagationConfig | None = None,
     ) -> GatherReport:
         """Submit a burst of requests, run to completion, report results in
         submission order plus wire/dispatch accounting for this run only.
         ``dataplane`` selects the partial-RETURN protocol: framed (default),
         zero-copy slab writes into the completion queue's registered region,
-        or rendezvous descriptor + GET."""
+        or rendezvous descriptor + GET.  ``propagation`` pre-distributes the
+        Gatherer down a spanning tree instead of letting each first contact
+        push the code flat."""
         self.cluster.fabric.stats.reset()
         invokes0 = self._invokes()
         n0 = len(self.finished)
         self.cluster.set_batching(batching)
         self.cluster.set_dataplane(dataplane)
         self.batching = batching
+        if propagation is not None:
+            self.distribute_code(propagation)
         try:
             rids = [self.submit(k) for k in key_batches]
             rounds = self.run()

@@ -7,17 +7,27 @@ The contract: ``dapc`` over {bitcode, binary, am} x {batching on, off} x
 (the RDMA-GET baseline) agrees — same table, same starts, same depths.
 One cluster per (mode-independent) seed so every mode/batching cell is
 compared on identical state.
+
+The propagation axis ({flat, tree} x {bitcode, binary} x seeds) runs on
+*fresh* clusters per cell: tree code distribution only differs from flat
+on cold caches, and the claim is twofold — oracle-identical results AND
+strictly fewer client-side code dispatches for the tree.
 """
 
 import numpy as np
 import pytest
 
-from repro.core import Cluster, PointerChaseApp, chase_ref
+from repro.core import Cluster, PointerChaseApp, PropagationConfig, chase_ref
 
 I32 = np.int32
 
 SEEDS = (0, 1, 2)
 DEPTHS = (1, 7, 64)
+PROPAGATIONS = {
+    "flat": None,
+    "tree-binomial": PropagationConfig(),
+    "tree-kary2": PropagationConfig(topology="kary", k=2),
+}
 
 
 @pytest.fixture(scope="module", params=SEEDS, ids=lambda s: f"seed{s}")
@@ -53,3 +63,38 @@ def test_gbpc_agrees(seeded_app):
     for depth in DEPTHS:
         rep = app.gbpc(starts, depth)
         np.testing.assert_array_equal(rep.results, want[depth])
+
+
+@pytest.mark.parametrize("prop", PROPAGATIONS, ids=list(PROPAGATIONS))
+@pytest.mark.parametrize("mode", ["bitcode", "binary"])
+@pytest.mark.parametrize("seed", SEEDS, ids=lambda s: f"seed{s}")
+def test_dapc_propagation_conformance(seed, mode, prop):
+    """Tree code distribution is invisible to results (oracle-identical on
+    a cold cluster) and strictly cheaper at the client: fewer code-carrying
+    dispatches than the flat first-contact push."""
+    cluster = Cluster(n_servers=4, wire="ideal")
+    app = PointerChaseApp(cluster, n_entries=512, max_slots=16, seed=seed)
+    rng = np.random.default_rng(seed + 100)
+    starts = rng.integers(0, app.n_entries, 8).astype(I32)
+    depth = 16
+    want = np.array([chase_ref(app.table, s, depth) for s in starts], I32)
+    rep = app.dapc(starts, depth, mode=mode, propagation=PROPAGATIONS[prop])
+    np.testing.assert_array_equal(rep.results, want)
+    name = {"bitcode": "chaser", "binary": "chaser_bin"}[mode]
+    digest = cluster.toolchain.lookup(name).digest.hex()
+    # the cluster is fresh, so the client's lifetime send stats == this run
+    if prop == "flat":
+        # flat: one full frame per server the client contacted first
+        assert cluster.client.stats.code_sends >= 3
+    else:
+        # tree: exactly the root's children carry code from the client
+        k_code = PROPAGATIONS[prop].k_code
+        from repro.core import tree_children
+
+        n_children = len(tree_children(k_code, 4, 4, 5))
+        assert cluster.client.stats.code_sends == n_children
+        flat_cost = sum(
+            1 for pe in cluster.servers
+            if pe.target_cache.lookup_digest(digest) is not None
+        )
+        assert cluster.client.stats.code_sends < flat_cost  # strictly fewer

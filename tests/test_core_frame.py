@@ -6,18 +6,26 @@ import pytest
 from _hypothesis_compat import given, settings, st  # hypothesis, or local fallback
 
 from repro.core.frame import (
+    HOP_FIXED_NBYTES,
     MAGIC,
     MAGIC_LEN,
+    RNDV_DESC_NBYTES,
     CorruptFrame,
     Frame,
     FrameFlags,
     FrameKind,
+    HopHeader,
     ProtocolError,
     coalesce,
     delivery_complete,
+    pack_hop,
+    pack_rndv,
     peek_header,
+    split_hop,
     split_payloads,
     unpack,
+    unpack_hop,
+    unpack_rndv,
 )
 
 
@@ -227,6 +235,118 @@ def test_flipped_byte_never_wrong_parse_property(flip_at, payload):
         if sec != flipped:
             assert got == originals[sec], f"flip in {flipped} leaked into {sec}"
     assert g.digest == f.digest and g.seq == f.seq and g.kind == f.kind
+
+
+# ------------------------------------------------ propagation hop header
+@settings(max_examples=60, deadline=None)
+@given(
+    ttl=st.integers(min_value=0, max_value=255),
+    k=st.integers(min_value=0, max_value=255),
+    root=st.integers(min_value=0, max_value=2**16 - 1),
+    pub_id=st.integers(min_value=0, max_value=2**32 - 1),
+    path=st.lists(st.integers(min_value=0, max_value=2**16 - 1), max_size=12),
+    tail=st.binary(max_size=64),
+)
+def test_hop_header_roundtrip_property(ttl, k, root, pub_id, path, tail):
+    """Hop headers roundtrip bit-exactly for arbitrary field values, and
+    split_hop returns the untouched inner payload behind them."""
+    hop = HopHeader(ttl=ttl, root=root, pub_id=pub_id, path=tuple(path), k=k)
+    buf = pack_hop(hop)
+    assert len(buf) == hop.nbytes == HOP_FIXED_NBYTES + 2 * len(path)
+    got, off = unpack_hop(buf)
+    assert got == hop and off == len(buf)
+    hop2, inner = split_hop(buf + tail)
+    assert hop2 == hop and inner == tail
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    path=st.lists(st.integers(min_value=0, max_value=2**16 - 1), max_size=8),
+    cut=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hop_header_truncation_rejected_property(path, cut):
+    """EVERY proper prefix of a packed hop header is refused loudly — a
+    partial delivery can never parse as a shorter valid hop."""
+    hop = HopHeader(ttl=3, root=1, pub_id=9, path=tuple(path), k=2)
+    buf = pack_hop(hop)
+    prefix = buf[: cut % len(buf)]  # strictly shorter than the full header
+    with pytest.raises(CorruptFrame):
+        unpack_hop(prefix)
+
+
+@settings(max_examples=100, deadline=None)
+@given(junk=st.binary(max_size=128))
+def test_hop_header_garbage_rejected_property(junk):
+    """Arbitrary bytes either fail to parse (CorruptFrame) or — with the
+    ~2^-64 chance of a path-digest collision — parse into a header whose
+    re-packed form is byte-identical, i.e. never a silent wrong parse."""
+    try:
+        hop, off = unpack_hop(junk)
+    except CorruptFrame:
+        return
+    assert pack_hop(hop) == junk[:off]
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    flip_at=st.integers(min_value=0, max_value=2**31 - 1),
+    path=st.lists(st.integers(min_value=0, max_value=2**16 - 1), min_size=1, max_size=8),
+)
+def test_hop_digest_guards_tamper_property(flip_at, path):
+    """Flipping any byte of the digest-covered tail (k/root/pub_id live in
+    the digest input, the path bytes entirely) is caught by the FNV check;
+    a ttl flip alone may legally parse (ttl is per-hop mutable state), but
+    then every digest-covered field must be intact."""
+    hop = HopHeader(ttl=7, root=2, pub_id=5, path=tuple(path), k=0)
+    buf = bytearray(pack_hop(hop))
+    off = flip_at % len(buf)
+    buf[off] ^= 0xFF
+    try:
+        got, _ = unpack_hop(bytes(buf))
+    except CorruptFrame:
+        return
+    assert (got.k, got.root, got.pub_id, got.path) == (
+        hop.k, hop.root, hop.pub_id, hop.path,
+    )
+
+
+# -------------------------------------------- rendezvous descriptor (PR 3)
+@settings(max_examples=60, deadline=None)
+@given(
+    src=st.integers(min_value=0, max_value=2**32 - 1),
+    token=st.integers(min_value=0, max_value=2**32 - 1),
+    nbytes=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_rndv_descriptor_roundtrip_property(src, token, nbytes):
+    desc = pack_rndv(src, token, nbytes)
+    assert len(desc) == RNDV_DESC_NBYTES
+    assert unpack_rndv(desc) == (src, token, nbytes)
+
+
+@settings(max_examples=60, deadline=None)
+@given(cut=st.integers(min_value=0, max_value=2**31 - 1))
+def test_rndv_descriptor_truncation_rejected_property(cut):
+    """Every proper prefix (and any over-long buffer) of a descriptor is
+    refused: the descriptor is fixed-size, there is no shorter valid form."""
+    desc = pack_rndv(3, 12345, 4096)
+    bad = desc[: cut % RNDV_DESC_NBYTES]
+    with pytest.raises(CorruptFrame):
+        unpack_rndv(bad)
+    with pytest.raises(CorruptFrame):
+        unpack_rndv(desc + b"\x00")
+
+
+@settings(max_examples=80, deadline=None)
+@given(junk=st.binary(max_size=40))
+def test_rndv_descriptor_garbage_rejected_property(junk):
+    """Arbitrary bytes never misparse: wrong length or a set reserved word
+    raises; a 16-byte buffer with a clear reserved word IS a descriptor by
+    construction, and must roundtrip exactly."""
+    try:
+        src, token, nbytes = unpack_rndv(junk)
+    except CorruptFrame:
+        return
+    assert pack_rndv(src, token, nbytes) == junk
 
 
 def test_corrupt_frame_is_protocol_error_and_value_error():

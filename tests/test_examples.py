@@ -49,6 +49,13 @@ def test_xrdma_embed_service_example():
     assert "gather_shard_map over" in out and "verified" in out
 
 
+def test_xrdma_propagate_example():
+    out = _run(["examples/xrdma_propagate.py", "--tiny"])
+    assert "tree multicast verified" in out
+    assert "verified against numpy sum" in out
+    assert "gossip verified" in out
+
+
 @pytest.mark.slow
 def test_serve_launcher():
     out = _run([

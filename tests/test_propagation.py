@@ -1,0 +1,669 @@
+"""Chaos/property suite for recursive code propagation (tree multicast).
+
+The propagation contract under fire:
+
+* a PUBLISH hop installs, validates, invokes, and re-publishes — and every
+  validation failure (expired ttl, cycle, poisoned code) is refused *at
+  that hop*, loudly, without installing stale code or riding the tree;
+* the fabric is at-least-once: dropped hops lose only their subtree (and
+  re-parenting re-covers it), duplicated hops are exactly-once per PE via
+  the (digest, root, pub_id) dedup key, reordering changes nothing;
+* a killed mid-tree PE orphans its subtree cleanly — the orphans drain,
+  re-parenting covers the survivors, and nothing leaks (no wedged polls,
+  no stale installs, no leaked completion-queue slots in workloads that
+  ride the propagated code).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Cluster,
+    Frame,
+    FrameFlags,
+    HopHeader,
+    PropagationConfig,
+    ProtocolError,
+    chase_ref,
+    make_gossiper,
+    make_tsi,
+    pack_hop,
+    subtree_sizes,
+    tree_children,
+    tree_children_map,
+    tree_depth,
+    tree_parent,
+)
+from repro.core.pointer_chase import PointerChaseApp
+from repro.runtime.embed_service import EmbedShardService, ragged_batches
+from repro.sharding.collectives import (
+    _reducer_for_width,
+    xrdma_bcast,
+    xrdma_flat_push,
+    xrdma_reduce,
+)
+
+I32 = np.int32
+BINOMIAL = PropagationConfig()
+KARY2 = PropagationConfig(topology="kary", k=2)
+
+
+@pytest.fixture(scope="module")
+def tsi():
+    """One toolchain build of the TSI ifunc, shared by every cluster here
+    (the IFunc handle is immutable; building it per-test would re-run
+    jax.export for nothing)."""
+    return make_tsi()
+
+
+@pytest.fixture(scope="module")
+def gossiper():
+    return make_gossiper()
+
+
+def counter_cluster(tsi, n_servers=8, wire="ideal"):
+    cl = Cluster(n_servers=n_servers, wire=wire)
+    for pe in cl.servers:
+        pe.register_region("counter", np.zeros(1, I32))
+    cl.toolchain.publish(tsi)
+    return cl
+
+
+def counters(cl):
+    return [int(pe.region("counter")[0]) for pe in cl.servers]
+
+
+def forge_publish(cl, dst, name, hop, payload=b"", code=None, digest=None):
+    """Hand-craft one PUBLISH hop frame and PUT it (full, code-carrying)."""
+    ifn = cl.toolchain.lookup(name)
+    frame = Frame(
+        kind=ifn.kind,
+        name=name,
+        payload=pack_hop(hop) + payload,
+        code=code if code is not None else ifn.code_bytes,
+        deps=ifn.deps,
+        digest=digest if digest is not None else ifn.digest,
+        flags=FrameFlags.HOP,
+    )
+    cl.fabric.put("client", dst, frame.pack(), hop=True)
+    return frame
+
+
+# ===================================================================== tree
+class TestTreeMath:
+    @pytest.mark.parametrize("n", [1, 2, 3, 5, 8, 17, 33])
+    @pytest.mark.parametrize("k_code", [0, 1, 2, 3])
+    def test_tree_partitions_peers(self, n, k_code):
+        """Every tree is a spanning tree: each non-root appears as exactly
+        one node's child, for every root."""
+        for root in (0, n // 2, n - 1):
+            cm = tree_children_map(k_code, root, n)
+            reached = [c for cs in cm.values() for c in cs]
+            assert sorted(reached) == sorted(set(range(n)) - {root})
+
+    @pytest.mark.parametrize("k_code", [0, 2])
+    def test_parent_inverts_children(self, k_code):
+        n, root = 17, 16
+        cm = tree_children_map(k_code, root, n)
+        for p, cs in cm.items():
+            for c in cs:
+                assert tree_parent(k_code, root, c, n) == p
+        assert tree_parent(k_code, root, root, n) == root
+
+    def test_subtree_sizes_sum(self):
+        sizes = subtree_sizes(0, 16, 17)
+        assert sizes[16] == 17
+        cm = tree_children_map(0, 16, 17)
+        for p, cs in cm.items():
+            assert sizes[p] == 1 + sum(sizes[c] for c in cs)
+
+    def test_binomial_root_fanout_is_log(self):
+        assert len(tree_children(0, 16, 16, 17)) == 5  # ceil(log2 17)
+
+    def test_depth_bounds(self):
+        # binomial over 17: labels 1..15 fill an order-4 subtree (depth 4),
+        # label 16 hangs off the root directly — floor(log2(n-1)) levels
+        assert tree_depth(0, 16, 17) == 4
+        assert tree_depth(0, 0, 16) == 4
+        assert tree_depth(1, 4, 5) == 4  # 1-ary: a chain
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            PropagationConfig(topology="ring")
+        with pytest.raises(ValueError):
+            PropagationConfig(topology="kary", k=0)
+        with pytest.raises(ValueError):
+            PropagationConfig(ttl=0)
+
+
+# ==================================================================== bcast
+class TestBcast:
+    @pytest.mark.parametrize("cfg", [BINOMIAL, KARY2], ids=["binomial", "kary2"])
+    def test_bcast_covers_every_server_once(self, tsi, cfg):
+        cl = counter_cluster(tsi)
+        rep = xrdma_bcast(cl, "tsi", np.array([7], I32), config=cfg)
+        assert counters(cl) == [7] * 8  # exactly once each
+        assert rep.covered == rep.n_targets == 8
+        assert rep.publishes == 8  # one hop frame received per server
+
+    def test_root_sends_log_not_n(self, tsi):
+        cl = counter_cluster(tsi, n_servers=16)
+        rep = xrdma_bcast(cl, "tsi", np.array([1], I32))
+        assert rep.client_sends == 5  # ceil(log2 17), not 16
+        assert rep.client_code_sends == 5
+
+    def test_flat_push_baseline_is_n(self, tsi):
+        cl = counter_cluster(tsi, n_servers=16)
+        rep = xrdma_flat_push(cl, "tsi", np.array([1], I32))
+        assert rep.client_sends == rep.client_code_sends == 16
+        assert counters(cl) == [1] * 16
+
+    def test_code_travels_once_per_server(self, tsi):
+        cl = counter_cluster(tsi)
+        xrdma_bcast(cl, "tsi", np.array([2], I32))
+        installs = sum(pe.stats.ifunc_installs for pe in cl.servers)
+        assert installs == 8
+        assert cl.fabric.stats.by_kind["code"] == 8 * len(tsi.code_bytes) + 8 * len(
+            "\n".join(tsi.deps).encode()
+        ) + 8 * 8  # code + deps + trailing MAGIC per cold frame
+
+    def test_warm_tree_ships_no_code(self, tsi):
+        cl = counter_cluster(tsi)
+        xrdma_bcast(cl, "tsi", np.array([2], I32))
+        rep = xrdma_bcast(cl, "tsi", np.array([3], I32))
+        assert counters(cl) == [5] * 8
+        assert rep.wire_bytes_by_kind["code"] == 0  # digest-only hops
+        assert rep.hop_frames == 8
+
+    def test_code_only_publish_installs_without_invoking(self, tsi):
+        cl = counter_cluster(tsi)
+        rep = xrdma_bcast(cl, "tsi", b"")  # bare publish: distribution only
+        assert rep.covered == 8
+        assert counters(cl) == [0] * 8
+        invokes = sum(pe.stats.invokes for pe in cl.servers)
+        assert invokes == 0
+
+    def test_batched_runtime_bcast(self, tsi):
+        cl = counter_cluster(tsi)
+        cl.set_batching(True)
+        rep = xrdma_bcast(cl, "tsi", np.array([4], I32))
+        assert counters(cl) == [4] * 8
+        assert rep.covered == 8
+
+
+# ==================================================================== chaos
+class TestDropChaos:
+    def test_dropped_hop_loses_only_its_subtree(self, tsi):
+        """Eat the hop parked at a mid-tree PE: its whole subtree stays
+        uncovered, everyone else's counter is exact, nothing wedges."""
+        cl = counter_cluster(tsi)  # 8 servers, client root (idx 8, n=9)
+        cl.client.publish_ifunc("tsi", np.array([5], I32))
+        # root's children are servers 0,1,3,7; server3's subtree is {4,5,6}
+        assert len(cl.servers[3].endpoint.inbox) == 1
+        cl.servers[3].endpoint.inbox.clear()  # the wire ate the hop
+        cl.drain()
+        assert counters(cl) == [5, 5, 5, 0, 0, 0, 0, 5]
+
+    def test_manual_reparent_after_drop(self, tsi):
+        cl = counter_cluster(tsi)
+        cl.client.publish_ifunc("tsi", np.array([5], I32))
+        cl.servers[3].endpoint.inbox.clear()
+        cl.drain()
+        for idx in (3, 4, 5, 6):
+            cl.client.publish_to(f"server{idx}", "tsi", np.array([5], I32))
+        cl.drain()
+        assert counters(cl) == [5] * 8  # still exactly once each
+
+    def test_killed_midtree_pe_reparents_survivors(self, tsi):
+        """server3 dies before the bcast: its hop send fails (counted),
+        the orphaned subtree {4,5,6} is re-covered by direct root
+        publishes, and the dead PE loses only itself."""
+        cl = counter_cluster(tsi)
+        cl.kill_server(3)
+        rep = xrdma_bcast(cl, "tsi", np.array([9], I32))
+        assert rep.covered == rep.n_targets == 7
+        assert rep.reparented == 3  # servers 4, 5, 6
+        assert rep.publish_send_failures == 1
+        got = counters(cl)
+        assert got[3] == 0 and [got[i] for i in (0, 1, 2, 4, 5, 6, 7)] == [9] * 7
+
+    def test_killed_midtree_pe_reparents_under_batching(self, tsi):
+        """Same schedule on the batched runtime: publish sends bypass the
+        send queue, so the dead child surfaces EndpointDead synchronously
+        inside the fan-out (counted, contained) instead of exploding out of
+        a later flush — re-parenting works identically on both runtimes."""
+        cl = counter_cluster(tsi)
+        cl.set_batching(True)
+        cl.kill_server(3)
+        rep = xrdma_bcast(cl, "tsi", np.array([9], I32))
+        assert rep.covered == rep.n_targets == 7
+        assert rep.reparented == 3
+        assert rep.publish_send_failures == 1
+        got = counters(cl)
+        assert got[3] == 0 and [got[i] for i in (0, 1, 2, 4, 5, 6, 7)] == [9] * 7
+
+    def test_killed_leaf_loses_only_itself(self, tsi):
+        cl = counter_cluster(tsi)
+        cl.kill_server(0)  # a root child with no subtree of its own
+        rep = xrdma_bcast(cl, "tsi", np.array([9], I32))
+        assert rep.covered == rep.n_targets == 7
+        assert rep.reparented == 0
+        assert counters(cl)[1:] == [9] * 7
+
+
+class TestDuplicateChaos:
+    def test_duplicated_hop_is_exactly_once(self, tsi):
+        """Re-deliver every in-flight hop frame: the dedup key makes the
+        broadcast exactly-once per PE — counters unchanged, dupes counted,
+        and crucially no re-publish storm (publishes stay at N)."""
+        cl = counter_cluster(tsi)
+        cl.client.publish_ifunc("tsi", np.array([5], I32))
+        rounds = 0
+        while any(pe.endpoint.inbox for pe in cl.pes()):
+            for pe in cl.pes():
+                inbox = pe.endpoint.inbox
+                for buf in list(inbox):
+                    inbox.append(bytearray(buf))  # duplicate delivery
+                pe.poll()
+            rounds += 1
+            assert rounds < 50
+        assert counters(cl) == [5] * 8
+        assert sum(pe.stats.publish_dupes for pe in cl.servers) >= 8
+        assert sum(pe.stats.publishes for pe in cl.pes()) == 8
+
+    def test_same_root_new_pub_id_does_reinvoke(self, tsi):
+        """Dedup is per publish, not per code: a second broadcast (fresh
+        pub_id) re-invokes everywhere even though the digest is warm."""
+        cl = counter_cluster(tsi)
+        xrdma_bcast(cl, "tsi", np.array([2], I32))
+        xrdma_bcast(cl, "tsi", np.array([3], I32))
+        assert counters(cl) == [5] * 8
+
+
+class TestReorderChaos:
+    def test_reordered_inboxes_converge(self, tsi):
+        cl = counter_cluster(tsi, n_servers=8)
+        cl.client.publish_ifunc("tsi", np.array([5], I32))
+        rounds = 0
+        while any(pe.endpoint.inbox for pe in cl.pes()):
+            for pe in cl.pes():
+                pe.endpoint.inbox.rotate(1)  # shuffle every queue, every round
+                pe.poll()
+            rounds += 1
+            assert rounds < 100
+        assert counters(cl) == [5] * 8
+
+
+class TestRefusals:
+    def test_expired_ttl_refused_loudly(self, tsi):
+        cl = counter_cluster(tsi, n_servers=2)
+        hop = HopHeader(ttl=0, root=2, pub_id=1, path=(2,), k=0)
+        forge_publish(cl, "server0", "tsi", hop, np.array([5], I32).tobytes())
+        with pytest.raises(ProtocolError, match="expired"):
+            cl.servers[0].poll()
+        assert cl.servers[0].stats.publish_refused_ttl == 1
+        # refusal happened before install: no stale code registered
+        assert not cl.servers[0].target_cache.has_name("tsi")
+        assert counters(cl) == [0, 0]
+
+    def test_ttl_bounds_tree_depth(self, tsi):
+        """A 1-ary (chain) tree with ttl=1: only the first server is
+        covered; the stop is silent and counted (normal bounding, not a
+        protocol violation)."""
+        cl = counter_cluster(tsi, n_servers=4)
+        chain = PropagationConfig(topology="kary", k=1)
+        rep = xrdma_bcast(cl, "tsi", np.array([5], I32), config=chain, ttl=1,
+                          reparent=False)
+        assert counters(cl) == [5, 0, 0, 0]
+        assert rep.covered == 1
+        assert cl.servers[0].stats.publish_stopped_ttl == 1
+
+    def test_cycle_refused_loudly(self, tsi):
+        """A hop whose visited path already contains the receiver is a
+        forwarding loop: refused before install/invoke."""
+        cl = counter_cluster(tsi, n_servers=3)
+        hop = HopHeader(ttl=4, root=3, pub_id=1, path=(3, 1, 0), k=0)
+        forge_publish(cl, "server0", "tsi", hop, np.array([5], I32).tobytes())
+        with pytest.raises(ProtocolError, match="cycle"):
+            cl.servers[0].poll()
+        assert cl.servers[0].stats.publish_refused_cycle == 1
+        assert counters(cl) == [0, 0, 0]
+
+    def test_poisoned_code_refused_at_first_hop(self, tsi):
+        """Code bytes that do not hash to the header digest are refused at
+        the receiving hop: no install, no invoke, no re-publish (the tree
+        never amplifies a poisoned frame)."""
+        cl = counter_cluster(tsi, n_servers=4)
+        code = bytearray(tsi.code_bytes)
+        code[len(code) // 2] ^= 0xFF
+        hop = HopHeader(ttl=8, root=4, pub_id=1, path=(4,), k=0)
+        forge_publish(cl, "server0", "tsi", hop, np.array([5], I32).tobytes(),
+                      code=bytes(code))
+        with pytest.raises(ProtocolError, match="poisoned"):
+            cl.servers[0].poll()
+        assert cl.servers[0].stats.publish_refused_digest == 1
+        assert not cl.servers[0].target_cache.has_name("tsi")  # no stale install
+        cl.drain()
+        # nothing propagated: no other server saw any traffic
+        assert sum(pe.stats.msgs for pe in cl.servers[1:]) == 0
+        assert counters(cl) == [0] * 4
+
+    def test_poisoned_code_refused_mid_tree(self, tsi):
+        """Poison injected at an inner hop: upstream PEs (already covered)
+        keep their state, the poisoned frame's subtree gets nothing."""
+        cl = counter_cluster(tsi, n_servers=8)
+        cl.client.publish_ifunc("tsi", np.array([5], I32))
+        # tamper the code section of the hop parked at server3 (subtree 4,5,6)
+        buf = cl.servers[3].endpoint.inbox[0]
+        frame = cl.toolchain.lookup("tsi")
+        idx = bytes(buf).rindex(frame.code_bytes[:32])
+        buf[idx + 16] ^= 0xFF
+        with pytest.raises(ProtocolError, match="poisoned"):
+            cl.drain()
+        cl.drain()
+        assert counters(cl) == [5, 5, 5, 0, 0, 0, 0, 5]
+        assert cl.servers[3].stats.publish_refused_digest == 1
+
+    def test_tampered_hop_path_rejected(self, tsi):
+        """Flip a byte inside the hop path: the FNV digest check refuses
+        the frame before any hop field is trusted."""
+        cl = counter_cluster(tsi, n_servers=2)
+        cl.client.publish_ifunc("tsi", np.array([5], I32))
+        buf = cl.servers[0].endpoint.inbox[0]
+        hop_payload_off = bytes(buf).index(b"tsi") + 3
+        buf[hop_payload_off + 20] ^= 0xFF  # first path entry
+        with pytest.raises(ProtocolError, match="digest"):
+            cl.servers[0].poll()
+        assert not cl.servers[0].target_cache.has_name("tsi")
+
+    def test_batched_poll_contains_bad_publish(self, tsi):
+        """Batched runtime: a refused publish must not take the healthy
+        frames drained in the same poll down with it."""
+        cl = counter_cluster(tsi, n_servers=2)
+        cl.servers[0].batching = True
+        cl.client.publish_to("server0", "tsi", np.array([3], I32))
+        hop = HopHeader(ttl=0, root=2, pub_id=99, path=(2,), k=0)
+        forge_publish(cl, "server0", "tsi", hop, np.array([5], I32).tobytes())
+        cl.client.publish_to("server0", "tsi", np.array([4], I32))
+        with pytest.raises(ProtocolError):
+            cl.servers[0].poll()
+        assert counters(cl)[0] == 7  # 3 + 4 retired, the expired hop refused
+
+
+# =================================================================== reduce
+class TestReduce:
+    @pytest.mark.parametrize("cfg", [BINOMIAL, KARY2], ids=["binomial", "kary2"])
+    def test_reduce_matches_numpy_sum(self, cfg):
+        cl = Cluster(n_servers=8, wire="ideal")
+        rng = np.random.default_rng(0)
+        vals = rng.integers(-100, 100, (9, 4)).astype(I32)
+        rep = xrdma_reduce(cl, vals, config=cfg)
+        np.testing.assert_array_equal(rep.result, vals.sum(axis=0))
+        # N-1 upward partials: each non-root forwards exactly once
+        assert rep.forwards == 8
+
+    def test_reduce_is_multi_hop(self):
+        """Partials really fold mid-tree: the deepest node's contribution
+        crosses several PEs, and the root receives far fewer frames than a
+        flat fan-in would send it."""
+        cl = Cluster(n_servers=8, wire="ideal")
+        vals = np.ones((9, 2), I32)
+        xrdma_reduce(cl, vals)
+        root_frames = cl.client.stats.msgs
+        # root hears only from its direct children (4 partials for n=9
+        # binomial) plus its own self-seed — never all 8 servers
+        assert root_frames <= 6
+
+    def test_reduce_batched_runtime(self):
+        """Child partials arriving in one poll fold through the masked-scan
+        propagate dispatch; the fold that completes the subtree still emits
+        exactly one upward FORWARD."""
+        cl = Cluster(n_servers=8, wire="ideal")
+        cl.set_batching(True)
+        vals = np.arange(18, dtype=I32).reshape(9, 2)
+        rep = xrdma_reduce(cl, vals)
+        np.testing.assert_array_equal(rep.result, vals.sum(axis=0))
+        assert rep.forwards == 8
+
+    def test_reduce_with_dead_leaf_detected_not_hung(self):
+        cl = Cluster(n_servers=4, wire="ideal")
+        cl.kill_server(2)
+        vals = np.ones((5, 2), I32)
+        with pytest.raises(TimeoutError):
+            xrdma_reduce(cl, vals)
+
+
+# ========================================================== A_PUBLISH / ABI
+class TestSelfPropagation:
+    def test_gossiper_ring_propagates_itself(self, gossiper):
+        """Injected code that re-publishes ITSELF: the client sends one
+        frame; the code then rides the ring on its own for `hops` hops,
+        logging once per PE — no client involvement past the first send."""
+        cl = Cluster(n_servers=3, wire="ideal")
+        n = 4
+        for i, pe in enumerate(cl.pes()):
+            pe.register_region("gossip_log", np.zeros(2, I32))
+            pe.register_cap("gossip_meta", np.array([i, n], I32))
+        cl.toolchain.publish(gossiper)
+        sends0 = cl.client.stats.sends
+        cl.client.send_ifunc("server0", "gossiper", np.array([2, 5], I32))
+        cl.drain()
+        logs = [pe.region("gossip_log").tolist() for pe in cl.pes()]
+        assert logs == [[1, 5], [1, 5], [1, 5], [0, 0]]
+        assert cl.client.stats.sends - sends0 == 1
+        assert cl.servers[0].stats.publishes == 1  # the code hopped onward
+        assert cl.servers[1].stats.publishes == 1
+
+    def test_gossiper_hop_budget_exhausts(self, gossiper):
+        cl = Cluster(n_servers=3, wire="ideal")
+        for i, pe in enumerate(cl.pes()):
+            pe.register_region("gossip_log", np.zeros(2, I32))
+            pe.register_cap("gossip_meta", np.array([i, 4], I32))
+        cl.toolchain.publish(gossiper)
+        cl.client.send_ifunc("server0", "gossiper", np.array([0, 5], I32))
+        cl.drain()
+        logs = [pe.region("gossip_log").tolist() for pe in cl.pes()]
+        assert logs == [[1, 5], [0, 0], [0, 0], [0, 0]]  # no budget, no hop
+
+    def test_propagate_abi_batched_fold_matches_sequential(self):
+        """The propagate-ABI masked scan: N partials retired in one
+        dispatch produce the same accumulator and the same single
+        completing action as N per-message invokes."""
+        reducer = _reducer_for_width(2)
+        results = {}
+        for batching in (False, True):
+            cl = Cluster(n_servers=1, wire="ideal")
+            pe = cl.servers[0]
+            pe.batching = batching
+            pe.register_region("reduce_acc", np.zeros(3, I32))
+            pe.register_region("reduce_src", np.array([10, 20], I32))
+            # expected 4 contributions; parent = client (idx 1); not root
+            pe.register_cap("reduce_meta", np.array([4, 1, 0], I32))
+            cl.toolchain.publish(reducer)
+            cl.client.register_region("reduce_acc", np.zeros(3, I32))
+            cl.client.register_region("reduce_src", np.zeros(2, I32))
+            cl.client.register_cap("reduce_meta", np.array([99, 1, 1], I32))
+            for pay in ([0, 0, 0], [1, 5, 6], [1, 7, 8], [1, 100, 200]):
+                cl.client.send_ifunc("server0", "reducer", np.array(pay, I32))
+            pe.poll()
+            if batching:
+                pe.flush()
+            results[batching] = (
+                pe.region("reduce_acc").copy(),
+                pe.stats.forwards,
+                pe.stats.invokes,
+            )
+        np.testing.assert_array_equal(results[False][0], results[True][0])
+        np.testing.assert_array_equal(results[False][0], [4, 122, 234])
+        assert results[False][1] == results[True][1] == 1  # one upward FORWARD
+        assert results[True][2] < results[False][2]  # and fewer dispatches
+
+    def test_propagate_abi_padding_rows_are_nops(self):
+        """3 payloads pad to a bucket of 4: the padded row must contribute
+        neither to the fold nor an action (edge-repeat padding would
+        otherwise double-count the last partial)."""
+        reducer = _reducer_for_width(2)
+        cl = Cluster(n_servers=1, wire="ideal")
+        pe = cl.servers[0]
+        pe.batching = True
+        pe.register_region("reduce_acc", np.zeros(3, I32))
+        pe.register_region("reduce_src", np.array([1, 1], I32))
+        pe.register_cap("reduce_meta", np.array([100, 1, 0], I32))
+        cl.toolchain.publish(reducer)
+        for pay in ([1, 2, 3], [1, 4, 5], [1, 6, 7]):
+            cl.client.send_ifunc("server0", "reducer", np.array(pay, I32))
+        pe.poll()
+        np.testing.assert_array_equal(pe.region("reduce_acc"), [3, 12, 15])
+        assert pe.stats.forwards == 0  # far from expected: no action at all
+
+
+# ===================================================== workload integration
+class TestWorkloadPropagation:
+    def test_dapc_tree_distribution_oracle_identical(self):
+        cl = Cluster(n_servers=4, wire="ideal")
+        app = PointerChaseApp(cl, n_entries=512, max_slots=16, seed=3)
+        starts = np.random.default_rng(3).integers(0, 512, 8).astype(I32)
+        rep = app.dapc(starts, 32, mode="bitcode", propagation=BINOMIAL)
+        want = [chase_ref(app.table, s, 32) for s in starts]
+        assert rep.results.tolist() == want
+        assert rep.hop_frames == 4  # one hop per server
+
+    def test_dapc_tree_fewer_client_code_sends(self):
+        """The conformance-matrix dispatch claim on cold clusters: tree
+        distribution sends strictly fewer client code frames than flat."""
+        counts = {}
+        starts = np.array([0, 130, 260, 390], I32)  # one start per shard
+        for arm, prop in (("flat", None), ("tree", BINOMIAL)):
+            cl = Cluster(n_servers=4, wire="ideal")
+            app = PointerChaseApp(cl, n_entries=512, max_slots=8, seed=0)
+            rep = app.dapc(starts, 16, mode="bitcode", propagation=prop)
+            assert rep.results.tolist() == [
+                chase_ref(app.table, s, 16) for s in starts
+            ]
+            counts[arm] = cl.client.stats.code_sends
+        assert counts["tree"] < counts["flat"]
+        assert counts["flat"] == 4 and counts["tree"] == 3
+
+    def test_gather_tree_distribution_oracle_identical(self):
+        cl = Cluster(n_servers=4, wire="ideal")
+        svc = EmbedShardService(cl, vocab=64, dim=4, n_keys=4, max_slots=8)
+        batches = ragged_batches(64, 8, 4, seed=2)
+        rep = svc.gather(batches, propagation=BINOMIAL)
+        for got, want in zip(rep.results, svc.oracle(batches)):
+            np.testing.assert_array_equal(got, want)
+        assert rep.hop_frames == 4
+
+    def test_dapc_tree_distribution_survives_dead_midtree_server(self):
+        """Code distribution on a degraded cluster: server1 (a mid-tree
+        node whose subtree holds server2) is dead, yet dapc with tree
+        propagation completes for every chase that never visits the
+        corpse's shard — the shared distribute_code re-parents the
+        orphaned survivors instead of timing out."""
+        cl = Cluster(n_servers=4, wire="ideal")
+        app = PointerChaseApp(cl, n_entries=512, max_slots=8, seed=0)
+        cl.kill_server(1)
+        # a chain table confined to shard 0 (rows 0..127): never leaves it
+        table = np.arange(512, dtype=I32)
+        table[:128] = np.roll(np.arange(128, dtype=I32), -1)
+        app.table[:] = table
+        for i, pe in enumerate(cl.servers):
+            if pe.endpoint.alive:
+                pe.region("table_shard")[:] = table[i * 128 : (i + 1) * 128]
+                pe.endpoint.touch_region("table_shard")
+        starts = np.array([0, 5, 17], I32)
+        rep = app.dapc(starts, 16, mode="bitcode", propagation=BINOMIAL)
+        want = [chase_ref(table, s, 16) for s in starts]
+        assert rep.results.tolist() == want
+        # the corpse's shard is simply absent; the survivors are all warm
+        digest = cl.toolchain.lookup("chaser").digest.hex()
+        for idx in (0, 2, 3):
+            assert cl.servers[idx].target_cache.lookup_digest(digest) is not None
+
+    def test_gather_kill_after_distribution_leaks_no_cq_slots(self):
+        """Tree-distribute, then kill a shard owner mid-burst: the lost
+        requests surface as TimeoutError, cancelling their futures returns
+        every completion-queue slot (no leaked slots, no stale installs
+        consulted)."""
+        cl = Cluster(n_servers=4, wire="ideal")
+        svc = EmbedShardService(cl, vocab=64, dim=4, n_keys=2, max_slots=8)
+        svc.distribute_code(BINOMIAL)
+        cl.kill_server(2)
+        # [1] resolves at server0; [1, 33]'s remainder FORWARDs to the dead
+        # server2 (EndpointDead at the forwarding hop); [50] resolves at 3
+        for keys in ([1], [1, 33], [50]):
+            svc.submit(np.array(keys, I32))
+        from repro.core import EndpointDead
+
+        errors, idle = 0, False
+        for _ in range(50):
+            try:
+                svc.run()
+                break
+            except EndpointDead:
+                errors += 1  # the forward to the corpse, surfaced loudly
+            except TimeoutError:
+                idle = True  # lost request detected by idleness
+                break
+        assert errors >= 1 and idle
+        for req in list(svc.active.values()):
+            req.future.cancel()
+        svc.active.clear()
+        assert svc.cq.free_slots == svc.max_slots
+        # the two resolvable requests completed despite the corpse
+        assert sorted(r.keys[0] for r in svc.finished) == [1, 50]
+
+
+# ============================================================ restart story
+class TestRestartInvalidation:
+    def test_restart_server_invalidates_every_sender(self, tsi):
+        """Regression (ISSUE 4 satellite): Cluster.restart_server must drop
+        every peer's sender-cache entries for the restarted endpoint —
+        otherwise the next send ships a digest-only frame the fresh PE
+        cannot decode.  After the fix the next send simply re-pays the code
+        frame and works, no ProtocolError, no manual invalidation."""
+        cl = counter_cluster(tsi, n_servers=2)
+        cl.client.send_ifunc("server0", "tsi", np.ones(1, I32))
+        cl.drain()
+        assert cl.client.sender_cache.has("server0", tsi.digest.hex())
+        cl.kill_server(0)
+        pe = cl.restart_server(0)
+        pe.register_region("counter", np.zeros(1, I32))
+        assert not cl.client.sender_cache.has("server0", tsi.digest.hex())
+        code0 = cl.client.stats.code_sends
+        cl.client.send_ifunc("server0", "tsi", np.ones(1, I32))
+        pe.poll()  # decodes fine: the frame carried code again
+        assert pe.region("counter")[0] == 1
+        assert cl.client.stats.code_sends == code0 + 1
+
+    def test_restarted_publisher_not_deduped_as_its_former_self(self, tsi):
+        """A restarted PE re-mints pub_ids from zero.  Peers must drop the
+        dedup keys of its previous life on restart, or its fresh publishes
+        of already-seen code collide with stale (digest, root, pub_id)
+        entries and are silently swallowed — exactly-once would become
+        at-most-zero."""
+        cl = counter_cluster(tsi, n_servers=2)
+        # server0 (peer index 0) publishes as a root: pub_id 1 of its life 1
+        cl.servers[0].publish_to("server1", "tsi", np.array([2], I32), ttl=1)
+        cl.drain()
+        assert counters(cl)[1] == 2
+        cl.kill_server(0)
+        pe = cl.restart_server(0)
+        pe.register_region("counter", np.zeros(1, I32))
+        # life 2 re-mints pub_id 1 for the same digest and root index
+        pe.publish_to("server1", "tsi", np.array([3], I32), ttl=1)
+        cl.drain()
+        assert cl.servers[1].stats.publish_dupes == 0
+        assert counters(cl)[1] == 5  # the fresh publish really ran
+
+    def test_restart_invalidates_server_side_senders_too(self, tsi):
+        """Server-to-server sender caches (FORWARD/publish paths) go stale
+        on a restart exactly like the client's: the fix must invalidate
+        every PE, not just the client."""
+        cl = counter_cluster(tsi, n_servers=3)
+        # warm server1 -> server2 via a relayed publish (server1 re-publishes)
+        xrdma_bcast(cl, "tsi", np.array([1], I32),
+                    config=PropagationConfig(topology="kary", k=1))
+        assert cl.servers[1].sender_cache.has("server2", tsi.digest.hex())
+        cl.kill_server(2)
+        cl.restart_server(2)
+        assert not cl.servers[1].sender_cache.has("server2", tsi.digest.hex())

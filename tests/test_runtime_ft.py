@@ -60,23 +60,51 @@ def test_resume_from_disk(tiny_cfg, tmp_path):
 def test_restarted_pe_invalidates_sender_cache():
     """Paper Sec III-D corner: a restarted PE lost its code cache; senders
     holding stale cache entries would ship truncated frames that the PE
-    cannot decode.  The runtime layer invalidates on restart."""
-    from repro.core import Cluster, ProtocolError, make_tsi
+    cannot decode.  ``Cluster.restart_server`` now invalidates every
+    sender's entries itself (ISSUE 4 regression fix), so the first send
+    after a restart re-pays the full code frame and just works."""
+    from repro.core import Cluster, make_tsi
 
     cl = Cluster(n_servers=1, wire="ideal")
     cl.servers[0].register_region("counter", np.zeros(1, np.int32))
     cl.toolchain.publish(make_tsi())
     cl.client.send_ifunc("server0", "tsi", np.ones(1, np.int32))
     cl.drain()
-    # server dies and restarts: fresh caches, no regions
+    # server dies and restarts: fresh caches, no regions — and every
+    # sender's cache rows for it dropped by restart_server
     cl.kill_server(0)
     pe = cl.restart_server(0)
     pe.register_region("counter", np.zeros(1, np.int32))
-    # stale sender cache -> truncated frame -> the PE must refuse loudly
+    code0 = cl.client.stats.code_sends
+    cl.client.send_ifunc("server0", "tsi", np.ones(1, np.int32))
+    pe.poll()  # full frame travelled: installs and runs, no refusal
+    assert pe.region("counter")[0] == 1
+    assert cl.client.stats.code_sends == code0 + 1
+
+
+def test_stale_sender_cache_still_refused_loudly():
+    """The loud-refusal path behind the restart fix is still exercised
+    when staleness arises outside Cluster.restart_server (e.g. an operator
+    swapping a process under the same endpoint name): a truncated frame
+    for unknown code raises, and manual invalidation recovers."""
+    from repro.core import Cluster, ProtocolError, make_tsi
+    from repro.core.ifunc import PE
+
+    cl = Cluster(n_servers=1, wire="ideal")
+    cl.servers[0].register_region("counter", np.zeros(1, np.int32))
+    cl.toolchain.publish(make_tsi())
+    cl.client.send_ifunc("server0", "tsi", np.ones(1, np.int32))
+    cl.drain()
+    # a fresh process takes over the endpoint WITHOUT the cluster's
+    # restart path running — senders keep their stale cache rows
+    cl.fabric.kill("server0")
+    pe = PE("server0", cl.fabric, triple="cpu-bf2", toolchain=cl.toolchain,
+            peers=cl.servers[0].peers)
+    cl.servers[0] = pe
+    pe.register_region("counter", np.zeros(1, np.int32))
     cl.client.send_ifunc("server0", "tsi", np.ones(1, np.int32))
     with pytest.raises(ProtocolError):
         pe.poll()
-    # recovery: invalidate and resend full frame
     cl.client.sender_cache.invalidate_endpoint("server0")
     cl.client.send_ifunc("server0", "tsi", np.ones(1, np.int32))
     pe.poll()
