@@ -15,6 +15,8 @@ Guarded metrics — "higher is better" unless marked ``<``:
                         zerocopy_vs_get_bytes_ratio (<)
   BENCH_propagate.json  client_dispatch_ratio, modeled_us_reduction_pct,
                         warm_modeled_us_reduction_pct, warm_code_bytes (<)
+  BENCH_overload.json   hop_latency_improvement_pct, receiver_backlog_ratio,
+                        hop_ticks_flow (<)
 
 ``python -m benchmarks.check_regression`` (run from the repo root after
 regenerating the BENCH files); exits non-zero on any regression.
@@ -46,6 +48,12 @@ GUARDS = {
         ("modeled_us_reduction_pct", True),
         ("warm_modeled_us_reduction_pct", True),
         ("warm_code_bytes", False),  # a warm tree must ship zero code bytes
+    ],
+    "BENCH_overload.json": [
+        ("hop_latency_improvement_pct", True),
+        ("receiver_backlog_ratio", True),
+        # control-plane latency under overload must not creep back up
+        ("hop_ticks_flow", False),
     ],
 }
 

@@ -1,0 +1,255 @@
+"""Overload A/B: offered load vs completion latency, with and without the
+progress engine's priority lanes + per-peer credit windows.
+
+The scenario the layered runtime exists for: a continuous stream of gather
+requests saturates a hot shard (bulk key-frames in, bulk RETURN data out)
+while the control plane concurrently tree-publishes fresh code
+(benchmarks/propagate.py's multicast) through the same congested PEs.
+Under the old single-lane FIFO runtime a PUBLISH hop queues behind every
+bulk frame that arrived before it, so code distribution latency grows
+linearly with data backlog; with **lanes** on, control frames drain first
+at every hop, and with a **credit window** the client cannot flood a slow
+shard's receive queue in the first place (excess sends queue locally,
+``TrafficStats.credit_stalls`` counts them).
+
+Both arms run the *same* bounded progress engine (``poll_budget`` frames
+processed per poll — an overloaded PE never drains its backlog in one
+tick), so the A/B isolates scheduling policy, not engine throughput:
+
+  ``baseline``  lanes off, credits off — the pre-layering FIFO drain.
+  ``flow``      lanes on, per-peer credit window on.
+
+Latency unit: deterministic scheduler ticks (one service round: admit ->
+flush -> poll every PE -> retire), the same clock for both arms.  Every
+run is oracle-checked — gather rows bit-identical to numpy take, every
+server's counter incremented by the broadcast TSI exactly once — before
+any number is reported.
+
+``python -m benchmarks.overload --ab --json BENCH_overload.json`` records
+the committed trajectory (guarded by benchmarks/check_regression.py);
+``--tiny`` is the CI fast-lane smoke.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Cluster, make_tsi
+from repro.runtime.embed_service import EmbedShardService
+
+from .hw_model import PROFILES
+
+TSI_VALUE = 7
+MAX_TICKS = 200_000
+
+
+def hot_batches(
+    vocab: int,
+    rows_per_shard: int,
+    n_requests: int,
+    n_keys: int,
+    seed: int,
+    hot_frac: float = 0.8,
+) -> list[np.ndarray]:
+    """Ragged key batches skewed onto shard 0: ``hot_frac`` of requests
+    draw every key from the hot shard's row range, the rest uniformly —
+    the hot-key distribution that actually overloads one PE."""
+    rng = np.random.default_rng(seed)
+    batches = []
+    for _ in range(n_requests):
+        n = int(rng.integers(1, n_keys + 1))
+        hi = rows_per_shard if rng.random() < hot_frac else vocab
+        batches.append(rng.integers(0, hi, n).astype(np.int32))
+    return batches
+
+
+def overload_run(
+    n_servers: int,
+    offered: int,
+    *,
+    lanes: bool,
+    credit_window: int,
+    poll_budget: int,
+    profile: str = "thor_bf2",
+    n_keys: int = 8,
+    dim: int = 16,
+    vocab_per_shard: int = 64,
+    max_slots: int = 64,
+    publish_tick: int = 3,
+    seed: int = 0,
+) -> dict:
+    """One arm: ``offered`` gather requests against a hot shard, with a
+    TSI tree-publish injected at ``publish_tick``.  Returns per-arm
+    latency/backlog/wire accounting (all latencies in scheduler ticks)."""
+    vocab = vocab_per_shard * n_servers
+    cl = Cluster(n_servers=n_servers, wire=profile)
+    svc = EmbedShardService(
+        cl, vocab=vocab, dim=dim, n_keys=n_keys, max_slots=max_slots, seed=seed
+    )
+    for pe in cl.servers:
+        pe.register_region("counter", np.zeros(1, np.int32))
+    cl.toolchain.publish(make_tsi())
+    batches = hot_batches(
+        vocab, svc.rows_per_shard, offered, n_keys, seed + 1
+    )
+    want = svc.oracle(batches)
+    # warm the gather path (code movement + the common pad buckets) before
+    # measuring, so both arms start from the same steady state
+    svc.gather(batches[: min(16, offered)], batching=True)
+
+    cl.set_batching(True)
+    svc.batching = True
+    cl.set_flow(lanes=lanes, credit_window=credit_window, poll_budget=poll_budget)
+    cl.fabric.stats.reset()
+
+    rids = [svc.submit(b) for b in batches]
+    done_tick: dict[int, int] = {}
+    n_done0 = len(svc.finished)
+    tick = 0
+    hop_done = None
+    max_backlog = 0
+    max_sender_queue = 0
+    while svc.queue or svc.active or hop_done is None:
+        tick += 1
+        if tick == publish_tick:
+            cl.client.publish_ifunc("tsi", np.array([TSI_VALUE], np.int32))
+        svc.tick()
+        for req in svc.finished[n_done0 + len(done_tick):]:
+            done_tick[req.rid] = tick
+        if hop_done is None and tick >= publish_tick and all(
+            int(pe.region("counter")[0]) == TSI_VALUE for pe in cl.servers
+        ):
+            hop_done = tick
+        max_backlog = max(
+            max_backlog,
+            max(
+                len(pe.endpoint.inbox) + pe.progress.pending()
+                for pe in cl.servers
+            ),
+        )
+        max_sender_queue = max(
+            max_sender_queue, cl.client.wire.queued_credit_frames()
+        )
+        if tick > MAX_TICKS:
+            raise TimeoutError(f"overload run did not settle in {MAX_TICKS} ticks")
+    # oracle: every gather bit-identical, every counter incremented exactly once
+    finished = {r.rid: r for r in svc.finished[n_done0:]}
+    for rid, w in zip(rids, want):
+        assert np.array_equal(finished[rid].rows, w), "gather diverged from oracle"
+    counters = [int(pe.region("counter")[0]) for pe in cl.servers]
+    assert counters == [TSI_VALUE] * n_servers, counters
+    lat = np.array([done_tick[r] for r in rids], np.int64)
+    st = cl.fabric.stats
+    return {
+        "hop_ticks": hop_done - publish_tick,
+        "req_mean_ticks": round(float(lat.mean()), 2),
+        "req_p95_ticks": int(np.percentile(lat, 95)),
+        "req_max_ticks": int(lat.max()),
+        "total_ticks": tick,
+        "max_receiver_backlog": max_backlog,
+        "max_sender_queue": max_sender_queue,
+        "credit_stalls": st.credit_stalls,
+        "puts": st.puts,
+        "wire_bytes": st.put_bytes + st.get_bytes + st.region_put_bytes,
+        "modeled_us": round(st.modeled_us, 3),
+    }
+
+
+def overload_ab(
+    n_servers: int = 16,
+    offered_loads: tuple[int, ...] = (64, 256),
+    poll_budget: int = 8,
+    credit_window: int = 8,
+    profile: str = "thor_bf2",
+    seed: int = 0,
+) -> dict:
+    """The A/B sweep: each offered load runs the baseline (single-lane
+    FIFO, no credits) and the flow arm (lanes + credit window) on fresh
+    but identically-seeded clusters."""
+    sweep = []
+    for offered in offered_loads:
+        arms = {}
+        for label, lanes, window in (
+            ("baseline", False, 0),
+            ("flow", True, credit_window),
+        ):
+            arms[label] = overload_run(
+                n_servers,
+                offered,
+                lanes=lanes,
+                credit_window=window,
+                poll_budget=poll_budget,
+                profile=profile,
+                seed=seed,
+            )
+        sweep.append({"offered": offered, **arms})
+    top = sweep[-1]
+    base, flow = top["baseline"], top["flow"]
+    return {
+        "config": {
+            "n_servers": n_servers,
+            "offered_loads": list(offered_loads),
+            "poll_budget": poll_budget,
+            "credit_window": credit_window,
+            "profile": profile,
+        },
+        "sweep": sweep,
+        # the headline: control-plane latency under peak data overload
+        "hop_ticks_baseline": base["hop_ticks"],
+        "hop_ticks_flow": flow["hop_ticks"],
+        "hop_latency_improvement_pct": round(
+            100 * (1 - flow["hop_ticks"] / max(base["hop_ticks"], 1)), 2
+        ),
+        # credits keep the hot shard's receive backlog bounded; the excess
+        # waits at the sender (counted as credit stalls)
+        "receiver_backlog_ratio": round(
+            base["max_receiver_backlog"] / max(flow["max_receiver_backlog"], 1), 2
+        ),
+        "flow_credit_stalls": flow["credit_stalls"],
+        "oracle_checked": True,
+    }
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ab", action="store_true",
+                    help="baseline vs lanes+credits sweep (the only mode)")
+    ap.add_argument("--json", metavar="PATH", help="write the result dict to PATH")
+    ap.add_argument("--servers", type=int, default=16)
+    ap.add_argument("--loads", type=int, nargs="+", default=None,
+                    help="offered-load sweep points (requests per burst)")
+    ap.add_argument("--budget", type=int, default=8)
+    ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--profile", default="thor_bf2", choices=PROFILES)
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke-test size (4 servers, one small load)")
+    args = ap.parse_args()
+
+    out = overload_ab(
+        n_servers=4 if args.tiny else args.servers,
+        offered_loads=tuple(args.loads) if args.loads else (
+            (32,) if args.tiny else (64, 256)
+        ),
+        poll_budget=args.budget,
+        credit_window=args.window,
+        profile=args.profile,
+    )
+    if not args.tiny:
+        # acceptance floor: under peak overload, lanes+credits must cut the
+        # control-plane hop latency and the flow arm must actually have
+        # exercised the credit window (at tiny sizes it merely has to be
+        # correct)
+        assert out["hop_latency_improvement_pct"] > 0.0, out
+        assert out["flow_credit_stalls"] > 0, out
+    text = json.dumps(out, indent=1, default=float)
+    print(text)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

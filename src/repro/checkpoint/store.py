@@ -28,7 +28,7 @@ import json
 import shutil
 import threading
 from pathlib import Path
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import numpy as np

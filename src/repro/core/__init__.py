@@ -7,7 +7,9 @@ Public API re-exports.  Layering:
   bitcode    — fat-bitcode archives over jax.export blobs (Sec. III-C)
   cache      — SenderCache / TargetCodeCache (Sec. III-D, Fig. 4)
   propagate  — spanning-tree multicast shapes + completion model (Sec. I)
-  ifunc      — IFunc + PE runtime + action ABI + PUBLISH propagation path
+  pe         — the layered PE runtime: source / wire / codecache / exec /
+               progress layers + CompletionQueue + the PE facade
+               (re-exported by the stable `ifunc` module)
   xrdma      — Chaser / ReturnResult / TSI / Gatherer / Reducer / Gossiper
   cluster    — in-process cluster + deterministic scheduler
   pointer_chase — DAPC miniapp + GBPC baseline (Secs. IV-C/D)
@@ -33,7 +35,8 @@ from .frame import (
     unpack,
     unpack_hop,
 )
-from .ifunc import (
+from .frame import ProtocolError
+from .pe import (
     ACTION_WIDTH,
     A_DONE,
     A_FORWARD,
@@ -46,8 +49,10 @@ from .ifunc import (
     IFunc,
     ISAMismatch,
     PE,
-    ProtocolError,
+    PEStats,
+    ProgressEngine,
     Toolchain,
+    WireLayer,
 )
 from .pointer_chase import ChaseReport, PointerChaseApp, chase_ref, make_chain
 from .propagate import (
@@ -106,7 +111,9 @@ __all__ = [
     "ISAMismatch",
     "MAGIC",
     "PE",
+    "PEStats",
     "PointerChaseApp",
+    "ProgressEngine",
     "PropagationConfig",
     "ProtocolError",
     "RegionWrite",
@@ -115,6 +122,7 @@ __all__ = [
     "TargetCodeCache",
     "Toolchain",
     "WIRE_PROFILES",
+    "WireLayer",
     "WireModel",
     "chase_ref",
     "coalesce",

@@ -11,10 +11,10 @@ same PE.poll API but benchmarks use the scheduler for reproducibility).
 
 from __future__ import annotations
 
-from typing import Callable, Sequence
+from typing import Callable
 
 from .dataplane import DataPlaneConfig
-from .ifunc import PE, Toolchain
+from .pe import PE, Toolchain
 from .propagate import PropagationConfig
 from .transport import Fabric, WireModel
 
@@ -66,6 +66,25 @@ class Cluster:
         for pe in self.pes():
             pe.propagation = cfg
 
+    def set_flow(
+        self,
+        lanes: bool | None = None,
+        credit_window: int | None = None,
+        poll_budget: int | None = ...,  # type: ignore[assignment]
+    ) -> None:
+        """Install progress-engine/flow-control knobs on every PE: control-
+        before-data ``lanes``, the per-peer ``credit_window`` (payloads;
+        0 disables), and the per-poll ``poll_budget`` (payloads; ``None``
+        drains everything; pass it explicitly to change it — the default
+        leaves it alone)."""
+        for pe in self.pes():
+            if lanes is not None:
+                pe.lanes = lanes
+            if credit_window is not None:
+                pe.credit_window = credit_window
+            if poll_budget is not ...:
+                pe.poll_budget = poll_budget
+
     def pes(self) -> list[PE]:
         return [*self.servers, self.client]
 
@@ -102,7 +121,7 @@ class Cluster:
         cfg = config or PropagationConfig()
         self.set_propagation(cfg)
         client = self.client
-        hexd = client._resolve_source(name).digest.hex()
+        hexd = client.resolve_source(name).digest.hex()
         alive = [pe for pe in self.servers if pe.endpoint.alive]
 
         def uncovered() -> list[PE]:
@@ -139,7 +158,7 @@ class Cluster:
                 f"code distribution of {name!r} left "
                 f"{[pe.name for pe in still]} uncovered"
             )
-        hexd = self.client._resolve_source(name).digest.hex()
+        hexd = self.client.resolve_source(name).digest.hex()
         alive = [pe for pe in self.servers if pe.endpoint.alive]
         for sender in self.alive_pes():
             for pe in alive:

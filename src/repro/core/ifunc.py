@@ -1,1390 +1,74 @@
 """ifuncs: injected functions — code that travels with the message.
 
+.. note::
+   This module is a **stable re-export facade**.  The runtime it used to
+   hold in one file now lives in the layered package :mod:`repro.core.pe`:
+
+   * :mod:`repro.core.pe.source`    — :class:`IFunc`, :class:`Toolchain`
+   * :mod:`repro.core.pe.wire`      — frame egress, batching queues,
+     coalesced flush, rendezvous staging, credit-based flow control
+   * :mod:`repro.core.pe.codecache` — install + digest validation +
+     bucketed batched executables
+   * :mod:`repro.core.pe.exec`      — invoke, masked-scan update ABI, the
+     X-RDMA action protocol (and its ``A_*`` constants)
+   * :mod:`repro.core.pe.progress`  — the :class:`ProgressEngine` poll
+     loop: priority lanes, per-poll budget, credit return
+   * :mod:`repro.core.pe.cq`        — :class:`CompletionQueue`,
+     :class:`GatherFuture`
+   * :mod:`repro.core.pe.pe`        — the thin :class:`PE` facade
+
+   Every name importable from here before the split stays importable from
+   here (``from repro.core.ifunc import PE, CompletionQueue, GatherFuture,
+   IFunc`` is covered by tests/test_layering.py); new code should import
+   from :mod:`repro.core` or the specific layer.
+
 Source side, an :class:`IFunc` couples an entry function (a pure JAX
 function) with its fat-bitcode archive (``jax.export`` blobs for every
-toolchain target, Sec. III-C) and its dependency list (Sec. III-C ``.deps``).
-Target side, a :class:`PE` (processing element) polls its endpoint, installs
-arriving code (extract slice -> deserialize -> target-side JIT -> digest
-cache) and invokes it.
-
-ABI — how the runtime and injected code meet
---------------------------------------------
-The paper's ifunc entry is ``main(payload, payload_size, target_ptr)`` and
-may call UCX itself (via remote dynamic linking) to recursively re-inject
-itself.  An XLA executable cannot call back into the transport mid-flight,
-so the TPU-idiomatic rendering keeps the *decision logic in the shipped
-code* and leaves only a fixed, function-agnostic action protocol in the
-runtime (the moral equivalent of the UCX API the paper's ifuncs link
-against):
-
-* ``update`` ABI — ``entry(payload, region) -> new_region``.  The runtime
-  stores the result back into the named memory region (TSI's counter).
-* ``xrdma`` ABI — ``entry(payload, *linked_deps) -> i64[ACTION_WIDTH]``
-  action vector::
-
-      [action, dst, plen, p0 .. p7]
-
-  ``action``: 0 DONE | 1 FORWARD (re-inject *this same ifunc*, code and
-  all, to peer ``dst`` with payload ``p[:plen]``) | 2 RETURN (send the
-  ifunc named by the ``returns:`` dep to ``dst``) | 3 SPAWN (send the
-  ifunc named by the ``spawn:`` dep — "generate new code") | 4 NOP
-  (no action; skipped by the runtime) | 5 PUBLISH (re-publish *this same
-  ifunc* to peer ``dst`` under a fresh propagation hop header — ``p0`` is
-  the hop ttl, ``p[1:plen]`` the published payload; this is how shipped
-  code recursively propagates itself, Sec. I).
-* ``propagate`` ABI — ``entry(payload, region, *deps) -> (new_region,
-  actions)``: one entry both folds into its linked region (like
-  ``update``) *and* emits action rows (like ``xrdma``).  Under the
-  batched runtime the region fold is the same masked ``lax.scan`` as
-  ``update`` — which is exactly what a tree reduction needs: child
-  partials fold into the accumulator in one dispatch, and the row whose
-  fold completes the subtree emits the upward FORWARD.
-
-  An xrdma entry may instead return an ``(R, W)`` i32 *matrix* of action
-  rows; the runtime applies the rows in order.  ``W`` only has to satisfy
-  ``W >= 3 + plen`` for every row — rows are self-describing via their
-  ``plen`` field, so one rectangular matrix carries ragged payloads.  NOP
-  rows are how statically-shaped shipped code emits a *variable* number
-  of actions: the Gatherer, for example, returns one potential FORWARD
-  row per peer shard plus one RETURN row, and NOPs the rows it does not
-  need this invocation.
-
-  Local recursion — the paper's "ifunc calls itself recursively" when the
-  next pointer is local — happens *inside* the shipped code as a
-  ``lax.while_loop``: the blob chases until the frontier leaves its shard,
-  then emits FORWARD.  One network action per locality break, exactly the
-  paper's DAPC behaviour.
-
-Dependency tags (the wire ``DEPS`` list, Sec. III-C):
-
-* ``abi:<update|xrdma|pure>`` — invoke convention.
-* ``region:<name>`` — link the PE's registered memory region as an argument.
-* ``cap:<name>``    — link a host capability (small constant array, e.g.
-  shard metadata) as an argument.
-* ``returns:<ifunc>`` / ``spawn:<ifunc>`` — ifunc types this code may emit;
-  resolved through the PE's source registry / toolchain at action time.
+toolchain target, Sec. III-C) and its dependency list (Sec. III-C
+``.deps``).  Target side, a :class:`PE` (processing element) polls its
+endpoint, installs arriving code (extract slice -> deserialize ->
+target-side JIT -> digest cache) and invokes it.  The ABI the runtime and
+injected code meet at — the action protocol, the ``update``/``xrdma``/
+``propagate`` conventions, the dependency tags — is documented in
+:mod:`repro.core.pe.exec` and :mod:`repro.core.pe.source`.
 """
 
 from __future__ import annotations
 
-import hashlib
-import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Callable, Sequence
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax import lax
-
-from .bitcode import DEFAULT_TOOLCHAIN_TARGETS, FatBitcode, platform_of
-from .cache import CachedExecutable, SenderCache, TargetCodeCache
-from .dataplane import DataPlaneConfig, SlabLayout
-from .frame import (
-    Frame,
-    FrameFlags,
-    FrameKind,
-    HopHeader,
-    ProtocolError,
-    coalesce,
-    pack_hop,
-    pack_rndv,
-    peek_header,
-    rndv_region,
-    split_hop,
-    split_payloads,
-    unpack,
-    unpack_rndv,
+from .frame import ProtocolError  # historical re-export (pre-PR 2 home)
+from .pe import (
+    ACTION_WIDTH,
+    A_DONE,
+    A_FORWARD,
+    A_NOP,
+    A_PUBLISH,
+    A_RETURN,
+    A_SPAWN,
+    CompletionQueue,
+    GatherFuture,
+    IFunc,
+    ISAMismatch,
+    PE,
+    PEStats,
+    RNDV_STAGING_DEPTH,
+    Toolchain,
 )
-from .propagate import PropagationConfig, tree_children
-from .transport import EndpointDead, Fabric, RegionWrite
 
-ACTION_WIDTH = 11  # [action, dst, plen, p0..p7]
-A_DONE, A_FORWARD, A_RETURN, A_SPAWN, A_NOP, A_PUBLISH = 0, 1, 2, 3, 4, 5
-
-# rendezvous staging ring depth: outstanding staged RETURN payloads per PE
-# before the oldest registration is reclaimed (bounds pinned memory the way
-# a real transport bounds its rendezvous buffer pool)
-RNDV_STAGING_DEPTH = 1024
-
-
-class ISAMismatch(RuntimeError):
-    """Binary ifunc landed on a PE whose triple it was not compiled for."""
-
-
-# ----------------------------------------------------------------- source
-@dataclass
-class IFunc:
-    """Source-side handle: name + fat-bitcode + deps (paper Fig. 1 register)."""
-
-    name: str
-    fat: FatBitcode
-    deps: tuple[str, ...]
-    abi: str
-    payload_aval: jax.ShapeDtypeStruct
-    kind: FrameKind = FrameKind.BITCODE
-    # Optional zero-copy layout for RETURN-type ifuncs: lets a sender map
-    # this ifunc's payload onto one-sided slab writes instead of a frame.
-    # Sender-side only — never travels on the wire, never affects digest.
-    slab: SlabLayout | None = None
-
-    @property
-    def code_bytes(self) -> bytes:
-        return self.fat.to_bytes()
-
-    @property
-    def digest(self) -> bytes:
-        import hashlib
-
-        return hashlib.sha256(self.code_bytes).digest()
-
-    @classmethod
-    def build(
-        cls,
-        name: str,
-        fn: Callable[..., Any],
-        payload_aval: jax.ShapeDtypeStruct,
-        dep_avals: Sequence[jax.ShapeDtypeStruct] = (),
-        deps: Sequence[str] = (),
-        abi: str = "pure",
-        targets: Sequence[str] = DEFAULT_TOOLCHAIN_TARGETS,
-        kind: FrameKind = FrameKind.BITCODE,
-        fn_by_platform=None,
-        slab: SlabLayout | None = None,
-    ) -> "IFunc":
-        """Run the Three-Chains toolchain: cross-compile ``fn`` for every
-        target triple into a fat-bitcode archive.
-
-        ``kind=BINARY`` models Sec. III-B: the archive holds exactly one
-        slice (the source machine's own triple) and the target will refuse
-        a triple mismatch instead of re-lowering.  ``fn_by_platform``
-        optionally swaps the entry per platform (see FatBitcode.build).
-        """
-        if kind == FrameKind.BINARY and len(targets) != 1:
-            raise ValueError("binary ifuncs are single-triple by definition")
-        fat = FatBitcode.build(
-            fn, (payload_aval, *dep_avals), targets=targets,
-            fn_by_platform=fn_by_platform,
-        )
-        wire_deps = (f"abi:{abi}", *deps)
-        return cls(
-            name=name,
-            fat=fat,
-            deps=wire_deps,
-            abi=abi,
-            payload_aval=payload_aval,
-            kind=kind,
-            slab=slab,
-        )
-
-    def make_frame(self, payload: bytes, seq: int = 0) -> Frame:
-        return Frame(
-            kind=self.kind,
-            name=self.name,
-            payload=payload,
-            code=self.code_bytes,
-            deps=self.deps,
-            digest=self.digest,
-            seq=seq,
-        )
-
-
-class Toolchain:
-    """The shared filesystem of toolchain artifacts (paper Fig. 1: generated
-    files 'placed in a directory that can be located by Three-Chains').
-
-    Any PE may *register as a sender* from here — that is how a server that
-    received a Chaser can emit a ReturnResult it never received over the
-    wire, just as the paper's SPMD app binaries can register any ifunc
-    library present on their local disk.  What is NOT pre-deployed is the
-    target-side executable: code still travels in frames and installs via
-    the cache protocol.
-    """
-
-    def __init__(self) -> None:
-        self._artifacts: dict[str, IFunc] = {}
-
-    def publish(self, ifunc: IFunc) -> IFunc:
-        self._artifacts[ifunc.name] = ifunc
-        return ifunc
-
-    def lookup(self, name: str) -> IFunc:
-        return self._artifacts[name]
-
-    def names(self) -> tuple[str, ...]:
-        return tuple(sorted(self._artifacts))
-
-
-# ----------------------------------------------------------------- target
-@dataclass
-class PEStats:
-    msgs: int = 0
-    ifunc_installs: int = 0
-    invokes: int = 0  # XLA dispatches (a batched dispatch counts once)
-    batched_invokes: int = 0  # dispatches that retired >1 payload
-    invoked_payloads: int = 0  # payloads retired across all dispatches
-    forwards: int = 0
-    returns: int = 0
-    spawns: int = 0
-    sends: int = 0  # frames this PE PUT on the wire (any kind)
-    code_sends: int = 0  # of those, frames that carried code bytes
-    zerocopy_returns: int = 0  # RETURNs that went one-sided (no frame/dispatch)
-    rndv_returns: int = 0  # RETURNs that went descriptor + GET
-    am_handled: int = 0
-    flushes: int = 0
-    # --- recursive propagation (PUBLISH hops) ---
-    publishes: int = 0  # hop frames sent (root fan-out + re-publishes)
-    publish_handled: int = 0  # publishes accepted (installed/invoked) here
-    publish_dupes: int = 0  # re-delivered publishes dropped by the dedup key
-    publish_refused_ttl: int = 0  # arrived with ttl already expired (loud)
-    publish_refused_cycle: int = 0  # own index on the visited path (loud)
-    publish_refused_digest: int = 0  # code bytes != header digest (poisoned)
-    publish_stopped_ttl: int = 0  # had children but no hop budget left
-    publish_send_failures: int = 0  # child endpoint dead at re-publish time
-    jit_ms_total: float = 0.0
-
-    def as_dict(self) -> dict[str, float]:
-        d = self.__dict__.copy()
-        d["jit_ms_total"] = round(self.jit_ms_total, 3)
-        return d
-
-
-class PE:
-    """A processing element: endpoint + ifunc runtime + caches + local state.
-
-    ``triple`` models the ISA/uarch (hosts are ``cpu-host`` Xeons, DPUs are
-    ``cpu-bf2`` BlueField Arm cores, A64FX nodes ``cpu-a64fx``); on this
-    container all execute on the CPU backend, but triple *mismatch logic* is
-    real: binary ifuncs require an exact triple, fat-bitcode falls back by
-    platform and re-optimizes locally (Sec. III-C).
-    """
-
-    def __init__(
-        self,
-        name: str,
-        fabric: Fabric,
-        triple: str = "cpu-host",
-        toolchain: Toolchain | None = None,
-        peers: Sequence[str] = (),
-    ) -> None:
-        platform_of(triple)  # validate
-        self.name = name
-        self.triple = triple
-        self.fabric = fabric
-        self.endpoint = fabric.connect(name)
-        self.toolchain = toolchain
-        self.peers: list[str] = list(peers)
-        self.target_cache = TargetCodeCache()
-        self.sender_cache = SenderCache()
-        self.source_registry: dict[str, IFunc] = {}
-        self.am_table: dict[str, Callable[["PE", bytes], None]] = {}
-        self.caps: dict[str, np.ndarray] = {}
-        self.completed: list[np.ndarray] = []
-        self.stats = PEStats()
-        self.caching_enabled = True  # benchmark switch: uncached mode
-        self.batching = False  # batched runtime: coalesced sends + grouped polls
-        self.dataplane = DataPlaneConfig()  # protocol selection (default: framed)
-        self.propagation = PropagationConfig()  # tree multicast policy
-        self._seq = 0
-        self._region_dev: dict[str, tuple[int, jax.Array]] = {}
-        self._sendq: dict[str, list[Frame]] = {}  # per-destination pending frames
-        self._regionq: dict[str, list[RegionWrite]] = {}  # pending one-sided writes
-        self._rndv_tokens: deque[str] = deque()  # staged rendezvous regions (ring)
-        self._rndv_seq = 0
-        self._pub_seq = 0  # publish ids minted by this PE as a tree root
-        self._seen_pubs: set[tuple[bytes, int, int]] = set()  # publish dedup
-
-    # --- local state ------------------------------------------------------
-    def register_region(self, name: str, arr: np.ndarray) -> None:
-        self.endpoint.register_region(name, arr)
-
-    def region(self, name: str) -> np.ndarray:
-        return self.endpoint.regions[name]
-
-    def _region_device(self, name: str) -> jax.Array:
-        """Device-resident view of a region, cached until the region is
-        rewritten (read-mostly shards stay resident, like RDMA-registered
-        memory staying pinned).  Versioning lives on the endpoint so that
-        *remote* one-sided writes (zero-copy RETURNs landing in a slab)
-        also invalidate the device mirror — otherwise a framed fold could
-        read a stale snapshot and overwrite bytes the fabric just wrote."""
-        ver = self.endpoint.region_ver.get(name, 0)
-        hit = self._region_dev.get(name)
-        if hit is not None and hit[0] == ver:
-            return hit[1]
-        dev = jax.device_put(self.endpoint.regions[name])
-        self._region_dev[name] = (ver, dev)
-        return dev
-
-    def _write_region(self, name: str, value: np.ndarray) -> None:
-        np.copyto(self.endpoint.regions[name], value)
-        self.endpoint.touch_region(name)
-
-    def register_cap(self, name: str, arr: np.ndarray) -> None:
-        self.caps[name] = np.asarray(arr)
-
-    # --- source side --------------------------------------------------------
-    def register_source(self, ifunc: IFunc) -> IFunc:
-        self.source_registry[ifunc.name] = ifunc
-        return ifunc
-
-    def _resolve_source(self, name: str) -> IFunc:
-        got = self.source_registry.get(name)
-        if got is None:
-            if self.toolchain is None:
-                raise ProtocolError(f"{self.name}: no source artifact for {name!r}")
-            got = self.register_source(self.toolchain.lookup(name))
-        return got
-
-    def send_ifunc(self, dst: str, name: str, payload: np.ndarray | bytes) -> int:
-        """Create and PUT an ifunc message; returns wire bytes sent."""
-        ifunc = self._resolve_source(name)
-        pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
-        self._seq += 1
-        frame = ifunc.make_frame(pay, seq=self._seq)
-        return self._put_frame(dst, frame)
-
-    def send_am(self, dst: str, name: str, payload: np.ndarray | bytes) -> int:
-        """Active Message baseline: payload-only frame, handler pre-deployed."""
-        pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
-        self._seq += 1
-        frame = Frame(kind=FrameKind.ACTIVE_MESSAGE, name=name, payload=pay, seq=self._seq)
-        return self._put_frame(dst, frame)
-
-    # --- recursive propagation: source side ---------------------------------
-    def publish_ifunc(
-        self,
-        name: str,
-        payload: np.ndarray | bytes = b"",
-        *,
-        ttl: int | None = None,
-        config: PropagationConfig | None = None,
-    ) -> list[str]:
-        """Publish an ifunc down this PE's spanning tree (paper Sec. I:
-        code that "recursively propagate[s] itself to other remote
-        machines").
-
-        Sends one PUBLISH hop frame to each of this PE's *tree children*
-        only — O(log n) for the binomial default — and every child that
-        installs the code re-publishes it to its own children, so coverage
-        reaches all n peers without the root sending n frames.  An empty
-        ``payload`` is a pure code distribution (install + re-publish, no
-        invoke); a non-empty payload is invoked at every covered PE (the
-        broadcast the multi-hop collectives build on).  Returns the peer
-        names actually sent to.
-        """
-        cfg = config or self.propagation
-        ifunc = self._resolve_source(name)
-        pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
-        me = self.peer_index(self.name)
-        self._pub_seq += 1
-        hop = HopHeader(
-            ttl=ttl if ttl is not None else cfg.ttl,
-            root=me,
-            pub_id=self._pub_seq,
-            path=(me,),
-            k=cfg.k_code,
-        )
-        return self._publish_to_children(
-            hop, ifunc.kind, name, pay, ifunc.code_bytes, ifunc.deps, ifunc.digest
-        )
-
-    def forget_publisher(self, root: int) -> None:
-        """Drop publish-dedup state for one root peer index.  A restarted
-        peer re-mints pub_ids from zero; without this, its fresh publishes
-        of already-seen code collide with the stale (digest, root, pub_id)
-        keys recorded for its previous life and are silently dropped as
-        duplicates — exactly-once would quietly become at-most-zero."""
-        self._seen_pubs = {k for k in self._seen_pubs if k[1] != root}
-
-    def publish_to(
-        self,
-        dst: str,
-        name: str,
-        payload: np.ndarray | bytes = b"",
-        *,
-        ttl: int = 1,
-    ) -> None:
-        """Publish directly to one named peer (no tree fan-out at this end;
-        the receiver still re-publishes if ``ttl`` allows).  This is the
-        re-parenting primitive: when a mid-tree PE dies, the root re-covers
-        the orphaned subtree by publishing straight to its survivors."""
-        ifunc = self._resolve_source(name)
-        # a direct publish exists because the normal delivery is in doubt —
-        # drop our cache belief so the code travels again (a dropped hop
-        # upstream may have warmed this entry without the bytes ever landing)
-        self.sender_cache.forget(dst, ifunc.digest.hex())
-        pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
-        me = self.peer_index(self.name)
-        self._pub_seq += 1
-        hop = HopHeader(
-            ttl=ttl, root=me, pub_id=self._pub_seq, path=(me,),
-            k=self.propagation.k_code,
-        )
-        self._send_publish(
-            dst, hop, ifunc.kind, name, pay, ifunc.code_bytes, ifunc.deps,
-            ifunc.digest,
-        )
-
-    def _publish_to_children(
-        self,
-        hop: HopHeader,
-        kind: FrameKind,
-        name: str,
-        inner: bytes,
-        code: bytes,
-        deps: tuple[str, ...],
-        digest: bytes,
-    ) -> list[str]:
-        """Send one hop frame per tree child; a dead child loses only its
-        own subtree's frame (counted), the rest of the fan-out proceeds."""
-        me = self.peer_index(self.name)
-        sent: list[str] = []
-        for child in tree_children(hop.k, hop.root, me, len(self.peers)):
-            dst = self.peers[child]
-            try:
-                self._send_publish(dst, hop, kind, name, inner, code, deps, digest)
-                sent.append(dst)
-            except EndpointDead:
-                self.stats.publish_send_failures += 1
-                # the PUT never landed: roll back the cache entry the send
-                # just added, or a later re-publish would wrongly truncate
-                self.sender_cache.forget(dst, digest.hex())
-        return sent
-
-    def _send_publish(
-        self,
-        dst: str,
-        hop: HopHeader,
-        kind: FrameKind,
-        name: str,
-        inner: bytes,
-        code: bytes,
-        deps: tuple[str, ...],
-        digest: bytes,
-    ) -> None:
-        self._seq += 1
-        frame = Frame(
-            kind=kind,
-            name=name,
-            payload=pack_hop(hop) + inner,
-            code=code,
-            deps=deps,
-            digest=digest,
-            seq=self._seq,
-            flags=FrameFlags.HOP,
-        )
-        self.stats.publishes += 1
-        # publishes bypass the batching send queue even when batching is on:
-        # hop frames never coalesce (per-edge path headers), and a dead
-        # child must surface EndpointDead HERE — synchronously — so the
-        # fan-out's per-child containment and sender-cache rollback apply
-        # identically on both runtimes (a queued send would defer the error
-        # to flush() and skip both).
-        self._put_now(dst, frame)
-
-    def submit(
-        self,
-        dst: str,
-        name: str,
-        body: np.ndarray,
-        queue: "CompletionQueue",
-        expected: int,
-    ) -> "GatherFuture":
-        """Submit a completion-tracked X-RDMA op and return its future.
-
-        The completion-queue wire convention: the runtime prepends the
-        routing header ``[requester, slot, epoch]`` to the caller's
-        ``body``, so every shipped op under this protocol sees
-        ``payload[0]`` = the requester's peer index, ``payload[1]`` = the
-        slot its RETURNs must target, and ``payload[2]`` = the slot's
-        generation tag (RETURN code drops stale generations, making slot
-        recycling safe under at-least-once delivery).  ``expected`` is how
-        many result units (e.g. resolved rows) must arrive — possibly via
-        several out-of-order RETURNs from different PEs — before the
-        future reads done.
-        """
-        slot, epoch = queue._alloc()
-        hdr = np.array([self.peer_index(self.name), slot, epoch], np.int32)
-        payload = np.concatenate([hdr, np.asarray(body, np.int32)])
-        fut = GatherFuture(queue=queue, slot=slot, expected=int(expected))
-        queue._inflight[slot] = fut
-        try:
-            self.send_ifunc(dst, name, payload)
-        except Exception:
-            fut.cancel()  # a failed send must not leak the slot
-            raise
-        return fut
-
-    def peer_index(self, name: str) -> int:
-        """This cluster's dense peer index for ``name`` (the index space
-        X-RDMA action vectors use for ``dst``/``requester``)."""
-        return self.peers.index(name)
-
-    def _put_frame(self, dst: str, frame: Frame) -> int:
-        """PUT a frame now, or queue it for the next :meth:`flush`.
-
-        Returns wire bytes sent, or 0 when the frame was queued (the wire
-        size of a queued frame is only known after coalescing).
-        """
-        if self.batching:
-            self._sendq.setdefault(dst, []).append(frame)
-            return 0
-        return self._put_now(dst, frame)
-
-    def _put_now(self, dst: str, frame: Frame) -> int:
-        if frame.kind in (FrameKind.ACTIVE_MESSAGE, FrameKind.RNDV):
-            cached = True  # AM / rendezvous descriptors never carry code
-        else:
-            cached = self.caching_enabled and self.sender_cache.check_and_add(
-                dst, frame.digest.hex(), len(frame.code)
-            )
-        wire = frame.wire_bytes(cached=cached)
-        self.stats.sends += 1
-        if not cached and frame.code:
-            self.stats.code_sends += 1
-        self.fabric.put(
-            self.name,
-            dst,
-            wire,
-            n_payloads=frame.n_payloads,
-            kinds=frame.kind_breakdown(cached),
-            hop=bool(frame.flags & FrameFlags.HOP),
-        )
-        return len(wire)
-
-    def flush(self) -> int:
-        """Emit every queued frame and one-sided write burst.
-
-        A burst of same-type frames to one peer travels as a single
-        coalesced PUT (one ``alpha_us``, summed bytes); a burst of queued
-        zero-copy slab writes to one peer travels as a single doorbell-
-        batched WQE chain (one ``alpha_us``, one ``o_us`` per extra
-        segment).  A failing destination (e.g. a killed endpoint) loses
-        only its own traffic — every other destination's queue is still
-        delivered, then the first error is re-raised.  Returns the number
-        of wire operations issued.
-        """
-        queued, self._sendq = self._sendq, {}
-        regionq, self._regionq = self._regionq, {}
-        puts = 0
-        errors: list[Exception] = []
-        for dst, frames in queued.items():
-            # group by ifunc type AND payload size (AM payloads are caller-
-            # defined and xrdma plen varies, so same-name frames can be
-            # ragged — those travel as separate coalesced PUTs), preserving
-            # first-seen order.  PUBLISH hop frames never coalesce: each
-            # carries its own per-edge path header.
-            groups: dict[tuple[int, str, bytes, int, int], list[Frame]] = {}
-            for f in frames:
-                key = (
-                    int(f.kind), f.name, f.digest, len(f.payload),
-                    int(f.flags) & FrameFlags.HOP,
-                )
-                groups.setdefault(key, []).append(f)
-            for key, members in groups.items():
-                batch = [coalesce(members)] if not key[4] else members
-                for frame in batch:
-                    try:
-                        self._put_now(dst, frame)
-                        puts += 1
-                    except Exception as e:  # noqa: BLE001 - deliver the rest first
-                        errors.append(e)
-        for dst, writes in regionq.items():
-            try:
-                self.fabric.put_region_multi(self.name, dst, writes)
-                puts += 1
-            except Exception as e:  # noqa: BLE001 - deliver the rest first
-                errors.append(e)
-        if puts:
-            self.stats.flushes += 1
-        if errors:
-            raise errors[0]
-        return puts
-
-    # --- target side --------------------------------------------------------
-    def poll(self, max_msgs: int | None = None) -> int:
-        """Drain the endpoint buffer, installing and invoking arrivals.
-
-        This is the paper's 'UCX ifunc polling function' — ideally called
-        from a daemon thread; tests and the single-core benchmarks call it
-        from a round-robin scheduler (core.cluster).
-
-        With :attr:`batching` on, the drained frames are grouped by code
-        digest, each group's payloads are decoded into one ``(B, ...)``
-        block and retired by a single batched XLA dispatch, and everything
-        the dispatches emitted is flushed as coalesced per-destination PUTs.
-        """
-        if not self.batching:
-            n = 0
-            for buf in self.endpoint.drain():
-                self._handle(bytes(buf))
-                n += 1
-                self.stats.msgs += 1
-                if max_msgs is not None and n >= max_msgs:
-                    break
-            return n
-        bufs: list[bytes] = []
-        for buf in self.endpoint.drain():
-            bufs.append(bytes(buf))
-            self.stats.msgs += 1
-            if max_msgs is not None and len(bufs) >= max_msgs:
-                break
-        if bufs:
-            try:
-                self._handle_batch(bufs)
-            finally:
-                self.flush()  # emitted actions travel even if a frame was bad
-        return len(bufs)
-
-    def _handle_am(self, frame: Frame) -> None:
-        handler = self.am_table.get(frame.name)
-        if handler is None:
-            raise ProtocolError(f"{self.name}: no AM handler {frame.name!r}")
-        for pay in split_payloads(frame):
-            self.stats.am_handled += 1
-            handler(self, pay)
-
-    # --- recursive propagation: target side ---------------------------------
-    def _handle_publish(self, buf: bytes, hdr) -> None:
-        """One PUBLISH hop: validate -> install -> invoke -> re-publish.
-
-        The validation ladder runs *before* anything is installed or
-        invoked, in blast-radius order (Kourtis et al.: injected code must
-        be validated at every hop, not only at the origin):
-
-        1. poisoned code — the code section's sha256 must equal the header
-           digest; a mismatch is refused loudly and, crucially, is NOT
-           re-published, so a poisoned frame cannot ride the tree.
-        2. duplicate — (code digest, root, pub_id) already handled here:
-           dropped silently (the fabric is at-least-once; re-delivery is
-           normal, and the drop is what makes a forwarding loop starve).
-        3. ttl expired — a frame arriving with no hop budget left was
-           forwarded by a peer that should have stopped: refused loudly.
-        4. cycle — this PE's own index on the visited path: refused loudly
-           (the path digest was already verified by the hop parser).
-
-        An accepted publish installs the code, invokes the payload (if the
-        publish carries one — a bare publish is pure code distribution),
-        and re-publishes code + payload to its tree children with one hop
-        spent and itself appended to the path.  Warm children receive
-        digest-only frames: the SenderCache truncation applies to hop
-        frames exactly as to point-to-point sends.
-        """
-        has_code = len(buf) >= hdr.full_total and hdr.code_len > 0
-        frame = unpack(buf, has_code=has_code)
-        if frame.flags & FrameFlags.BATCH:
-            raise ProtocolError(f"{self.name}: publish frames never coalesce")
-        hop, inner = split_hop(frame.payload)  # CorruptFrame on tampering
-        me = self.peer_index(self.name)
-        if has_code and hashlib.sha256(frame.code).digest() != frame.digest:
-            self.stats.publish_refused_digest += 1
-            raise ProtocolError(
-                f"{self.name}: publish of {hdr.name!r} carries code that does "
-                f"not match its digest (poisoned code refused, not re-published)"
-            )
-        key = (hdr.digest, hop.root, hop.pub_id)
-        if key in self._seen_pubs:
-            self.stats.publish_dupes += 1
-            return
-        if hop.ttl <= 0:
-            self.stats.publish_refused_ttl += 1
-            raise ProtocolError(
-                f"{self.name}: publish of {hdr.name!r} arrived with expired "
-                f"ttl (path {hop.path})"
-            )
-        if me in hop.path:
-            self.stats.publish_refused_cycle += 1
-            raise ProtocolError(
-                f"{self.name}: publish of {hdr.name!r} would cycle — own "
-                f"index {me} already on path {hop.path}"
-            )
-        if has_code:
-            exe = self._install(frame)
-        else:
-            exe = self.target_cache.lookup(hdr.name)
-            if exe is None or exe.digest != hdr.digest.hex():
-                hit = self.target_cache.lookup_digest(hdr.digest.hex())
-                if hit is None:
-                    raise ProtocolError(
-                        f"{self.name}: digest-only publish for unknown code "
-                        f"{hdr.name!r} (stale sender cache — was this PE "
-                        f"restarted?)"
-                    )
-                exe = CachedExecutable(
-                    name=hdr.name,
-                    digest=hit.digest,
-                    fn=hit.fn,
-                    in_avals=hit.in_avals,
-                    deps=hit.deps,
-                    kind=int(hdr.kind),
-                    extras=dict(hit.extras),
-                )
-                self.target_cache.install(exe, jit_ms=0.0)
-                self.stats.ifunc_installs += 1
-        self._seen_pubs.add(key)
-        self.stats.publish_handled += 1
-        if inner:
-            self._invoke(exe, inner)
-        children = tree_children(hop.k, hop.root, me, len(self.peers))
-        if not children:
-            return
-        if hop.ttl < 2:
-            self.stats.publish_stopped_ttl += 1
-            return
-        code = frame.code if has_code else exe.extras.get("code", b"")
-        self._publish_to_children(
-            hop.child_hop(me),
-            FrameKind(exe.kind),
-            exe.name,
-            inner,
-            code,
-            exe.deps,
-            bytes.fromhex(exe.digest),
-        )
-
-    def _rndv_pull(self, name: str, desc: bytes) -> tuple[CachedExecutable, bytes]:
-        """Resolve a rendezvous descriptor: GET the staged payload from the
-        source's staging region.  The executable must already be cached —
-        descriptors cannot carry code (the sender only selects rendezvous
-        for cache-warm peers), so a miss here means a stale sender cache."""
-        src_idx, token, nbytes = unpack_rndv(desc)  # CorruptFrame if malformed
-        exe = self.target_cache.lookup(name)
-        if exe is None:
-            raise ProtocolError(
-                f"{self.name}: rendezvous descriptor for unregistered ifunc "
-                f"{name!r} (stale sender cache — was this PE restarted?)"
-            )
-        if not 0 <= src_idx < len(self.peers):
-            raise ProtocolError(f"{self.name}: rendezvous src index {src_idx} out of range")
-        src = self.peers[src_idx]
-        try:
-            data = self.fabric.get(self.name, src, rndv_region(src, token), 0, nbytes)
-        except KeyError:
-            # staging ring evicted the region, or the source restarted with
-            # fresh (empty) registered memory — loud but contained, like the
-            # framed path's stale-sender-cache refusal
-            raise ProtocolError(
-                f"{self.name}: rendezvous staging region for token {token} "
-                f"gone at {src!r} (evicted or source restarted)"
-            ) from None
-        return exe, data
-
-    def _resolve_exe(self, buf: bytes, hdr) -> tuple[CachedExecutable, Frame]:
-        """Find (or install) the executable a frame refers to; returns it
-        with the frame unpacked exactly once (code-carrying frames are
-        multi-KB, a second parse is a second copy).
-
-        The name registry decides whether a truncated frame is acceptable;
-        the digest decides whether the name's code is *current* — a frame
-        carrying new code under a known name (republished ifunc) installs
-        and supersedes, it never silently runs the stale executable.
-        """
-        has_code = len(buf) >= hdr.full_total and hdr.code_len > 0
-        frame = unpack(buf, has_code=has_code)
-        if not self.target_cache.has_name(hdr.name):
-            if not has_code:
-                raise ProtocolError(
-                    f"{self.name}: truncated frame for unregistered ifunc "
-                    f"{hdr.name!r} (stale sender cache — was this PE restarted?)"
-                )
-            return self._install(frame), frame
-        exe = self.target_cache.lookup(hdr.name)
-        assert exe is not None
-        if exe.digest != hdr.digest.hex():
-            if has_code:
-                return self._install(frame), frame
-            hit = self.target_cache.lookup_digest(hdr.digest.hex())
-            if hit is None:
-                raise ProtocolError(
-                    f"{self.name}: truncated frame for {hdr.name!r} with "
-                    f"unknown code digest (stale sender cache)"
-                )
-            exe = hit
-        return exe, frame
-
-    def _handle(self, buf: bytes) -> None:
-        hdr = peek_header(buf)
-        if hdr is None:
-            raise ProtocolError("short frame")
-        if hdr.flags & FrameFlags.HOP:
-            self._handle_publish(buf, hdr)
-            return
-        if hdr.kind == FrameKind.ACTIVE_MESSAGE:
-            self._handle_am(unpack(buf, has_code=False))
-            return
-        if hdr.kind == FrameKind.RNDV:
-            frame = unpack(buf, has_code=False)
-            for desc in split_payloads(frame):
-                exe, data = self._rndv_pull(frame.name, desc)
-                self._invoke(exe, data)
-            return
-        # ifunc path: does this wire carry code? (sender truncates iff it
-        # believes we have it; len tells the truth, the registry must agree)
-        exe, frame = self._resolve_exe(buf, hdr)
-        for pay in split_payloads(frame):
-            self._invoke(exe, pay)
-
-    def _handle_batch(self, bufs: list[bytes]) -> None:
-        """Group drained frames by code digest and invoke each group once.
-
-        A frame that fails to resolve (stale sender cache after a restart)
-        or a group that fails to invoke (corrupt payload block) must not
-        take the rest of the drained batch down with it: every healthy
-        frame/group is still processed, then the first error is re-raised —
-        the same blast radius as the per-message path.
-        """
-        groups: dict[bytes, tuple[CachedExecutable, list[bytes]]] = {}
-        errors: list[Exception] = []
-        for buf in bufs:
-            try:
-                hdr = peek_header(buf)
-                if hdr is None:
-                    raise ProtocolError("short frame")
-                if hdr.flags & FrameFlags.HOP:
-                    # publishes are install-dominated and rare (one per PE
-                    # per code distribution): handled inline, re-publishes
-                    # ride the post-poll flush as everything else does
-                    self._handle_publish(buf, hdr)
-                    continue
-                if hdr.kind == FrameKind.ACTIVE_MESSAGE:
-                    self._handle_am(unpack(buf, has_code=False))
-                    continue
-                if hdr.kind == FrameKind.RNDV:
-                    # pull each staged payload, then fold it into the same
-                    # digest group as any framed payloads of the same ifunc:
-                    # rendezvous and eager arrivals retire in ONE dispatch
-                    frame = unpack(buf, has_code=False)
-                    for desc in split_payloads(frame):
-                        exe, data = self._rndv_pull(frame.name, desc)
-                        entry = groups.setdefault(bytes.fromhex(exe.digest), (exe, []))
-                        entry[1].append(data)
-                    continue
-                exe, frame = self._resolve_exe(buf, hdr)
-                entry = groups.setdefault(hdr.digest, (exe, []))
-                entry[1].extend(split_payloads(frame))
-            except (ProtocolError, ValueError, ISAMismatch, EndpointDead) as e:
-                errors.append(e)
-        for exe, pays in groups.values():
-            try:
-                self._invoke_batch(exe, pays)
-            except Exception as e:  # noqa: BLE001 - process remaining groups
-                errors.append(e)
-        if errors:
-            raise errors[0]
-
-    def _install(self, frame: Frame) -> CachedExecutable:
-        """Extract slice -> (ORC-)JIT -> digest cache (Sec. III-C/D).
-
-        A digest hit skips compilation entirely (ORC-JIT's internal symbol
-        cache, which the paper observed makes re-JIT of already-seen code
-        free) — only the name registration is new."""
-        hit = self.target_cache.lookup_digest(frame.digest.hex())
-        if hit is not None:
-            exe = CachedExecutable(
-                name=frame.name,
-                digest=hit.digest,
-                fn=hit.fn,
-                in_avals=hit.in_avals,
-                deps=frame.deps or hit.deps,
-                kind=int(frame.kind),
-                extras=dict(hit.extras),
-            )
-            self.target_cache.install(exe, jit_ms=0.0)
-            self.stats.ifunc_installs += 1
-            return exe
-        from .bitcode import BitcodeSlice  # noqa: F401  (documented type)
-
-        fat = FatBitcode.from_bytes(frame.code)
-        if frame.kind == FrameKind.BINARY:
-            # binary code is ISA/uarch-specific: exact triple or bust
-            if self.triple not in fat.slices:
-                raise ISAMismatch(
-                    f"binary ifunc {frame.name!r} built for {fat.triples()} "
-                    f"cannot run on {self.triple!r} (Sec. III-B problem; "
-                    f"ship bitcode instead)"
-                )
-            blob = fat.slices[self.triple]
-        else:
-            blob = fat.extract(self.triple).blob
-        t0 = time.perf_counter()
-        exported = jax.export.deserialize(blob)
-        compiled = jax.jit(exported.call).lower(*exported.in_avals).compile()
-        jit_ms = (time.perf_counter() - t0) * 1e3
-        abi = "pure"
-        for d in frame.deps:
-            if d.startswith("abi:"):
-                abi = d.split(":", 1)[1]
-        exe = CachedExecutable(
-            name=frame.name,
-            digest=frame.digest.hex(),
-            fn=compiled,
-            in_avals=tuple(exported.in_avals),
-            deps=frame.deps,
-            kind=int(frame.kind),
-            extras={"code": frame.code, "abi": abi, "exported": exported},
-        )
-        self.target_cache.install(exe, jit_ms=jit_ms)
-        self.stats.ifunc_installs += 1
-        self.stats.jit_ms_total += jit_ms
-        return exe
-
-    # --- invoke -------------------------------------------------------------
-    def _decode_payload(self, exe: CachedExecutable, payload: bytes) -> np.ndarray:
-        aval = exe.in_avals[0]
-        arr = np.frombuffer(payload, dtype=aval.dtype)
-        return arr.reshape(aval.shape)
-
-    def _dep_args(self, exe: CachedExecutable) -> list[Any]:
-        args: list[Any] = []
-        for d in exe.deps:
-            tag, _, val = d.partition(":")
-            if tag == "region":
-                args.append(self._region_device(val))
-            elif tag == "cap":
-                args.append(self.caps[val])
-        return args
-
-    @staticmethod
-    def _region_arg_pos(exe: CachedExecutable) -> int:
-        """Position of the (single) region among the linked dep arguments."""
-        pos = 0
-        for d in exe.deps:
-            tag, _, _ = d.partition(":")
-            if tag == "region":
-                return pos
-            if tag == "cap":
-                pos += 1
-        raise AssertionError("update ABI requires a region dep")
-
-    def _dep_named(self, exe: CachedExecutable, tag: str) -> str | None:
-        for d in exe.deps:
-            t, _, val = d.partition(":")
-            if t == tag:
-                return val
-        return None
-
-    def _invoke(self, exe: CachedExecutable, payload: bytes) -> None:
-        self.stats.invokes += 1
-        self.stats.invoked_payloads += 1
-        pay = self._decode_payload(exe, payload)
-        args = self._dep_args(exe)
-        out = exe.fn(pay, *args)
-        abi = exe.extras.get("abi", "pure")
-        if abi == "update":
-            region = self._dep_named(exe, "region")
-            assert region is not None, "update ABI requires a region dep"
-            self._write_region(region, np.asarray(out))
-        elif abi == "propagate":
-            region = self._dep_named(exe, "region")
-            assert region is not None, "propagate ABI requires a region dep"
-            new_region, actions = out
-            self._write_region(region, np.asarray(new_region))
-            self._apply_actions(exe, np.asarray(actions))
-        elif abi == "xrdma":
-            self._apply_actions(exe, np.asarray(out))
-        else:  # pure
-            self.completed.append(np.asarray(out))
-
-    # --- batched invoke -----------------------------------------------------
-    @staticmethod
-    def _bucket(n: int) -> int:
-        """Power-of-two padding bucket: bounds batched recompiles to log2."""
-        return 1 << max(0, n - 1).bit_length()
-
-    def _decode_payload_block(
-        self, exe: CachedExecutable, pays: list[bytes], bucket: int
-    ) -> np.ndarray:
-        """Decode N same-type payloads into a ``(bucket, ...)`` block.
-
-        Padding rows repeat the last real payload: a real payload is known
-        to terminate (e.g. a Chaser's ``while_loop`` bound), so edge-repeat
-        padding can never hang where zero-padding might; padded outputs are
-        simply discarded.
-        """
-        aval = exe.in_avals[0]
-        arr = np.frombuffer(b"".join(pays), dtype=aval.dtype)
-        arr = arr.reshape((len(pays), *aval.shape))
-        if bucket > len(pays):
-            arr = np.concatenate([arr, np.repeat(arr[-1:], bucket - len(pays), axis=0)])
-        return arr
-
-    def _batched_executable(self, exe: CachedExecutable, bucket: int):
-        """The vmapped rendering of an installed ifunc, cached per
-        (digest, bucket) in the target code cache.
-
-        ``jax.vmap`` over a deserialized export blob needs a batching rule
-        for ``call_exported``; where the installed JAX version lacks one,
-        the fallback is ``lax.map`` — sequential semantics inside ONE fused
-        XLA dispatch, which is the quantity being amortized.  update-ABI
-        code folds payloads into the region carry with a masked ``lax.scan``
-        (exact sequential semantics, one dispatch, one region write).
-        """
-        hit = self.target_cache.lookup_batched(exe.digest, bucket)
-        if hit is not None:
-            return hit
-        exported = exe.extras["exported"]
-        call = exported.call
-        abi = exe.extras.get("abi", "pure")
-        pay_aval = exe.in_avals[0]
-        block_aval = jax.ShapeDtypeStruct((bucket, *pay_aval.shape), pay_aval.dtype)
-        dep_avals = tuple(exe.in_avals[1:])
-        t0 = time.perf_counter()
-        if abi in ("update", "propagate"):
-            # entry(payload, ..region.., ...) -> new_region (update) or
-            # (new_region, actions) (propagate), folded as a scan carry;
-            # padded rows are masked out so the fold is exact — a masked
-            # propagate row contributes neither to the region nor an action
-            # (its row is overwritten with NOPs).
-            valid_aval = jax.ShapeDtypeStruct((bucket,), jnp.bool_)
-            rpos = self._region_arg_pos(exe)
-
-            def folded(pays, valid, region, *extra):
-                def step(r, pv):
-                    p, v = pv
-                    dep_args = list(extra)
-                    dep_args.insert(rpos, r)
-                    if abi == "propagate":
-                        nr, acts = call(p, *dep_args)
-                        nops = jnp.zeros_like(acts).at[..., 0].set(A_NOP)
-                        return jnp.where(v, nr, r), jnp.where(v, acts, nops)
-                    return jnp.where(v, call(p, *dep_args), r), None
-
-                carry, ys = lax.scan(step, region, (pays, valid))
-                return (carry, ys) if abi == "propagate" else carry
-
-            extra_avals = [a for i, a in enumerate(dep_avals) if i != rpos]
-            compiled = (
-                jax.jit(folded)
-                .lower(block_aval, valid_aval, dep_avals[rpos], *extra_avals)
-                .compile()
-            )
-        else:
-            def vmapped(pays, *deps):
-                return jax.vmap(call, in_axes=(0, *([None] * len(dep_avals))))(
-                    pays, *deps
-                )
-
-            def mapped(pays, *deps):
-                return lax.map(lambda p: call(p, *deps), pays)
-
-            compiled = None
-            for impl in (vmapped, mapped):
-                try:
-                    compiled = jax.jit(impl).lower(block_aval, *dep_avals).compile()
-                    break
-                except NotImplementedError:
-                    continue
-            assert compiled is not None
-        self.stats.jit_ms_total += (time.perf_counter() - t0) * 1e3
-        self.target_cache.install_batched(exe.digest, bucket, compiled)
-        return compiled
-
-    def _invoke_batch(self, exe: CachedExecutable, pays: list[bytes]) -> None:
-        """Retire N same-ifunc payloads in one XLA dispatch."""
-        if len(pays) == 1:  # the per-message executable is already compiled
-            self._invoke(exe, pays[0])
-            return
-        n = len(pays)
-        bucket = self._bucket(n)
-        block = self._decode_payload_block(exe, pays, bucket)
-        fn = self._batched_executable(exe, bucket)
-        args = self._dep_args(exe)
-        abi = exe.extras.get("abi", "pure")
-        self.stats.invokes += 1
-        self.stats.batched_invokes += 1
-        self.stats.invoked_payloads += n
-        if abi in ("update", "propagate"):
-            region = self._dep_named(exe, "region")
-            assert region is not None, f"{abi} ABI requires a region dep"
-            valid = np.arange(bucket) < n
-            rpos = self._region_arg_pos(exe)
-            extra = [a for i, a in enumerate(args) if i != rpos]
-            out = fn(block, valid, args[rpos], *extra)
-            if abi == "propagate":
-                out, acts = out
-                self._write_region(region, np.asarray(out))
-                # padded rows were masked to NOPs inside the scan; applying
-                # the real rows in payload order preserves the sequential
-                # semantics (the row that completes a fold emits the action)
-                for per_payload in np.asarray(acts)[:n]:
-                    self._apply_actions(exe, per_payload)
-            else:
-                self._write_region(region, np.asarray(out))
-        elif abi == "xrdma":
-            actions = np.asarray(fn(block, *args))[:n]
-            for per_payload in actions:
-                self._apply_actions(exe, per_payload)
-        else:  # pure
-            outs = np.asarray(fn(block, *args))[:n]
-            self.completed.extend(outs)
-
-    def _apply_actions(self, exe: CachedExecutable, out: np.ndarray) -> None:
-        """Apply what an xrdma entry returned: one action vector, or an
-        (R, W) matrix of action rows applied in order (see module docstring)."""
-        if out.ndim == 2:
-            for row in out:
-                self._apply_action(exe, row)
-        else:
-            self._apply_action(exe, out)
-
-    def _apply_action(self, exe: CachedExecutable, action: np.ndarray) -> None:
-        """The fixed X-RDMA action protocol (see module docstring)."""
-        code = int(action[0])
-        dst_idx = int(action[1])
-        plen = int(action[2])
-        pay = np.ascontiguousarray(action[3 : 3 + plen])
-        if code == A_NOP:
-            return
-        if code == A_DONE:
-            self.completed.append(pay)
-            return
-        dst = self.peers[dst_idx]
-        if code == A_FORWARD:
-            self.stats.forwards += 1
-            self._seq += 1
-            frame = Frame(
-                kind=FrameKind(exe.kind),
-                name=exe.name,
-                payload=pay.tobytes(),
-                code=exe.extras["code"],
-                deps=exe.deps,
-                digest=bytes.fromhex(exe.digest),
-                seq=self._seq,
-            )
-            self._put_frame(dst, frame)
-        elif code == A_RETURN:
-            self.stats.returns += 1
-            target = self._dep_named(exe, "returns")
-            assert target is not None, "RETURN requires a returns: dep"
-            self._return_payload(dst, target, pay)
-        elif code == A_SPAWN:
-            self.stats.spawns += 1
-            target = self._dep_named(exe, "spawn")
-            assert target is not None, "SPAWN requires a spawn: dep"
-            self.send_ifunc(dst, target, pay)
-        elif code == A_PUBLISH:
-            # shipped code re-publishing *itself*: p0 is the hop budget it
-            # grants, the rest travels as the published payload — the
-            # paper's "recursively propagate itself" emitted by the code,
-            # not the runtime
-            me = self.peer_index(self.name)
-            self._pub_seq += 1
-            hop = HopHeader(
-                ttl=int(pay[0]),
-                root=me,
-                pub_id=self._pub_seq,
-                path=(me,),
-                k=self.propagation.k_code,
-            )
-            try:
-                self._send_publish(
-                    dst,
-                    hop,
-                    FrameKind(exe.kind),
-                    exe.name,
-                    np.ascontiguousarray(pay[1:]).tobytes(),
-                    exe.extras.get("code", b""),
-                    exe.deps,
-                    bytes.fromhex(exe.digest),
-                )
-            except EndpointDead:
-                self.stats.publish_send_failures += 1
-        else:
-            raise ProtocolError(f"bad action code {code}")
-
-    # --- data plane: protocol-selected RETURNs ------------------------------
-    def _return_payload(self, dst: str, target: str, pay: np.ndarray) -> None:
-        """Ship one RETURN payload under the data plane's protocol selection.
-
-        ``framed`` re-injects the RETURN ifunc (PR 1 path, coalescable);
-        ``zerocopy`` writes the payload one-sidedly into the requester's
-        registered slab per the ifunc's :class:`SlabLayout` and bumps the
-        doorbell — no frame, no requester-side dispatch; ``rendezvous``
-        stages the payload locally and frames only a 16-byte descriptor
-        the requester GETs against.
-        """
-        ifn = self._resolve_source(target)
-        proto = self.dataplane.select(
-            int(pay.nbytes),
-            slab=ifn.slab is not None,
-            code_cached=self.caching_enabled
-            and self.sender_cache.has(dst, ifn.digest.hex()),
-        )
-        if proto == "zerocopy":
-            self.stats.zerocopy_returns += 1
-            writes = ifn.slab.plan(np.ascontiguousarray(pay, np.int32))
-            if self.batching:
-                self._regionq.setdefault(dst, []).extend(writes)
-            else:
-                self.fabric.put_region_multi(self.name, dst, writes)
-        elif proto == "rendezvous":
-            self.stats.rndv_returns += 1
-            self._rndv_send(dst, ifn, pay)
-        else:
-            self.send_ifunc(dst, target, pay)
-
-    def _rndv_send(self, dst: str, ifn: IFunc, pay: np.ndarray) -> None:
-        """Rendezvous RETURN: stage the payload in a source-registered
-        region and frame only the 16-byte descriptor; the requester pulls
-        the data with a one-sided GET (cost ``2*alpha + n/beta``, correct
-        when the payload dwarfs ``2*alpha``)."""
-        token = self._rndv_seq
-        self._rndv_seq += 1
-        staging = rndv_region(self.name, token)
-        # explicit copy: `pay` may be a view into a whole batched action
-        # matrix, and registering the view would pin that matrix in the
-        # staging ring long after the dispatch that produced it
-        data = np.array(pay, np.int32)
-        self.endpoint.register_region(staging, data)
-        self._rndv_tokens.append(staging)
-        while len(self._rndv_tokens) > RNDV_STAGING_DEPTH:
-            self.endpoint.unregister_region(self._rndv_tokens.popleft())
-        desc = pack_rndv(self.peer_index(self.name), token, data.nbytes)
-        self._seq += 1
-        self._put_frame(
-            dst, Frame(kind=FrameKind.RNDV, name=ifn.name, payload=desc, seq=self._seq)
-        )
-
-
-# ----------------------------------------------------- completion queue
-class CompletionQueue:
-    """Client-side completion queue for in-flight X-RDMA submissions.
-
-    The paper's ifuncs complete by writing into requester memory the
-    requester polls (ReturnResult + a counter).  This layer generalizes
-    that to *many overlapped operations*: a results region laid out as
-    ``(max_slots, 2 + width)`` int32 rows — ``row[0]`` is the slot's
-    arrived-position bitmask (popcount = distinct results arrived, so a
-    re-delivered partial RETURN ORs in bits it already set and can never
-    complete a slot early), ``row[1]`` its generation tag (epoch),
-    ``row[2:]`` its data block — plus a free-list of slots and a future
-    per in-flight submission.  RETURN ifuncs
-    (e.g. :func:`repro.core.xrdma.make_gather_return`) scatter into a
-    slot's block and bump its counter; because each RETURN names its slot,
-    completions may arrive *out of order* and interleaved across many
-    in-flight gathers, and retire through the batched update-ABI fold in
-    one XLA dispatch per poll.  Each allocation bumps the slot's epoch and
-    stamps it into every frame of that submission, so a late or
-    re-delivered RETURN for a *retired* gather mismatches the recycled
-    slot's generation and is dropped by the RETURN code — at-least-once
-    delivery cannot corrupt a successor request.  Completion is
-    poll-driven: nothing blocks, :meth:`GatherFuture.done` just reads the
-    counter the next poll wrote.
-
-    ``shape`` is the logical shape of one slot's data block (e.g.
-    ``(n_keys, dim)`` for a gather); ``dtype`` its logical element type —
-    the wire/region representation is always int32 (bit-cast, never
-    converted, so float rows survive bit-identically).
-
-    The results region doubles as the zero-copy data plane's registered
-    slab: under ``DataPlaneConfig.zero_copy`` the remote PE WRITEs partial
-    rows straight into the slot's data words and the fabric ORs the
-    arrived-position bits into ``row[0]`` as the doorbell, guarded by the
-    generation word ``row[1]`` — so ``done()``/``result()`` poll the same
-    memory whether results arrived framed, one-sided, or mixed.
-    """
-
-    def __init__(
-        self,
-        pe: PE,
-        shape: tuple[int, ...],
-        dtype=np.int32,
-        max_slots: int = 64,
-        region: str = "cq_results",
-    ) -> None:
-        self.pe = pe
-        self.shape = tuple(shape)
-        self.dtype = np.dtype(dtype)
-        assert self.dtype.itemsize == 4, "slot blocks are int32-word addressed"
-        self.width = int(np.prod(self.shape))
-        self.max_slots = max_slots
-        self.region = region
-        pe.register_region(region, np.zeros((max_slots, 2 + self.width), np.int32))
-        self._free: deque[int] = deque(range(max_slots))
-        self._inflight: dict[int, "GatherFuture"] = {}
-
-    # -- slot lifecycle ----------------------------------------------------
-    def _alloc(self) -> tuple[int, int]:
-        """Take a free slot and advance its generation; -> (slot, epoch)."""
-        if not self._free:
-            raise RuntimeError(
-                f"completion queue full ({self.max_slots} slots in flight); "
-                "poll and retire futures before submitting more"
-            )
-        slot = self._free.popleft()
-        arr = self.pe.region(self.region)
-        epoch = int(arr[slot, 1]) + 1
-        arr[slot, 0] = 0
-        arr[slot, 1] = epoch
-        arr[slot, 2:] = 0
-        # re-register so the device-resident copy the RETURN fold reads is
-        # refreshed with the new generation tag
-        self.pe.register_region(self.region, arr)
-        return slot, epoch
-
-    def _release(self, slot: int) -> None:
-        # count/data cleared on next _alloc; the epoch stays, so RETURNs
-        # still in flight for the retired generation mismatch and drop
-        self._inflight.pop(slot, None)
-        self._free.append(slot)
-
-    @property
-    def free_slots(self) -> int:
-        return len(self._free)
-
-    def _count(self, slot: int) -> int:
-        """Distinct results arrived: popcount of the position bitmask."""
-        return bin(int(self.pe.region(self.region)[slot, 0]) & 0xFFFFFFFF).count("1")
-
-    def _data(self, slot: int) -> np.ndarray:
-        raw = self.pe.region(self.region)[slot, 2:]
-        return raw.view(self.dtype).reshape(self.shape)
-
-    def completed(self) -> list["GatherFuture"]:
-        """Every in-flight future whose results have fully arrived."""
-        return [f for f in list(self._inflight.values()) if f.done()]
-
-
-@dataclass
-class GatherFuture:
-    """Poll-driven handle for one completion-queue submission.
-
-    ``done()`` becomes true once ``expected`` result units have been
-    RETURNed into the slot (out-of-order, possibly from several PEs);
-    ``result()`` copies the slot's data block out and recycles the slot.
-    ``cancel()`` abandons an in-flight submission (failed send, lost
-    frame) and recycles the slot — the epoch guard makes that safe even
-    if the abandoned gather's RETURNs later arrive.  ``meta`` is caller
-    scratch (e.g. the original un-padded key batch).
-    """
-
-    queue: CompletionQueue
-    slot: int
-    expected: int
-    meta: Any = None
-    _released: bool = False
-
-    def done(self) -> bool:
-        return not self._released and self.queue._count(self.slot) >= self.expected
-
-    def result(self, release: bool = True) -> np.ndarray:
-        if self._released:
-            raise RuntimeError("future already consumed")
-        if not self.done():
-            raise RuntimeError(
-                f"slot {self.slot} incomplete: "
-                f"{self.queue._count(self.slot)}/{self.expected} results arrived"
-            )
-        out = self.queue._data(self.slot).copy()
-        if release:
-            self._released = True
-            self.queue._release(self.slot)
-        return out
-
-    def cancel(self) -> None:
-        """Abandon this submission and recycle its slot (idempotent)."""
-        if not self._released:
-            self._released = True
-            self.queue._release(self.slot)
+__all__ = [
+    "ACTION_WIDTH",
+    "A_DONE",
+    "A_FORWARD",
+    "A_NOP",
+    "A_PUBLISH",
+    "A_RETURN",
+    "A_SPAWN",
+    "CompletionQueue",
+    "GatherFuture",
+    "IFunc",
+    "ISAMismatch",
+    "PE",
+    "PEStats",
+    "ProtocolError",
+    "RNDV_STAGING_DEPTH",
+    "Toolchain",
+]

@@ -1,0 +1,244 @@
+"""Code-cache layer: install arriving code, validate digests, and build
+the batched (bucketed) executables the batched runtime dispatches.
+
+Target side of Sec. III-C/D: extract the triple's slice from a fat-bitcode
+archive -> (ORC-)JIT -> digest cache, with the name registry deciding
+whether a truncated (digest-only) frame is acceptable and the digest
+deciding whether a name's code is *current*.  The batched renderings —
+``vmap``/``lax.map`` for value ABIs, the masked ``lax.scan`` fold for
+update/propagate ABIs — are cached per (digest, power-of-two bucket) in
+the same :class:`repro.core.cache.TargetCodeCache`.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import time
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..bitcode import FatBitcode
+from ..cache import CachedExecutable, TargetCodeCache
+from ..frame import Frame, FrameKind, ProtocolError
+from .exec import A_NOP, region_arg_pos
+
+
+class ISAMismatch(RuntimeError):
+    """Binary ifunc landed on a PE whose triple it was not compiled for."""
+
+
+class CodeCacheLayer:
+    """Install/resolve/batch-compile for one PE's target code cache."""
+
+    def __init__(self, name: str, triple: str, cache: TargetCodeCache, stats) -> None:
+        self.name = name
+        self.triple = triple
+        self.cache = cache
+        self.stats = stats  # the PE's PEStats (shared across layers)
+
+    # --- install ----------------------------------------------------------
+    def install(self, frame: Frame) -> CachedExecutable:
+        """Extract slice -> (ORC-)JIT -> digest cache (Sec. III-C/D).
+
+        A digest hit skips compilation entirely (ORC-JIT's internal symbol
+        cache, which the paper observed makes re-JIT of already-seen code
+        free) — only the name registration is new."""
+        hit = self.cache.lookup_digest(frame.digest.hex())
+        if hit is not None:
+            exe = CachedExecutable(
+                name=frame.name,
+                digest=hit.digest,
+                fn=hit.fn,
+                in_avals=hit.in_avals,
+                deps=frame.deps or hit.deps,
+                kind=int(frame.kind),
+                extras=dict(hit.extras),
+            )
+            self.cache.install(exe, jit_ms=0.0)
+            self.stats.ifunc_installs += 1
+            return exe
+
+        fat = FatBitcode.from_bytes(frame.code)
+        if frame.kind == FrameKind.BINARY:
+            # binary code is ISA/uarch-specific: exact triple or bust
+            if self.triple not in fat.slices:
+                raise ISAMismatch(
+                    f"binary ifunc {frame.name!r} built for {fat.triples()} "
+                    f"cannot run on {self.triple!r} (Sec. III-B problem; "
+                    f"ship bitcode instead)"
+                )
+            blob = fat.slices[self.triple]
+        else:
+            blob = fat.extract(self.triple).blob
+        t0 = time.perf_counter()
+        exported = jax.export.deserialize(blob)
+        compiled = jax.jit(exported.call).lower(*exported.in_avals).compile()
+        jit_ms = (time.perf_counter() - t0) * 1e3
+        abi = "pure"
+        for d in frame.deps:
+            if d.startswith("abi:"):
+                abi = d.split(":", 1)[1]
+        exe = CachedExecutable(
+            name=frame.name,
+            digest=frame.digest.hex(),
+            fn=compiled,
+            in_avals=tuple(exported.in_avals),
+            deps=frame.deps,
+            kind=int(frame.kind),
+            extras={"code": frame.code, "abi": abi, "exported": exported},
+        )
+        self.cache.install(exe, jit_ms=jit_ms)
+        self.stats.ifunc_installs += 1
+        self.stats.jit_ms_total += jit_ms
+        return exe
+
+    # --- resolve ----------------------------------------------------------
+    def resolve_exe(self, buf: bytes, hdr) -> tuple[CachedExecutable, Frame]:
+        """Find (or install) the executable a frame refers to; returns it
+        with the frame unpacked exactly once (code-carrying frames are
+        multi-KB, a second parse is a second copy).
+
+        The name registry decides whether a truncated frame is acceptable;
+        the digest decides whether the name's code is *current* — a frame
+        carrying new code under a known name (republished ifunc) installs
+        and supersedes, it never silently runs the stale executable.
+        """
+        from ..frame import unpack
+
+        has_code = len(buf) >= hdr.full_total and hdr.code_len > 0
+        frame = unpack(buf, has_code=has_code)
+        if not self.cache.has_name(hdr.name):
+            if not has_code:
+                raise ProtocolError(
+                    f"{self.name}: truncated frame for unregistered ifunc "
+                    f"{hdr.name!r} (stale sender cache — was this PE restarted?)"
+                )
+            return self.install(frame), frame
+        exe = self.cache.lookup(hdr.name)
+        assert exe is not None
+        if exe.digest != hdr.digest.hex():
+            if has_code:
+                return self.install(frame), frame
+            hit = self.cache.lookup_digest(hdr.digest.hex())
+            if hit is None:
+                raise ProtocolError(
+                    f"{self.name}: truncated frame for {hdr.name!r} with "
+                    f"unknown code digest (stale sender cache)"
+                )
+            exe = hit
+        return exe, frame
+
+    def validate_publish_code(self, frame: Frame, hdr) -> None:
+        """Poisoned-code gate: a code-carrying publish whose code section
+        does not hash to the header digest is refused loudly (and the
+        caller must not re-publish it down the tree)."""
+        if hashlib.sha256(frame.code).digest() != frame.digest:
+            self.stats.publish_refused_digest += 1
+            raise ProtocolError(
+                f"{self.name}: publish of {hdr.name!r} carries code that does "
+                f"not match its digest (poisoned code refused, not re-published)"
+            )
+
+    def resolve_publish_exe(self, hdr) -> CachedExecutable:
+        """Resolve a digest-only (truncated) publish: the code must already
+        be digest-cached here, or the sender's cache belief was stale."""
+        exe = self.cache.lookup(hdr.name)
+        if exe is None or exe.digest != hdr.digest.hex():
+            hit = self.cache.lookup_digest(hdr.digest.hex())
+            if hit is None:
+                raise ProtocolError(
+                    f"{self.name}: digest-only publish for unknown code "
+                    f"{hdr.name!r} (stale sender cache — was this PE "
+                    f"restarted?)"
+                )
+            exe = CachedExecutable(
+                name=hdr.name,
+                digest=hit.digest,
+                fn=hit.fn,
+                in_avals=hit.in_avals,
+                deps=hit.deps,
+                kind=int(hdr.kind),
+                extras=dict(hit.extras),
+            )
+            self.cache.install(exe, jit_ms=0.0)
+            self.stats.ifunc_installs += 1
+        return exe
+
+    # --- batched executables ----------------------------------------------
+    @staticmethod
+    def bucket(n: int) -> int:
+        """Power-of-two padding bucket: bounds batched recompiles to log2."""
+        return 1 << max(0, n - 1).bit_length()
+
+    def batched_executable(self, exe: CachedExecutable, bucket: int):
+        """The vmapped rendering of an installed ifunc, cached per
+        (digest, bucket) in the target code cache.
+
+        ``jax.vmap`` over a deserialized export blob needs a batching rule
+        for ``call_exported``; where the installed JAX version lacks one,
+        the fallback is ``lax.map`` — sequential semantics inside ONE fused
+        XLA dispatch, which is the quantity being amortized.  update-ABI
+        code folds payloads into the region carry with a masked ``lax.scan``
+        (exact sequential semantics, one dispatch, one region write).
+        """
+        hit = self.cache.lookup_batched(exe.digest, bucket)
+        if hit is not None:
+            return hit
+        exported = exe.extras["exported"]
+        call = exported.call
+        abi = exe.extras.get("abi", "pure")
+        pay_aval = exe.in_avals[0]
+        block_aval = jax.ShapeDtypeStruct((bucket, *pay_aval.shape), pay_aval.dtype)
+        dep_avals = tuple(exe.in_avals[1:])
+        t0 = time.perf_counter()
+        if abi in ("update", "propagate"):
+            # entry(payload, ..region.., ...) -> new_region (update) or
+            # (new_region, actions) (propagate), folded as a scan carry;
+            # padded rows are masked out so the fold is exact — a masked
+            # propagate row contributes neither to the region nor an action
+            # (its row is overwritten with NOPs).
+            valid_aval = jax.ShapeDtypeStruct((bucket,), jnp.bool_)
+            rpos = region_arg_pos(exe)
+
+            def folded(pays, valid, region, *extra):
+                def step(r, pv):
+                    p, v = pv
+                    dep_args = list(extra)
+                    dep_args.insert(rpos, r)
+                    if abi == "propagate":
+                        nr, acts = call(p, *dep_args)
+                        nops = jnp.zeros_like(acts).at[..., 0].set(A_NOP)
+                        return jnp.where(v, nr, r), jnp.where(v, acts, nops)
+                    return jnp.where(v, call(p, *dep_args), r), None
+
+                carry, ys = lax.scan(step, region, (pays, valid))
+                return (carry, ys) if abi == "propagate" else carry
+
+            extra_avals = [a for i, a in enumerate(dep_avals) if i != rpos]
+            compiled = (
+                jax.jit(folded)
+                .lower(block_aval, valid_aval, dep_avals[rpos], *extra_avals)
+                .compile()
+            )
+        else:
+            def vmapped(pays, *deps):
+                return jax.vmap(call, in_axes=(0, *([None] * len(dep_avals))))(
+                    pays, *deps
+                )
+
+            def mapped(pays, *deps):
+                return lax.map(lambda p: call(p, *deps), pays)
+
+            compiled = None
+            for impl in (vmapped, mapped):
+                try:
+                    compiled = jax.jit(impl).lower(block_aval, *dep_avals).compile()
+                    break
+                except NotImplementedError:
+                    continue
+            assert compiled is not None
+        self.stats.jit_ms_total += (time.perf_counter() - t0) * 1e3
+        self.cache.install_batched(exe.digest, bucket, compiled)
+        return compiled

@@ -1,0 +1,174 @@
+"""Completion queues: client-side tracking for overlapped X-RDMA ops.
+
+The paper's ifuncs complete by writing into requester memory the requester
+polls (ReturnResult + a counter).  This layer generalizes that to *many
+overlapped operations* with epoch-tagged slot recycling; see
+:class:`CompletionQueue` for the full protocol.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Any
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - annotations only
+    from .pe import PE
+
+
+class CompletionQueue:
+    """Client-side completion queue for in-flight X-RDMA submissions.
+
+    The paper's ifuncs complete by writing into requester memory the
+    requester polls (ReturnResult + a counter).  This layer generalizes
+    that to *many overlapped operations*: a results region laid out as
+    ``(max_slots, 2 + width)`` int32 rows — ``row[0]`` is the slot's
+    arrived-position bitmask (popcount = distinct results arrived, so a
+    re-delivered partial RETURN ORs in bits it already set and can never
+    complete a slot early), ``row[1]`` its generation tag (epoch),
+    ``row[2:]`` its data block — plus a free-list of slots and a future
+    per in-flight submission.  RETURN ifuncs
+    (e.g. :func:`repro.core.xrdma.make_gather_return`) scatter into a
+    slot's block and bump its counter; because each RETURN names its slot,
+    completions may arrive *out of order* and interleaved across many
+    in-flight gathers, and retire through the batched update-ABI fold in
+    one XLA dispatch per poll.  Each allocation bumps the slot's epoch and
+    stamps it into every frame of that submission, so a late or
+    re-delivered RETURN for a *retired* gather mismatches the recycled
+    slot's generation and is dropped by the RETURN code — at-least-once
+    delivery cannot corrupt a successor request.  Completion is
+    poll-driven: nothing blocks, :meth:`GatherFuture.done` just reads the
+    counter the next poll wrote.
+
+    ``shape`` is the logical shape of one slot's data block (e.g.
+    ``(n_keys, dim)`` for a gather); ``dtype`` its logical element type —
+    the wire/region representation is always int32 (bit-cast, never
+    converted, so float rows survive bit-identically).
+
+    The results region doubles as the zero-copy data plane's registered
+    slab: under ``DataPlaneConfig.zero_copy`` the remote PE WRITEs partial
+    rows straight into the slot's data words and the fabric ORs the
+    arrived-position bits into ``row[0]`` as the doorbell, guarded by the
+    generation word ``row[1]`` — so ``done()``/``result()`` poll the same
+    memory whether results arrived framed, one-sided, or mixed.
+
+    Slot exhaustion is an *admission* signal, not an error:
+    :meth:`try_alloc` returns ``None`` when no slot is free (the
+    would-block contract :meth:`repro.core.pe.pe.PE.submit` exposes), so a
+    saturated queue backpressures new submissions without disturbing the
+    in-flight ones.  :meth:`_alloc` keeps the raising contract for callers
+    that treat exhaustion as a bug.
+    """
+
+    def __init__(
+        self,
+        pe: "PE",
+        shape: tuple[int, ...],
+        dtype=np.int32,
+        max_slots: int = 64,
+        region: str = "cq_results",
+    ) -> None:
+        self.pe = pe
+        self.shape = tuple(shape)
+        self.dtype = np.dtype(dtype)
+        assert self.dtype.itemsize == 4, "slot blocks are int32-word addressed"
+        self.width = int(np.prod(self.shape))
+        self.max_slots = max_slots
+        self.region = region
+        pe.register_region(region, np.zeros((max_slots, 2 + self.width), np.int32))
+        self._free: deque[int] = deque(range(max_slots))
+        self._inflight: dict[int, "GatherFuture"] = {}
+
+    # -- slot lifecycle ----------------------------------------------------
+    def try_alloc(self) -> tuple[int, int] | None:
+        """Take a free slot and advance its generation; -> (slot, epoch),
+        or ``None`` when every slot is in flight (would-block)."""
+        if not self._free:
+            return None
+        slot = self._free.popleft()
+        arr = self.pe.region(self.region)
+        epoch = int(arr[slot, 1]) + 1
+        arr[slot, 0] = 0
+        arr[slot, 1] = epoch
+        arr[slot, 2:] = 0
+        # re-register so the device-resident copy the RETURN fold reads is
+        # refreshed with the new generation tag
+        self.pe.register_region(self.region, arr)
+        return slot, epoch
+
+    def _alloc(self) -> tuple[int, int]:
+        """Raising variant of :meth:`try_alloc` (legacy contract)."""
+        got = self.try_alloc()
+        if got is None:
+            raise RuntimeError(
+                f"completion queue full ({self.max_slots} slots in flight); "
+                "poll and retire futures before submitting more"
+            )
+        return got
+
+    def _release(self, slot: int) -> None:
+        # count/data cleared on next alloc; the epoch stays, so RETURNs
+        # still in flight for the retired generation mismatch and drop
+        self._inflight.pop(slot, None)
+        self._free.append(slot)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def _count(self, slot: int) -> int:
+        """Distinct results arrived: popcount of the position bitmask."""
+        return bin(int(self.pe.region(self.region)[slot, 0]) & 0xFFFFFFFF).count("1")
+
+    def _data(self, slot: int) -> np.ndarray:
+        raw = self.pe.region(self.region)[slot, 2:]
+        return raw.view(self.dtype).reshape(self.shape)
+
+    def completed(self) -> list["GatherFuture"]:
+        """Every in-flight future whose results have fully arrived."""
+        return [f for f in list(self._inflight.values()) if f.done()]
+
+
+@dataclass
+class GatherFuture:
+    """Poll-driven handle for one completion-queue submission.
+
+    ``done()`` becomes true once ``expected`` result units have been
+    RETURNed into the slot (out-of-order, possibly from several PEs);
+    ``result()`` copies the slot's data block out and recycles the slot.
+    ``cancel()`` abandons an in-flight submission (failed send, lost
+    frame) and recycles the slot — the epoch guard makes that safe even
+    if the abandoned gather's RETURNs later arrive.  ``meta`` is caller
+    scratch (e.g. the original un-padded key batch).
+    """
+
+    queue: CompletionQueue
+    slot: int
+    expected: int
+    meta: Any = None
+    _released: bool = False
+
+    def done(self) -> bool:
+        return not self._released and self.queue._count(self.slot) >= self.expected
+
+    def result(self, release: bool = True) -> np.ndarray:
+        if self._released:
+            raise RuntimeError("future already consumed")
+        if not self.done():
+            raise RuntimeError(
+                f"slot {self.slot} incomplete: "
+                f"{self.queue._count(self.slot)}/{self.expected} results arrived"
+            )
+        out = self.queue._data(self.slot).copy()
+        if release:
+            self._released = True
+            self.queue._release(self.slot)
+        return out
+
+    def cancel(self) -> None:
+        """Abandon this submission and recycle its slot (idempotent)."""
+        if not self._released:
+            self._released = True
+            self.queue._release(self.slot)

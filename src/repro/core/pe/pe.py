@@ -1,0 +1,495 @@
+"""The PE facade: one processing element, wired from the four runtime layers.
+
+``PE`` composes (and owns the state shared by) the layered runtime:
+
+* :class:`repro.core.pe.wire.WireLayer` — frame egress, batching queues,
+  coalesced flush, rendezvous staging, per-peer credit windows.
+* :class:`repro.core.pe.codecache.CodeCacheLayer` — install arriving code,
+  digest validation, bucketed batched executables.
+* :class:`repro.core.pe.exec.ExecLayer` — invoke, the masked-scan update
+  ABI, action application.
+* :class:`repro.core.pe.progress.ProgressEngine` — the poll loop: priority
+  lanes, per-poll budget, credit return.
+
+The facade itself keeps the *policy* the layers are parameterized by —
+source registry, dataplane protocol selection, propagation topology,
+capability/region linking — plus the source-side API (``send_ifunc``,
+``publish_ifunc``, ``submit``).  Everything here is re-exported through
+:mod:`repro.core.ifunc`, whose import surface is guaranteed stable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+from ..bitcode import platform_of
+from ..cache import CachedExecutable, SenderCache, TargetCodeCache
+from ..dataplane import DataPlaneConfig
+from ..frame import Frame, FrameFlags, FrameKind, HopHeader, ProtocolError, pack_hop
+from ..propagate import PropagationConfig, tree_children
+from ..transport import EndpointDead, Fabric
+from .codecache import CodeCacheLayer
+from .cq import CompletionQueue, GatherFuture
+from .exec import ExecLayer
+from .progress import ProgressEngine
+from .source import IFunc, Toolchain
+from .wire import WireLayer
+
+
+@dataclass
+class PEStats:
+    msgs: int = 0
+    ifunc_installs: int = 0
+    invokes: int = 0  # XLA dispatches (a batched dispatch counts once)
+    batched_invokes: int = 0  # dispatches that retired >1 payload
+    invoked_payloads: int = 0  # payloads retired across all dispatches
+    forwards: int = 0
+    returns: int = 0
+    spawns: int = 0
+    sends: int = 0  # frames this PE PUT on the wire (any kind)
+    code_sends: int = 0  # of those, frames that carried code bytes
+    zerocopy_returns: int = 0  # RETURNs that went one-sided (no frame/dispatch)
+    rndv_returns: int = 0  # RETURNs that went descriptor + GET
+    am_handled: int = 0
+    flushes: int = 0
+    # --- credit-based flow control (wire layer) ---
+    credit_stalls: int = 0  # sends deferred because the peer window was full
+    credit_dropped: int = 0  # stalled frames dropped when their peer died
+    # --- recursive propagation (PUBLISH hops) ---
+    publishes: int = 0  # hop frames sent (root fan-out + re-publishes)
+    publish_handled: int = 0  # publishes accepted (installed/invoked) here
+    publish_dupes: int = 0  # re-delivered publishes dropped by the dedup key
+    publish_refused_ttl: int = 0  # arrived with ttl already expired (loud)
+    publish_refused_cycle: int = 0  # own index on the visited path (loud)
+    publish_refused_digest: int = 0  # code bytes != header digest (poisoned)
+    publish_stopped_ttl: int = 0  # had children but no hop budget left
+    publish_send_failures: int = 0  # child endpoint dead at re-publish time
+    jit_ms_total: float = 0.0
+
+    def as_dict(self) -> dict[str, float]:
+        d = self.__dict__.copy()
+        d["jit_ms_total"] = round(self.jit_ms_total, 3)
+        return d
+
+
+class PE:
+    """A processing element: endpoint + layered ifunc runtime + local state.
+
+    ``triple`` models the ISA/uarch (hosts are ``cpu-host`` Xeons, DPUs are
+    ``cpu-bf2`` BlueField Arm cores, A64FX nodes ``cpu-a64fx``); on this
+    container all execute on the CPU backend, but triple *mismatch logic* is
+    real: binary ifuncs require an exact triple, fat-bitcode falls back by
+    platform and re-optimizes locally (Sec. III-C).
+
+    Runtime knobs (all default to the pre-layered behaviour):
+
+    * ``batching`` — coalesced sends + grouped single-dispatch polls.
+    * ``caching_enabled`` — sender-cache code truncation (benchmark switch).
+    * ``credit_window`` — per-peer send window (in payloads); 0 disables
+      flow control.
+    * ``lanes`` — control-before-data drain priority in the progress engine.
+    * ``poll_budget`` — max *payloads* processed per poll (a coalesced
+      frame counts as its packed payload count and is consumed partially
+      when it exceeds the remainder); ``None`` drains all.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        fabric: Fabric,
+        triple: str = "cpu-host",
+        toolchain: Toolchain | None = None,
+        peers: Sequence[str] = (),
+    ) -> None:
+        platform_of(triple)  # validate
+        self.name = name
+        self.triple = triple
+        self.fabric = fabric
+        self.endpoint = fabric.connect(name)
+        self.toolchain = toolchain
+        self.peers: list[str] = list(peers)
+        self.target_cache = TargetCodeCache()
+        self.sender_cache = SenderCache()
+        self.source_registry: dict[str, IFunc] = {}
+        self.am_table: dict[str, Callable[["PE", bytes], None]] = {}
+        self.caps: dict[str, np.ndarray] = {}
+        self.completed: list[np.ndarray] = []
+        self.stats = PEStats()
+        self.dataplane = DataPlaneConfig()  # protocol selection (default: framed)
+        self.propagation = PropagationConfig()  # tree multicast policy
+        self._region_dev: dict[str, tuple[int, jax.Array]] = {}
+        self._pub_seq = 0  # publish ids minted by this PE as a tree root
+        # --- the layers (constructed over the shared state above) ---
+        self.wire = WireLayer(
+            name, fabric, self.endpoint, self.sender_cache, self.stats, self.peers
+        )
+        self.codecache = CodeCacheLayer(name, triple, self.target_cache, self.stats)
+        self.execl = ExecLayer(self, self.codecache, self.stats)
+        self.progress = ProgressEngine(
+            self, self.wire, self.codecache, self.execl, self.stats
+        )
+
+    # --- runtime knobs (delegated to the owning layer) ---------------------
+    @property
+    def batching(self) -> bool:
+        """Batched runtime: coalesced sends + grouped polls (wire layer)."""
+        return self.wire.batching
+
+    @batching.setter
+    def batching(self, enabled: bool) -> None:
+        self.wire.batching = enabled
+
+    @property
+    def caching_enabled(self) -> bool:
+        """Sender-cache truncation on/off (benchmark switch, wire layer)."""
+        return self.wire.caching_enabled
+
+    @caching_enabled.setter
+    def caching_enabled(self, enabled: bool) -> None:
+        self.wire.caching_enabled = enabled
+
+    @property
+    def credit_window(self) -> int:
+        """Per-peer credit window for data frames; 0 = flow control off."""
+        return self.wire.credit_window
+
+    @credit_window.setter
+    def credit_window(self, window: int) -> None:
+        self.wire.credit_window = int(window)
+
+    @property
+    def lanes(self) -> bool:
+        """Control-before-data drain priority (progress engine)."""
+        return self.progress.lanes
+
+    @lanes.setter
+    def lanes(self, enabled: bool) -> None:
+        self.progress.lanes = enabled
+
+    @property
+    def poll_budget(self) -> int | None:
+        """Payloads processed per poll (coalesced frames count as their
+        packed payload count); ``None`` drains everything."""
+        return self.progress.budget
+
+    @poll_budget.setter
+    def poll_budget(self, budget: int | None) -> None:
+        self.progress.budget = budget
+
+    # --- local state ------------------------------------------------------
+    def register_region(self, name: str, arr: np.ndarray) -> None:
+        self.endpoint.register_region(name, arr)
+
+    def region(self, name: str) -> np.ndarray:
+        return self.endpoint.regions[name]
+
+    def region_device(self, name: str) -> jax.Array:
+        """Device-resident view of a region, cached until the region is
+        rewritten (read-mostly shards stay resident, like RDMA-registered
+        memory staying pinned).  Versioning lives on the endpoint so that
+        *remote* one-sided writes (zero-copy RETURNs landing in a slab)
+        also invalidate the device mirror — otherwise a framed fold could
+        read a stale snapshot and overwrite bytes the fabric just wrote."""
+        ver = self.endpoint.region_ver.get(name, 0)
+        hit = self._region_dev.get(name)
+        if hit is not None and hit[0] == ver:
+            return hit[1]
+        dev = jax.device_put(self.endpoint.regions[name])
+        self._region_dev[name] = (ver, dev)
+        return dev
+
+    def write_region(self, name: str, value: np.ndarray) -> None:
+        np.copyto(self.endpoint.regions[name], value)
+        self.endpoint.touch_region(name)
+
+    def register_cap(self, name: str, arr: np.ndarray) -> None:
+        self.caps[name] = np.asarray(arr)
+
+    # --- source side --------------------------------------------------------
+    def register_source(self, ifunc: IFunc) -> IFunc:
+        self.source_registry[ifunc.name] = ifunc
+        return ifunc
+
+    def resolve_source(self, name: str) -> IFunc:
+        got = self.source_registry.get(name)
+        if got is None:
+            if self.toolchain is None:
+                raise ProtocolError(f"{self.name}: no source artifact for {name!r}")
+            got = self.register_source(self.toolchain.lookup(name))
+        return got
+
+    # stable alias: pre-layering callers reached the private spelling
+    _resolve_source = resolve_source
+
+    def send_ifunc(self, dst: str, name: str, payload: np.ndarray | bytes) -> int:
+        """Create and PUT an ifunc message; returns wire bytes sent."""
+        ifunc = self.resolve_source(name)
+        pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
+        frame = ifunc.make_frame(pay, seq=self.wire.next_seq())
+        return self.wire.put_frame(dst, frame)
+
+    def send_am(self, dst: str, name: str, payload: np.ndarray | bytes) -> int:
+        """Active Message baseline: payload-only frame, handler pre-deployed."""
+        pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
+        frame = Frame(
+            kind=FrameKind.ACTIVE_MESSAGE, name=name, payload=pay,
+            seq=self.wire.next_seq(),
+        )
+        return self.wire.put_frame(dst, frame)
+
+    def peer_index(self, name: str) -> int:
+        """This cluster's dense peer index for ``name`` (the index space
+        X-RDMA action vectors use for ``dst``/``requester``)."""
+        return self.peers.index(name)
+
+    # --- recursive propagation: source side ---------------------------------
+    def publish_ifunc(
+        self,
+        name: str,
+        payload: np.ndarray | bytes = b"",
+        *,
+        ttl: int | None = None,
+        config: PropagationConfig | None = None,
+    ) -> list[str]:
+        """Publish an ifunc down this PE's spanning tree (paper Sec. I:
+        code that "recursively propagate[s] itself to other remote
+        machines").
+
+        Sends one PUBLISH hop frame to each of this PE's *tree children*
+        only — O(log n) for the binomial default — and every child that
+        installs the code re-publishes it to its own children, so coverage
+        reaches all n peers without the root sending n frames.  An empty
+        ``payload`` is a pure code distribution (install + re-publish, no
+        invoke); a non-empty payload is invoked at every covered PE (the
+        broadcast the multi-hop collectives build on).  Returns the peer
+        names actually sent to.
+        """
+        cfg = config or self.propagation
+        ifunc = self.resolve_source(name)
+        pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
+        me = self.peer_index(self.name)
+        self._pub_seq += 1
+        hop = HopHeader(
+            ttl=ttl if ttl is not None else cfg.ttl,
+            root=me,
+            pub_id=self._pub_seq,
+            path=(me,),
+            k=cfg.k_code,
+        )
+        return self.publish_to_children(
+            hop, ifunc.kind, name, pay, ifunc.code_bytes, ifunc.deps, ifunc.digest
+        )
+
+    def forget_publisher(self, root: int) -> None:
+        """Drop publish-dedup state for one root peer index (see
+        :meth:`repro.core.pe.progress.ProgressEngine.forget_publisher`)."""
+        self.progress.forget_publisher(root)
+
+    def publish_to(
+        self,
+        dst: str,
+        name: str,
+        payload: np.ndarray | bytes = b"",
+        *,
+        ttl: int = 1,
+    ) -> None:
+        """Publish directly to one named peer (no tree fan-out at this end;
+        the receiver still re-publishes if ``ttl`` allows).  This is the
+        re-parenting primitive: when a mid-tree PE dies, the root re-covers
+        the orphaned subtree by publishing straight to its survivors."""
+        ifunc = self.resolve_source(name)
+        # a direct publish exists because the normal delivery is in doubt —
+        # drop our cache belief so the code travels again (a dropped hop
+        # upstream may have warmed this entry without the bytes ever landing)
+        self.sender_cache.forget(dst, ifunc.digest.hex())
+        pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
+        me = self.peer_index(self.name)
+        self._pub_seq += 1
+        hop = HopHeader(
+            ttl=ttl, root=me, pub_id=self._pub_seq, path=(me,),
+            k=self.propagation.k_code,
+        )
+        self.send_publish(
+            dst, hop, ifunc.kind, name, pay, ifunc.code_bytes, ifunc.deps,
+            ifunc.digest,
+        )
+
+    def publish_to_children(
+        self,
+        hop: HopHeader,
+        kind: FrameKind,
+        name: str,
+        inner: bytes,
+        code: bytes,
+        deps: tuple[str, ...],
+        digest: bytes,
+    ) -> list[str]:
+        """Send one hop frame per tree child; a dead child loses only its
+        own subtree's frame (counted), the rest of the fan-out proceeds."""
+        me = self.peer_index(self.name)
+        sent: list[str] = []
+        for child in tree_children(hop.k, hop.root, me, len(self.peers)):
+            dst = self.peers[child]
+            try:
+                self.send_publish(dst, hop, kind, name, inner, code, deps, digest)
+                sent.append(dst)
+            except EndpointDead:
+                self.stats.publish_send_failures += 1
+                # the PUT never landed: roll back the cache entry the send
+                # just added, or a later re-publish would wrongly truncate
+                self.sender_cache.forget(dst, digest.hex())
+        return sent
+
+    def send_publish(
+        self,
+        dst: str,
+        hop: HopHeader,
+        kind: FrameKind,
+        name: str,
+        inner: bytes,
+        code: bytes,
+        deps: tuple[str, ...],
+        digest: bytes,
+    ) -> None:
+        frame = Frame(
+            kind=kind,
+            name=name,
+            payload=pack_hop(hop) + inner,
+            code=code,
+            deps=deps,
+            digest=digest,
+            seq=self.wire.next_seq(),
+            flags=FrameFlags.HOP,
+        )
+        self.stats.publishes += 1
+        # publishes bypass the batching send queue even when batching is on:
+        # hop frames never coalesce (per-edge path headers), and a dead
+        # child must surface EndpointDead HERE — synchronously — so the
+        # fan-out's per-child containment and sender-cache rollback apply
+        # identically on both runtimes (a queued send would defer the error
+        # to flush() and skip both).
+        self.wire.put_now(dst, frame)
+
+    # --- completion-tracked submissions -------------------------------------
+    def submit(
+        self,
+        dst: str,
+        name: str,
+        body: np.ndarray,
+        queue: CompletionQueue,
+        expected: int,
+    ) -> GatherFuture | None:
+        """Submit a completion-tracked X-RDMA op and return its future —
+        or ``None`` (would-block) when every completion-queue slot is in
+        flight, so a saturated queue backpressures admission instead of
+        raising mid-batch.
+
+        The completion-queue wire convention: the runtime prepends the
+        routing header ``[requester, slot, epoch]`` to the caller's
+        ``body``, so every shipped op under this protocol sees
+        ``payload[0]`` = the requester's peer index, ``payload[1]`` = the
+        slot its RETURNs must target, and ``payload[2]`` = the slot's
+        generation tag (RETURN code drops stale generations, making slot
+        recycling safe under at-least-once delivery).  ``expected`` is how
+        many result units (e.g. resolved rows) must arrive — possibly via
+        several out-of-order RETURNs from different PEs — before the
+        future reads done.
+        """
+        alloc = queue.try_alloc()
+        if alloc is None:
+            return None
+        slot, epoch = alloc
+        hdr = np.array([self.peer_index(self.name), slot, epoch], np.int32)
+        payload = np.concatenate([hdr, np.asarray(body, np.int32)])
+        fut = GatherFuture(queue=queue, slot=slot, expected=int(expected))
+        queue._inflight[slot] = fut
+        try:
+            self.send_ifunc(dst, name, payload)
+        except Exception:
+            fut.cancel()  # a failed send must not leak the slot
+            raise
+        return fut
+
+    # --- progress ----------------------------------------------------------
+    def poll(self, max_msgs: int | None = None) -> int:
+        """Drive the progress engine one step (see
+        :meth:`repro.core.pe.progress.ProgressEngine.poll`)."""
+        return self.progress.poll(max_msgs)
+
+    def flush(self) -> int:
+        """Emit every queued frame and one-sided write burst (see
+        :meth:`repro.core.pe.wire.WireLayer.flush`)."""
+        return self.wire.flush()
+
+    # --- action sinks (called by the exec layer) ----------------------------
+    def forward_ifunc(self, dst: str, exe: CachedExecutable, pay: np.ndarray) -> None:
+        """FORWARD: re-inject *this same ifunc*, code and all, to ``dst``."""
+        frame = Frame(
+            kind=FrameKind(exe.kind),
+            name=exe.name,
+            payload=pay.tobytes(),
+            code=exe.extras["code"],
+            deps=exe.deps,
+            digest=bytes.fromhex(exe.digest),
+            seq=self.wire.next_seq(),
+        )
+        self.wire.put_frame(dst, frame)
+
+    def return_payload(self, dst: str, target: str, pay: np.ndarray) -> None:
+        """Ship one RETURN payload under the data plane's protocol selection.
+
+        ``framed`` re-injects the RETURN ifunc (PR 1 path, coalescable);
+        ``zerocopy`` writes the payload one-sidedly into the requester's
+        registered slab per the ifunc's :class:`SlabLayout` and bumps the
+        doorbell — no frame, no requester-side dispatch; ``rendezvous``
+        stages the payload locally and frames only a 16-byte descriptor
+        the requester GETs against.
+        """
+        ifn = self.resolve_source(target)
+        proto = self.dataplane.select(
+            int(pay.nbytes),
+            slab=ifn.slab is not None,
+            code_cached=self.caching_enabled
+            and self.sender_cache.has(dst, ifn.digest.hex()),
+        )
+        if proto == "zerocopy":
+            self.stats.zerocopy_returns += 1
+            writes = ifn.slab.plan(np.ascontiguousarray(pay, np.int32))
+            self.wire.put_region(dst, writes)
+        elif proto == "rendezvous":
+            self.stats.rndv_returns += 1
+            self.wire.rndv_send(dst, ifn, pay)
+        else:
+            self.send_ifunc(dst, target, pay)
+
+    def publish_self(self, dst: str, exe: CachedExecutable, pay: np.ndarray) -> None:
+        """A_PUBLISH: shipped code re-publishing *itself* — ``pay[0]`` is
+        the hop budget it grants, the rest travels as the published
+        payload; the paper's "recursively propagate itself" emitted by the
+        code, not the runtime."""
+        me = self.peer_index(self.name)
+        self._pub_seq += 1
+        hop = HopHeader(
+            ttl=int(pay[0]),
+            root=me,
+            pub_id=self._pub_seq,
+            path=(me,),
+            k=self.propagation.k_code,
+        )
+        try:
+            self.send_publish(
+                dst,
+                hop,
+                FrameKind(exe.kind),
+                exe.name,
+                np.ascontiguousarray(pay[1:]).tobytes(),
+                exe.extras.get("code", b""),
+                exe.deps,
+                bytes.fromhex(exe.digest),
+            )
+        except EndpointDead:
+            self.stats.publish_send_failures += 1

@@ -1,0 +1,436 @@
+"""Progress engine: the poll loop that drives a PE forward.
+
+This is the paper's 'UCX ifunc polling function' grown into an explicit
+runtime layer (HAM keeps its messaging progress separate from execution
+for the same reason): one place that ingests arrived wire buffers, decides
+*what to work on next*, routes frames to the code-cache / execution
+layers, and returns flow-control credits to senders as receive buffers
+retire.
+
+Two scheduling features beyond the flat FIFO drain:
+
+* **Priority lanes** (``lanes=True``): arrivals are classified at ingest —
+  PUBLISH hop frames and rendezvous descriptors into the *control* lane,
+  everything else (ifunc payloads, bulk RETURN data, AMs) into the *data*
+  lane — and the control lane drains first.  Under overload a code
+  distribution no longer queues behind thousands of bulk RETURNs
+  (benchmarks/overload.py measures exactly this inversion).
+* **Poll budget** (``budget=N``): at most N *payloads* are processed per
+  poll — a coalesced frame counts as its packed payload count, and a frame
+  bigger than the remaining budget is consumed partially (the engine
+  remembers its offset), so one giant burst cannot blow through the bound.
+  The remainder stays queued in the engine's lanes (receive buffers still
+  held, so their credits stay consumed — which is what makes the
+  sender-side window in :mod:`repro.core.pe.wire` an honest backpressure
+  signal).  ``budget=None`` (default) drains everything, which is
+  bit-compatible with the pre-layered runtime.
+
+Credits: every framed PUT consumed one receive credit at this endpoint;
+the engine returns it to the sender the moment the frame is taken for
+processing.  The engine also pumps this PE's own credit-stalled sends at
+the end of every poll, so a reopened window is used without waiting for
+an unrelated flush.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import TYPE_CHECKING
+
+from ..cache import CachedExecutable
+from ..frame import (
+    CorruptFrame,
+    FrameFlags,
+    FrameKind,
+    ProtocolError,
+    peek_header,
+    split_hop,
+    split_payloads,
+    unpack,
+    unpack_rndv,
+    uvarint_decode,
+)
+from ..propagate import tree_children
+from ..transport import EndpointDead
+from .codecache import ISAMismatch
+from .wire import is_control
+
+if TYPE_CHECKING:  # pragma: no cover - annotations only
+    from .codecache import CodeCacheLayer
+    from .exec import ExecLayer
+    from .wire import WireLayer
+
+
+class ProgressEngine:
+    """Poll-driven scheduler for one PE: lanes, budget, credits, routing."""
+
+    def __init__(self, rt, wire: "WireLayer", codecache: "CodeCacheLayer",
+                 execl: "ExecLayer", stats) -> None:
+        self.rt = rt
+        self.wire = wire
+        self.codecache = codecache
+        self.execl = execl
+        self.stats = stats  # the PE's PEStats (shared across layers)
+        self.lanes = False  # control-before-data drain priority
+        self.budget: int | None = None  # payloads processed per poll (None = all)
+        # lane entries are mutable [src, buf, consumed_payloads]: a frame
+        # bigger than the remaining budget is consumed in pieces, and the
+        # offset of the first unprocessed payload rides with the buffer
+        self._control: deque[list] = deque()
+        self._data: deque[list] = deque()
+        self._seen_pubs: set[tuple[bytes, int, int]] = set()  # publish dedup
+
+    # --- lane bookkeeping --------------------------------------------------
+    def _ingest(self) -> int:
+        """Move arrived wire buffers from the endpoint inbox into the
+        engine's lanes, classifying control vs data at ingest (a header
+        peek, no full parse).  With lanes disabled everything lands in the
+        data lane in arrival order — the flat FIFO of the old runtime."""
+        n = 0
+        for buf in self.rt.endpoint.drain():
+            src = getattr(buf, "src", "")
+            raw = bytes(buf)
+            lane = self._control if self.lanes and self._is_control(raw) else self._data
+            lane.append([src, raw, 0])
+            n += 1
+        return n
+
+    def _is_control(self, raw: bytes) -> bool:
+        """Control-lane admission: hop frames and rendezvous descriptors —
+        but only when they are *self-contained*.  A digest-only hop whose
+        code this PE does not hold yet, or a descriptor for an uninstalled
+        ifunc, depends on an earlier code-carrying data frame; promoting it
+        past that frame would turn the sender-cache truncation protocol's
+        in-order assumption into a spurious stale-cache refusal, so those
+        stay in FIFO order with the data lane."""
+        try:
+            hdr = peek_header(raw)
+        except CorruptFrame:
+            return False  # the error surfaces when the frame is processed
+        if hdr is None or not is_control(int(hdr.kind), int(hdr.flags)):
+            return False
+        if hdr.flags & FrameFlags.HOP:
+            has_code = len(raw) >= hdr.full_total and hdr.code_len > 0
+            return has_code or (
+                self.codecache.cache.lookup_digest(hdr.digest.hex()) is not None
+            )
+        # rendezvous descriptors never carry code: the exe must be resident
+        return self.codecache.cache.has_name(hdr.name)
+
+    def pending(self) -> int:
+        """Frames held in the engine's lanes (ingested, not yet processed)."""
+        return len(self._control) + len(self._data)
+
+    def forget_publisher(self, root: int) -> None:
+        """Drop publish-dedup state for one root peer index.  A restarted
+        peer re-mints pub_ids from zero; without this, its fresh publishes
+        of already-seen code collide with the stale (digest, root, pub_id)
+        keys recorded for its previous life and are silently dropped as
+        duplicates — exactly-once would quietly become at-most-zero."""
+        self._seen_pubs = {k for k in self._seen_pubs if k[1] != root}
+
+    def _front(self) -> deque | None:
+        """The lane to serve next: control drains before data."""
+        if self._control:
+            return self._control
+        if self._data:
+            return self._data
+        return None
+
+    def _take(self) -> list | None:
+        """Pop the next whole frame to process — control lane first — and
+        return its receive credits to the sender (the buffer is consumed)."""
+        lane = self._front()
+        if lane is None:
+            return None
+        entry = lane.popleft()
+        self.rt.fabric.credit_return(
+            entry[0], self.rt.name, self._payloads_in(entry[1]) - entry[2]
+        )
+        return entry
+
+    @staticmethod
+    def _payloads_in(buf: bytes) -> int:
+        """Payload units one wire buffer carries (1, or a BATCH frame's
+        packed count) — the currency the poll budget is denominated in.
+        Malformed frames count as 1; their error surfaces at processing."""
+        try:
+            hdr = peek_header(buf)
+        except CorruptFrame:
+            return 1
+        if hdr is None or not hdr.flags & FrameFlags.BATCH:
+            return 1
+        try:
+            return max(1, uvarint_decode(buf, hdr.header_len)[0])
+        except (CorruptFrame, IndexError):
+            return 1
+
+    # --- the poll loop -----------------------------------------------------
+    def poll(self, max_msgs: int | None = None) -> int:
+        """Drain the endpoint buffer, installing and invoking arrivals.
+
+        With :attr:`WireLayer.batching` on, the drained frames are grouped
+        by code digest, each group's payloads are decoded into one
+        ``(B, ...)`` block and retired by a single batched XLA dispatch,
+        and everything the dispatches emitted is flushed as coalesced
+        per-destination PUTs.  Returns a progress count: frames processed
+        plus credit-stalled sends pumped.
+        """
+        budget = max_msgs if max_msgs is not None else self.budget
+        if self.wire.batching:
+            processed = self._poll_batched(budget)
+        else:
+            processed = self._poll_single(budget)
+        return processed + self.wire.pump()
+
+    def _poll_single(self, budget: int | None) -> int:
+        """Per-message mode: handle frames one at a time, FIFO within each
+        lane.  The first bad frame raises immediately (the old runtime's
+        blast radius); the rest stays queued for the next poll."""
+        self._ingest()
+        n = used = 0
+        while budget is None or used < budget:
+            # re-ingest when the lanes run dry: a handler's sends may
+            # deliver to this very endpoint (self-directed frames), and
+            # the old drain loop picked those up within the same poll
+            if not self.pending() and self._ingest() == 0:
+                break
+            entry = self._take()
+            if entry is None:
+                break
+            # entry[2] is nonzero when a previous *batched* poll consumed
+            # the frame partially and the mode switched: resume from the
+            # recorded offset or the retired payloads would invoke twice
+            used += self._payloads_in(entry[1]) - entry[2]
+            self.execute_frame(entry[1], start=entry[2])
+            n += 1
+            self.stats.msgs += 1
+        return n
+
+    def _poll_batched(self, budget: int | None) -> int:
+        """Batched mode: take up to ``budget`` payloads (control lane
+        first, big coalesced frames consumed partially), handle control/AM
+        inline, group data payloads by code digest, and retire each group
+        in ONE batched XLA dispatch; then flush the coalesced output burst
+        even if a frame was bad."""
+        self._ingest()
+        taken: list[tuple[bytes, int, int | None]] = []  # (buf, start, stop)
+        used = 0
+        while budget is None or used < budget:
+            lane = self._front()
+            if lane is None:
+                break
+            src, raw, start = lane[0]
+            n_pay = self._payloads_in(raw)
+            remaining = n_pay - start
+            take = remaining if budget is None else min(remaining, budget - used)
+            if take <= 0:
+                break
+            used += take
+            # credits are payload-denominated: return exactly what this
+            # poll consumed, whether or not the frame is finished
+            self.rt.fabric.credit_return(src, self.rt.name, take)
+            if start + take >= n_pay:
+                taken.append((raw, start, None))
+                lane.popleft()
+                self.stats.msgs += 1
+            else:
+                # partial consumption: remember the offset, keep the buffer
+                # at the lane head for the next poll
+                taken.append((raw, start, start + take))
+                lane[0][2] = start + take
+        if taken:
+            try:
+                self._execute_batch(taken)
+            finally:
+                self.wire.flush()  # emitted actions travel even if a frame was bad
+        return len(taken)
+
+    # --- frame routing -----------------------------------------------------
+    def execute_frame(self, buf: bytes, start: int = 0) -> None:
+        """Route one wire buffer: publish hop, AM, rendezvous descriptor,
+        or plain ifunc frame (install if needed, invoke per payload).
+        ``start`` skips payloads a previous (budgeted, batched) poll
+        already retired from this same frame."""
+        hdr = peek_header(buf)
+        if hdr is None:
+            raise ProtocolError("short frame")
+        if hdr.flags & FrameFlags.HOP:
+            self._handle_publish(buf, hdr)
+            return
+        if hdr.kind == FrameKind.ACTIVE_MESSAGE:
+            self._handle_am(unpack(buf, has_code=False), start)
+            return
+        if hdr.kind == FrameKind.RNDV:
+            frame = unpack(buf, has_code=False)
+            for desc in split_payloads(frame)[start:]:
+                exe, data = self._rndv_pull(frame.name, desc)
+                self.execl.invoke(exe, data)
+            return
+        # ifunc path: does this wire carry code? (sender truncates iff it
+        # believes we have it; len tells the truth, the registry must agree)
+        exe, frame = self.codecache.resolve_exe(buf, hdr)
+        for pay in split_payloads(frame)[start:]:
+            self.execl.invoke(exe, pay)
+
+    def _execute_batch(self, bufs: list[tuple[bytes, int, int | None]]) -> None:
+        """Group frames by code digest and invoke each group once.
+
+        Each entry is ``(buf, start, stop)``: the payload slice the budget
+        admitted this poll (``(buf, 0, None)`` = the whole frame).  A frame
+        that fails to resolve (stale sender cache after a restart) or a
+        group that fails to invoke (corrupt payload block) must not take
+        the rest of the batch down with it: every healthy frame/group is
+        still processed, then the first error is re-raised — the same
+        blast radius as the per-message path.
+        """
+        groups: dict[bytes, tuple[CachedExecutable, list[bytes]]] = {}
+        errors: list[Exception] = []
+        for buf, start, stop in bufs:
+            try:
+                hdr = peek_header(buf)
+                if hdr is None:
+                    raise ProtocolError("short frame")
+                if hdr.flags & FrameFlags.HOP:
+                    # publishes are install-dominated and rare (one per PE
+                    # per code distribution): handled inline, re-publishes
+                    # ride the post-poll flush as everything else does
+                    self._handle_publish(buf, hdr)
+                    continue
+                if hdr.kind == FrameKind.ACTIVE_MESSAGE:
+                    self._handle_am(unpack(buf, has_code=False), start, stop)
+                    continue
+                if hdr.kind == FrameKind.RNDV:
+                    # pull each staged payload, then fold it into the same
+                    # digest group as any framed payloads of the same ifunc:
+                    # rendezvous and eager arrivals retire in ONE dispatch
+                    frame = unpack(buf, has_code=False)
+                    for desc in split_payloads(frame)[start:stop]:
+                        exe, data = self._rndv_pull(frame.name, desc)
+                        entry = groups.setdefault(bytes.fromhex(exe.digest), (exe, []))
+                        entry[1].append(data)
+                    continue
+                exe, frame = self.codecache.resolve_exe(buf, hdr)
+                entry = groups.setdefault(hdr.digest, (exe, []))
+                entry[1].extend(split_payloads(frame)[start:stop])
+            except (ProtocolError, ValueError, ISAMismatch, EndpointDead) as e:
+                errors.append(e)
+        for exe, pays in groups.values():
+            try:
+                self.execl.invoke_batch(exe, pays)
+            except Exception as e:  # noqa: BLE001 - process remaining groups
+                errors.append(e)
+        if errors:
+            raise errors[0]
+
+    # --- handlers ----------------------------------------------------------
+    def _handle_am(self, frame, start: int = 0, stop: int | None = None) -> None:
+        handler = self.rt.am_table.get(frame.name)
+        if handler is None:
+            raise ProtocolError(f"{self.rt.name}: no AM handler {frame.name!r}")
+        for pay in split_payloads(frame)[start:stop]:
+            self.stats.am_handled += 1
+            handler(self.rt, pay)
+
+    def _rndv_pull(self, name: str, desc: bytes) -> tuple[CachedExecutable, bytes]:
+        """Resolve a rendezvous descriptor: GET the staged payload from the
+        source's staging region.  The executable must already be cached —
+        descriptors cannot carry code (the sender only selects rendezvous
+        for cache-warm peers), so a miss here means a stale sender cache."""
+        src_idx, token, nbytes = unpack_rndv(desc)  # CorruptFrame if malformed
+        exe = self.codecache.cache.lookup(name)
+        if exe is None:
+            raise ProtocolError(
+                f"{self.rt.name}: rendezvous descriptor for unregistered ifunc "
+                f"{name!r} (stale sender cache — was this PE restarted?)"
+            )
+        if not 0 <= src_idx < len(self.rt.peers):
+            raise ProtocolError(
+                f"{self.rt.name}: rendezvous src index {src_idx} out of range"
+            )
+        src = self.rt.peers[src_idx]
+        try:
+            data = self.wire.fetch_rndv(src, token, nbytes)
+        except KeyError:
+            # staging ring evicted the region, or the source restarted with
+            # fresh (empty) registered memory — loud but contained, like the
+            # framed path's stale-sender-cache refusal
+            raise ProtocolError(
+                f"{self.rt.name}: rendezvous staging region for token {token} "
+                f"gone at {src!r} (evicted or source restarted)"
+            ) from None
+        return exe, data
+
+    def _handle_publish(self, buf: bytes, hdr) -> None:
+        """One PUBLISH hop: validate -> install -> invoke -> re-publish.
+
+        The validation ladder runs *before* anything is installed or
+        invoked, in blast-radius order (Kourtis et al.: injected code must
+        be validated at every hop, not only at the origin):
+
+        1. poisoned code — the code section's sha256 must equal the header
+           digest; a mismatch is refused loudly and, crucially, is NOT
+           re-published, so a poisoned frame cannot ride the tree.
+        2. duplicate — (code digest, root, pub_id) already handled here:
+           dropped silently (the fabric is at-least-once; re-delivery is
+           normal, and the drop is what makes a forwarding loop starve).
+        3. ttl expired — a frame arriving with no hop budget left was
+           forwarded by a peer that should have stopped: refused loudly.
+        4. cycle — this PE's own index on the visited path: refused loudly
+           (the path digest was already verified by the hop parser).
+
+        An accepted publish installs the code, invokes the payload (if the
+        publish carries one — a bare publish is pure code distribution),
+        and re-publishes code + payload to its tree children with one hop
+        spent and itself appended to the path.  Warm children receive
+        digest-only frames: the SenderCache truncation applies to hop
+        frames exactly as to point-to-point sends.
+        """
+        has_code = len(buf) >= hdr.full_total and hdr.code_len > 0
+        frame = unpack(buf, has_code=has_code)
+        if frame.flags & FrameFlags.BATCH:
+            raise ProtocolError(f"{self.rt.name}: publish frames never coalesce")
+        hop, inner = split_hop(frame.payload)  # CorruptFrame on tampering
+        me = self.rt.peer_index(self.rt.name)
+        if has_code:
+            self.codecache.validate_publish_code(frame, hdr)
+        key = (hdr.digest, hop.root, hop.pub_id)
+        if key in self._seen_pubs:
+            self.stats.publish_dupes += 1
+            return
+        if hop.ttl <= 0:
+            self.stats.publish_refused_ttl += 1
+            raise ProtocolError(
+                f"{self.rt.name}: publish of {hdr.name!r} arrived with expired "
+                f"ttl (path {hop.path})"
+            )
+        if me in hop.path:
+            self.stats.publish_refused_cycle += 1
+            raise ProtocolError(
+                f"{self.rt.name}: publish of {hdr.name!r} would cycle — own "
+                f"index {me} already on path {hop.path}"
+            )
+        if has_code:
+            exe = self.codecache.install(frame)
+        else:
+            exe = self.codecache.resolve_publish_exe(hdr)
+        self._seen_pubs.add(key)
+        self.stats.publish_handled += 1
+        if inner:
+            self.execl.invoke(exe, inner)
+        children = tree_children(hop.k, hop.root, me, len(self.rt.peers))
+        if not children:
+            return
+        if hop.ttl < 2:
+            self.stats.publish_stopped_ttl += 1
+            return
+        code = frame.code if has_code else exe.extras.get("code", b"")
+        self.rt.publish_to_children(
+            hop.child_hop(me),
+            FrameKind(exe.kind),
+            exe.name,
+            inner,
+            code,
+            exe.deps,
+            bytes.fromhex(exe.digest),
+        )

@@ -1,0 +1,246 @@
+"""Wire layer: frame egress — batching queues, coalesced flush, rendezvous
+staging, and per-peer credit-based flow control.
+
+This layer owns everything between "the runtime decided to send a frame"
+and "bytes hit the fabric": sequence numbering, the per-destination send
+queues the batched runtime coalesces at :meth:`WireLayer.flush`, the
+sender-cache truncation decision (code travels once per peer), the
+rendezvous staging ring, and the credit window.
+
+Credit-based flow control (the progress-engine half lives in
+:mod:`repro.core.pe.progress`): each framed PUT consumes one receive
+credit at the destination; when ``credit_window`` is set and the window is
+exhausted, further *data* frames queue locally in FIFO order instead of
+flooding a slow peer's receive buffer.  Credits return when the receiver's
+progress engine processes the frames, and the sender's next
+:meth:`pump` (called from its own poll/flush) drains the queue.  Control
+frames — PUBLISH hops and rendezvous descriptors — never consume credits:
+they are small, latency-critical, and starving them behind bulk data is
+exactly the priority inversion the lane/credit design removes.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from ..frame import Frame, FrameFlags, FrameKind, coalesce, pack_rndv, rndv_region
+from ..transport import EndpointDead, Fabric, RegionWrite
+
+if TYPE_CHECKING:  # pragma: no cover - annotations only
+    from ..cache import SenderCache
+    from ..transport import Endpoint
+    from .source import IFunc
+
+# rendezvous staging ring depth: outstanding staged RETURN payloads per PE
+# before the oldest registration is reclaimed (bounds pinned memory the way
+# a real transport bounds its rendezvous buffer pool)
+RNDV_STAGING_DEPTH = 1024
+
+
+def is_control(kind: int, flags: int) -> bool:
+    """The lane classification both ends of the wire agree on: PUBLISH hop
+    frames and rendezvous descriptors are control traffic (small, latency-
+    critical); everything else — ifunc payloads, RETURN data, AMs — is
+    bulk data."""
+    return bool(flags & FrameFlags.HOP) or kind == FrameKind.RNDV
+
+
+class WireLayer:
+    """Frame egress for one PE: queues, credits, coalescing, staging."""
+
+    def __init__(
+        self,
+        name: str,
+        fabric: Fabric,
+        endpoint: "Endpoint",
+        sender_cache: "SenderCache",
+        stats,
+        peers: list[str],
+    ) -> None:
+        self.name = name
+        self.fabric = fabric
+        self.endpoint = endpoint
+        self.sender_cache = sender_cache
+        self.stats = stats  # the PE's PEStats (shared across layers)
+        self.peers = peers  # shared list reference (facade owns it)
+        self.batching = False  # batched runtime: queue sends for flush()
+        self.caching_enabled = True  # benchmark switch: uncached mode
+        self.credit_window = 0  # 0 = flow control off (unlimited window)
+        self._seq = 0
+        self._sendq: dict[str, list[Frame]] = {}  # per-destination pending frames
+        self._regionq: dict[str, list[RegionWrite]] = {}  # pending one-sided writes
+        self._creditq: dict[str, deque[Frame]] = {}  # frames awaiting credits
+        self._rndv_tokens: deque[str] = deque()  # staged rendezvous regions (ring)
+        self._rndv_seq = 0
+
+    # --- sequencing -------------------------------------------------------
+    def next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    # --- egress -----------------------------------------------------------
+    def put_frame(self, dst: str, frame: Frame) -> int:
+        """PUT a frame now, or queue it for the next :meth:`flush`.
+
+        Returns wire bytes sent, or 0 when the frame was queued (the wire
+        size of a queued frame is only known after coalescing).
+        """
+        if self.batching:
+            self._sendq.setdefault(dst, []).append(frame)
+            return 0
+        return self.put_now(dst, frame)
+
+    def put_now(self, dst: str, frame: Frame) -> int:
+        """PUT one frame, honouring the credit window.
+
+        Control frames (hop headers, rendezvous descriptors) always
+        transmit; a data frame beyond the window — or behind earlier
+        stalled frames, so per-destination FIFO order holds — queues
+        locally and travels on a later :meth:`pump`.  Returns wire bytes
+        sent (0 when credit-queued).
+        """
+        if not is_control(int(frame.kind), int(frame.flags)) and self.credit_window:
+            stalled = self._creditq.get(dst)
+            if stalled or not self._credit_ok(dst):
+                self._creditq.setdefault(dst, deque()).append(frame)
+                self.stats.credit_stalls += 1
+                self.fabric.stats.credit_stalls += 1
+                return 0
+        return self._transmit(dst, frame)
+
+    def _credit_ok(self, dst: str) -> bool:
+        return self.fabric.credit_outstanding(self.name, dst) < self.credit_window
+
+    def _transmit(self, dst: str, frame: Frame) -> int:
+        if frame.kind in (FrameKind.ACTIVE_MESSAGE, FrameKind.RNDV):
+            cached = True  # AM / rendezvous descriptors never carry code
+        else:
+            cached = self.caching_enabled and self.sender_cache.check_and_add(
+                dst, frame.digest.hex(), len(frame.code)
+            )
+        wire = frame.wire_bytes(cached=cached)
+        self.stats.sends += 1
+        if not cached and frame.code:
+            self.stats.code_sends += 1
+        self.fabric.put(
+            self.name,
+            dst,
+            wire,
+            n_payloads=frame.n_payloads,
+            kinds=frame.kind_breakdown(cached),
+            hop=bool(frame.flags & FrameFlags.HOP),
+        )
+        return len(wire)
+
+    def pump(self) -> int:
+        """Transmit credit-stalled frames whose window reopened; returns
+        the number sent.  A destination that died while frames were queued
+        loses exactly its own queue (the fabric's loss model — those
+        frames were in flight), counted in ``stats.credit_dropped``."""
+        sent = 0
+        for dst in list(self._creditq):
+            q = self._creditq[dst]
+            while q and self._credit_ok(dst):
+                frame = q.popleft()
+                try:
+                    self._transmit(dst, frame)
+                    sent += 1
+                except EndpointDead:
+                    self.stats.credit_dropped += 1 + len(q)
+                    q.clear()
+            if not q:
+                del self._creditq[dst]
+        return sent
+
+    def queued_credit_frames(self, dst: str | None = None) -> int:
+        if dst is not None:
+            return len(self._creditq.get(dst, ()))
+        return sum(len(q) for q in self._creditq.values())
+
+    # --- one-sided writes -------------------------------------------------
+    def put_region(self, dst: str, writes: list[RegionWrite]) -> None:
+        """Issue (or, under batching, queue) a slab-write burst to one peer."""
+        if self.batching:
+            self._regionq.setdefault(dst, []).extend(writes)
+        else:
+            self.fabric.put_region_multi(self.name, dst, writes)
+
+    # --- batched flush ----------------------------------------------------
+    def flush(self) -> int:
+        """Emit every queued frame and one-sided write burst.
+
+        A burst of same-type frames to one peer travels as a single
+        coalesced PUT (one ``alpha_us``, summed bytes); a burst of queued
+        zero-copy slab writes to one peer travels as a single doorbell-
+        batched WQE chain (one ``alpha_us``, one ``o_us`` per extra
+        segment).  A failing destination (e.g. a killed endpoint) loses
+        only its own traffic — every other destination's queue is still
+        delivered, then the first error is re-raised.  Returns the number
+        of wire operations issued.
+        """
+        puts = self.pump()
+        queued, self._sendq = self._sendq, {}
+        regionq, self._regionq = self._regionq, {}
+        errors: list[Exception] = []
+        for dst, frames in queued.items():
+            # group by ifunc type AND payload size (AM payloads are caller-
+            # defined and xrdma plen varies, so same-name frames can be
+            # ragged — those travel as separate coalesced PUTs), preserving
+            # first-seen order.  PUBLISH hop frames never coalesce: each
+            # carries its own per-edge path header.
+            groups: dict[tuple[int, str, bytes, int, int], list[Frame]] = {}
+            for f in frames:
+                key = (
+                    int(f.kind), f.name, f.digest, len(f.payload),
+                    int(f.flags) & FrameFlags.HOP,
+                )
+                groups.setdefault(key, []).append(f)
+            for key, members in groups.items():
+                batch = [coalesce(members)] if not key[4] else members
+                for frame in batch:
+                    try:
+                        if self.put_now(dst, frame):
+                            puts += 1
+                    except Exception as e:  # noqa: BLE001 - deliver the rest first
+                        errors.append(e)
+        for dst, writes in regionq.items():
+            try:
+                self.fabric.put_region_multi(self.name, dst, writes)
+                puts += 1
+            except Exception as e:  # noqa: BLE001 - deliver the rest first
+                errors.append(e)
+        if puts:
+            self.stats.flushes += 1
+        if errors:
+            raise errors[0]
+        return puts
+
+    # --- rendezvous staging (sender side) ---------------------------------
+    def rndv_send(self, dst: str, ifn: "IFunc", pay: np.ndarray) -> None:
+        """Rendezvous RETURN: stage the payload in a source-registered
+        region and frame only the 16-byte descriptor; the requester pulls
+        the data with a one-sided GET (cost ``2*alpha + n/beta``, correct
+        when the payload dwarfs ``2*alpha``)."""
+        token = self._rndv_seq
+        self._rndv_seq += 1
+        staging = rndv_region(self.name, token)
+        # explicit copy: `pay` may be a view into a whole batched action
+        # matrix, and registering the view would pin that matrix in the
+        # staging ring long after the dispatch that produced it
+        data = np.array(pay, np.int32)
+        self.endpoint.register_region(staging, data)
+        self._rndv_tokens.append(staging)
+        while len(self._rndv_tokens) > RNDV_STAGING_DEPTH:
+            self.endpoint.unregister_region(self._rndv_tokens.popleft())
+        desc = pack_rndv(self.peers.index(self.name), token, data.nbytes)
+        self.put_frame(
+            dst,
+            Frame(kind=FrameKind.RNDV, name=ifn.name, payload=desc, seq=self.next_seq()),
+        )
+
+    def fetch_rndv(self, src: str, token: int, nbytes: int) -> bytes:
+        """Pull one staged rendezvous payload from ``src`` (receiver side)."""
+        return self.fabric.get(self.name, src, rndv_region(src, token), 0, nbytes)

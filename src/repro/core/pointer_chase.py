@@ -23,7 +23,7 @@ import numpy as np
 from .cluster import Cluster
 from .dataplane import DataPlaneConfig
 from .frame import FrameKind
-from .ifunc import PE
+from .pe import PE
 from .propagate import PropagationConfig
 from .transport import WireReportMixin
 from .xrdma import make_chaser, make_return_result

@@ -21,7 +21,9 @@ This module holds the *shape* of that propagation:
   bottleneck.
 
 Wire-format counterpart: :class:`repro.core.frame.HopHeader` (ttl + path
-digest); runtime counterpart: the PUBLISH path in :mod:`repro.core.ifunc`.
+digest); runtime counterpart: the PUBLISH path in
+:mod:`repro.core.pe.progress` (target side) and the publish fan-out on the
+:mod:`repro.core.pe.pe` facade (source side).
 """
 
 from __future__ import annotations

@@ -110,6 +110,7 @@ class TrafficStats:
     region_guard_drops: int = 0  # guarded writes dropped by a stale generation
     hop_frames: int = 0  # PUBLISH frames (propagation hop header on board)
     hop_bytes: int = 0  # wire bytes those publish frames carried
+    credit_stalls: int = 0  # sends deferred by an exhausted per-peer window
     by_kind: dict[str, int] = field(default_factory=dict)  # see BYTE_KINDS
 
     def reset(self) -> None:
@@ -122,6 +123,7 @@ class TrafficStats:
         self.region_puts = self.region_put_bytes = 0
         self.region_guard_drops = 0
         self.hop_frames = self.hop_bytes = 0
+        self.credit_stalls = 0
         self.by_kind = {}
 
     def add_kinds(self, kinds: dict[str, int] | None) -> None:
@@ -166,6 +168,7 @@ class TrafficStats:
             "region_guard_drops": self.region_guard_drops,
             "hop_frames": self.hop_frames,
             "hop_bytes": self.hop_bytes,
+            "credit_stalls": self.credit_stalls,
             "wire_bytes_by_kind": self.wire_bytes_by_kind,
         }
 
@@ -211,6 +214,20 @@ class RegionWrite:
 
 class EndpointDead(RuntimeError):
     """Raised on operations against a killed endpoint (fault injection)."""
+
+
+class WireBuf(bytearray):
+    """A received wire buffer, tagged with the peer that PUT it.
+
+    Behaves exactly like the ``bytearray`` the inbox always held (tests
+    slice, corrupt, and re-deliver these), but carries ``src`` so the
+    progress engine can return flow-control credits to the right sender
+    when the buffer is finally processed.  Buffers delivered outside
+    :meth:`Fabric.put` (tests re-injecting captured frames) carry an empty
+    ``src`` and simply return no credit.
+    """
+
+    src: str = ""
 
 
 class Endpoint:
@@ -262,9 +279,11 @@ class Endpoint:
         return struct.unpack("<i", self.read_region(region, offset, 4))[0]
 
     # receive side ----------------------------------------------------------
-    def deliver(self, wire: bytes) -> None:
+    def deliver(self, wire: bytes, src: str = "") -> None:
+        buf = WireBuf(wire)
+        buf.src = src
         with self._lock:
-            self.inbox.append(bytearray(wire))
+            self.inbox.append(buf)
 
     def drain(self) -> Iterator[bytearray]:
         while True:
@@ -281,12 +300,45 @@ class Fabric:
         self.wire = WIRE_PROFILES[wire] if isinstance(wire, str) else wire
         self.endpoints: dict[str, Endpoint] = {}
         self.stats = TrafficStats()
+        # framed payloads in flight per (src, dst): bumped on put (by the
+        # frame's packed payload count — credits are payload-denominated so
+        # a coalesced burst is accounted at its true size), released as the
+        # receiver's progress engine processes them.  This is the
+        # receive-buffer occupancy a credit window bounds.
+        self._credit_out: dict[tuple[str, str], int] = {}
         self._lock = threading.Lock()
 
     def connect(self, name: str) -> Endpoint:
         ep = Endpoint(name)
         self.endpoints[name] = ep
+        self._clear_credits(name)
         return ep
+
+    # credit accounting ------------------------------------------------------
+    def credit_outstanding(self, src: str, dst: str) -> int:
+        """Payloads PUT by ``src`` that ``dst`` has not yet processed."""
+        return self._credit_out.get((src, dst), 0)
+
+    def credit_return(self, src: str, dst: str, n: int = 1) -> None:
+        """Release ``n`` receive credits from ``dst`` back to ``src``
+        (called by the receiver's progress engine as frames retire)."""
+        if not src:
+            return
+        with self._lock:
+            key = (src, dst)
+            left = self._credit_out.get(key, 0) - n
+            if left > 0:
+                self._credit_out[key] = left
+            else:
+                self._credit_out.pop(key, None)
+
+    def _clear_credits(self, name: str) -> None:
+        """Drop all credit state involving ``name`` (its frames are gone —
+        a dead inbox drops them, a fresh endpoint starts empty — so a
+        sender's window against it must not stay consumed forever)."""
+        with self._lock:
+            for key in [k for k in self._credit_out if name in k]:
+                self._credit_out.pop(key, None)
 
     def _target(self, dst: str) -> Endpoint:
         ep = self.endpoints[dst]
@@ -331,7 +383,10 @@ class Fabric:
             if hop:
                 self.stats.hop_frames += 1
                 self.stats.hop_bytes += n
-        ep.deliver(wire_bytes)
+            self._credit_out[(src, dst)] = (
+                self._credit_out.get((src, dst), 0) + n_payloads
+            )
+        ep.deliver(wire_bytes, src=src)
         return t
 
     def put_region(
@@ -423,9 +478,11 @@ class Fabric:
         ep = self.endpoints[name]
         ep.alive = False
         ep.inbox.clear()
+        self._clear_credits(name)
 
     def revive(self, name: str) -> Endpoint:
         """Restarted process: fresh endpoint state (all caches/regions gone)."""
         ep = Endpoint(name)
         self.endpoints[name] = ep
+        self._clear_credits(name)
         return ep

@@ -3,7 +3,7 @@
 An X-RDMA operation is an ifunc whose arrival *executes user code next to
 the data*, and whose code may re-inject itself (FORWARD), answer the
 requester (RETURN via ReturnResult), or generate new code (SPAWN).  The
-decision logic lives in the shipped code; see :mod:`repro.core.ifunc` for
+decision logic lives in the shipped code; see :mod:`repro.core.pe.exec` for
 the fixed action ABI.
 
 All integer state is int32: tables up to 2^31 entries, which keeps the core
@@ -23,7 +23,7 @@ from jax import lax
 
 from .dataplane import SlabLayout
 from .frame import FrameKind
-from .ifunc import (
+from .pe import (
     ACTION_WIDTH,
     A_DONE,
     A_FORWARD,

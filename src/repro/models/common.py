@@ -12,12 +12,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from dataclasses import dataclass, field
-from typing import Any, Callable
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Params = dict[str, jax.Array]
 Axes = dict[str, tuple[str | None, ...]]

@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .attention import attend, qkv_proj, update_kv_cache
-from .common import ModelConfig, ParamFactory, mlp, rms_norm, rope
+from .attention import attend
+from .common import ModelConfig, ParamFactory, mlp, rms_norm
 from .transformer import add_attn_params, add_mlp_params, attn_sublayer
 
 Params = dict[str, jax.Array]

@@ -36,7 +36,6 @@ Switch/GShard scheme.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ Block families:
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax
@@ -27,10 +26,10 @@ import numpy as np
 from jax import lax
 
 from .attention import attend, attend_chunked, attend_sp, qkv_proj, update_kv_cache
-from .common import ModelConfig, ParamFactory, mlp, rms_norm, softcap
+from .common import ModelConfig, ParamFactory, mlp, rms_norm
 from .moe import moe_block
 from .rwkv import add_rwkv_block_params, rwkv_block
-from .ssm import CONV_K, add_ssm_params, ssm_head
+from .ssm import add_ssm_params, ssm_head
 
 Params = dict[str, jax.Array]
 

@@ -29,7 +29,6 @@ import numpy as np
 from .common import ModelConfig, ParamFactory, cross_entropy, rms_norm, softcap
 from .embedding import embed_tokens, lm_head
 from .encdec import add_encdec_params, encode, run_decoder
-from .rwkv import LORA_DIM
 from .ssm import CONV_K
 from .transformer import add_block_params, run_blocks
 

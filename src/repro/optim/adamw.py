@@ -13,7 +13,6 @@ f32 second moments; this is the MaxText/Megatron default).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable
 
 import jax

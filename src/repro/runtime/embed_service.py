@@ -156,7 +156,7 @@ class EmbedShardService:
 
     def _admit(self) -> int:
         admitted = 0
-        while self.queue and self.cq.free_slots:
+        while self.queue:
             req = self.queue.popleft()
             fut = self.cluster.client.submit(
                 f"server{self.owner(req.keys[0])}",
@@ -165,6 +165,13 @@ class EmbedShardService:
                 self.cq,
                 expected=len(req.keys),
             )
+            if fut is None:
+                # completion queue saturated: submit would-block (CQ
+                # backpressure admission) — requeue at the front and stop
+                # admitting until retirements free slots.  In-flight
+                # requests are untouched; nothing raises mid-batch.
+                self.queue.appendleft(req)
+                break
             req.future = fut
             self.active[fut.slot] = req
             admitted += 1

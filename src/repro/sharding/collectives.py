@@ -237,7 +237,7 @@ def xrdma_bcast(
     """
     cfg = config or PropagationConfig()
     client = cluster.client
-    ifn = client._resolve_source(name)
+    ifn = client.resolve_source(name)
     pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
     n = len(client.peers)
     root = cluster.client_index
@@ -284,7 +284,7 @@ def xrdma_flat_push(
     Reported through the same :class:`PropagateReport` so the A/B is
     column-for-column, with the completion model over the star tree."""
     client = cluster.client
-    ifn = client._resolve_source(name)
+    ifn = client.resolve_source(name)
     hexd = ifn.digest.hex()
     pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
     root = cluster.client_index

@@ -25,7 +25,6 @@ free compute-wise and divides optimizer memory by |data|).
 
 from __future__ import annotations
 
-import math
 from typing import Any, Mapping
 
 import jax

@@ -15,7 +15,6 @@ from repro.models.zoo import (
     make_prefill_step,
     make_serve_step,
     make_train_step,
-    param_count,
 )
 from repro.optim import AdamW
 

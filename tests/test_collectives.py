@@ -4,14 +4,12 @@ int8 error-feedback compression (numerics + convergence property)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from _hypothesis_compat import given, settings, st  # hypothesis, or local fallback
 
 from repro.sharding.collectives import (
     compressed_psum_with_feedback,
     dequantize_int8,
-    init_error_feedback,
     quantize_int8,
 )
 

@@ -12,7 +12,6 @@ from repro.core.frame import (
     RNDV_DESC_NBYTES,
     CorruptFrame,
     Frame,
-    FrameFlags,
     FrameKind,
     HopHeader,
     ProtocolError,

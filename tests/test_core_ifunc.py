@@ -3,15 +3,10 @@
 import numpy as np
 import pytest
 
-import jax
-import jax.numpy as jnp
 
 from repro.core import (
-    Cluster,
     FatBitcode,
-    Frame,
     FrameKind,
-    IFunc,
     ISAMismatch,
     ProtocolError,
     Toolchain,

@@ -17,7 +17,6 @@ from repro.core import (
     A_NOP,
     A_RETURN,
     Cluster,
-    CompletionQueue,
     make_gather_return,
     make_gatherer,
 )
@@ -108,17 +107,36 @@ class TestCompletionQueue:
         for got, want in zip(rep.results, svc.oracle(batches)):
             np.testing.assert_array_equal(got, want)
 
-    def test_queue_full_raises(self):
+    def test_queue_full_would_block(self):
+        """Slot exhaustion is an admission signal, not an exception:
+        ``submit`` returns None (would-block), the in-flight submissions
+        are untouched, and a freed slot admits again."""
         cl = Cluster(n_servers=1, wire="ideal")
         svc = EmbedShardService(cl, vocab=64, dim=4, n_keys=4, max_slots=2)
         cl.toolchain.lookup("gatherer")  # artifacts exist
-        cl.client.submit("server0", "gatherer", svc._pad(np.array([1], I32)),
-                         svc.cq, expected=1)
-        cl.client.submit("server0", "gatherer", svc._pad(np.array([2], I32)),
-                         svc.cq, expected=1)
-        with pytest.raises(RuntimeError, match="full"):
-            cl.client.submit("server0", "gatherer", svc._pad(np.array([3], I32)),
+        futs = [
+            cl.client.submit("server0", "gatherer", svc._pad(np.array([k], I32)),
                              svc.cq, expected=1)
+            for k in (1, 2)
+        ]
+        assert all(f is not None for f in futs)
+        blocked = cl.client.submit("server0", "gatherer",
+                                   svc._pad(np.array([3], I32)),
+                                   svc.cq, expected=1)
+        assert blocked is None
+        assert svc.cq.free_slots == 0  # the would-block did not leak a slot
+        # the raising contract survives for direct queue users
+        with pytest.raises(RuntimeError, match="full"):
+            svc.cq._alloc()
+        cl.run_until(lambda: all(f.done() for f in futs))
+        for f, k in zip(futs, (1, 2)):
+            np.testing.assert_array_equal(f.result()[0], svc.table[k])
+        retry = cl.client.submit("server0", "gatherer",
+                                 svc._pad(np.array([3], I32)),
+                                 svc.cq, expected=1)
+        assert retry is not None
+        cl.run_until(retry.done)
+        np.testing.assert_array_equal(retry.result()[0], svc.table[3])
 
     def test_future_misuse_raises(self):
         cl = Cluster(n_servers=1, wire="ideal")

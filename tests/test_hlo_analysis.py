@@ -2,11 +2,10 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis.hlo import analyze_hlo
-from repro.analysis.roofline import HW_V5E, roofline
+from repro.analysis.roofline import roofline
 
 
 def _compiled_text(fn, *avals):

@@ -1,0 +1,368 @@
+"""Progress-engine contracts: priority lanes, poll budgets, per-peer
+credit windows, and CQ-backpressure admission.
+
+The knobs all default *off* (bit-compatible with the pre-layered runtime),
+so every test here turns one on deliberately and checks both the scheduling
+effect (what the knob buys) and the invariants that must survive it
+(exactly-once publish invokes, oracle-identical gather/dapc results, no
+leaked slots/credits after faults).
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis, or local fallback
+
+from repro.core import Cluster, make_tsi
+from repro.core.pointer_chase import PointerChaseApp, chase_ref
+from repro.runtime.embed_service import EmbedShardService, ragged_batches
+
+I32 = np.int32
+
+
+@pytest.fixture(scope="module")
+def tsi():
+    return make_tsi()
+
+
+def counter_cluster(tsi, n_servers=1, **_):
+    cl = Cluster(n_servers=n_servers, wire="ideal")
+    for pe in cl.servers:
+        pe.register_region("counter", np.zeros(1, I32))
+    cl.toolchain.publish(tsi)
+    return cl
+
+
+def counter(cl, i=0) -> int:
+    return int(cl.servers[i].region("counter")[0])
+
+
+# ---------------------------------------------------------------- lanes
+class TestPriorityLanes:
+    def _loaded_server(self, tsi, n_data=20):
+        """A server with a data backlog and one PUBLISH hop behind it.
+        The code is distributed first (and the backlog built afterwards)
+        so the hop is digest-only *and* resolvable — the control lane only
+        promotes self-contained frames."""
+        cl = counter_cluster(tsi)
+        srv = cl.servers[0]
+        cl.client.send_ifunc("server0", "tsi", np.array([1], I32))
+        cl.drain()  # code installed, sender cache warm
+        for _ in range(n_data):
+            cl.client.send_ifunc("server0", "tsi", np.array([1], I32))
+        cl.client.publish_ifunc("tsi", np.array([100], I32))
+        srv.batching = True
+        srv.poll_budget = 4
+        return cl, srv
+
+    def test_control_jumps_the_data_backlog(self, tsi):
+        cl, srv = self._loaded_server(tsi)
+        srv.lanes = True
+        srv.poll()
+        # the hop was handled in the first budgeted poll even though 20
+        # data payloads arrived ahead of it...
+        assert srv.stats.publish_handled == 1
+        # ...and the data backlog is still pending (budget spent on it only
+        # after control drained)
+        assert srv.progress.pending() > 0
+        cl.drain()
+        assert counter(cl) == 21 + 100  # nothing lost, nothing doubled
+
+    def test_fifo_without_lanes(self, tsi):
+        cl, srv = self._loaded_server(tsi)
+        srv.lanes = False
+        srv.poll()
+        # FIFO: the budget went to the data frames that arrived first
+        assert srv.stats.publish_handled == 0
+        cl.drain()
+        assert counter(cl) == 21 + 100
+
+    def test_cold_digest_only_hop_stays_in_fifo_order(self, tsi):
+        """A hop that depends on an earlier code-carrying data frame must
+        NOT be promoted past it: the first tsi send carries the code, the
+        publish right behind it is digest-only (warm sender cache), and
+        the control lane declines frames it cannot yet resolve — no
+        spurious stale-cache refusal, exactly-once invoke."""
+        cl = counter_cluster(tsi)
+        srv = cl.servers[0]
+        cl.client.send_ifunc("server0", "tsi", np.array([1], I32))  # carries code
+        cl.client.publish_ifunc("tsi", np.array([100], I32))  # digest-only hop
+        srv.batching = True
+        srv.lanes = True
+        srv.poll_budget = 1  # one payload per poll: order is observable
+        srv.poll()
+        assert counter(cl) == 1  # the code-carrying data frame went first
+        assert srv.stats.publish_handled == 0
+        cl.drain()
+        assert counter(cl) == 101
+        assert srv.stats.publish_handled == 1
+        assert srv.stats.publish_refused_digest == 0
+
+
+# --------------------------------------------------------------- budget
+class TestPollBudget:
+    def test_budget_bounds_per_poll_work(self, tsi):
+        cl = counter_cluster(tsi)
+        srv = cl.servers[0]
+        for _ in range(12):
+            cl.client.send_ifunc("server0", "tsi", np.array([1], I32))
+        srv.batching = True
+        srv.poll_budget = 4
+        seen = []
+        for _ in range(3):
+            srv.poll()
+            seen.append(counter(cl))
+        assert seen == [4, 8, 12]
+
+    def test_partial_consumption_of_one_coalesced_frame(self, tsi):
+        """A coalesced frame larger than the budget is consumed across
+        polls at exactly ``budget`` payloads per tick — one burst cannot
+        blow through the bound — and the fold stays exact."""
+        cl = counter_cluster(tsi)
+        srv = cl.servers[0]
+        cl.client.batching = True
+        for _ in range(12):
+            cl.client.send_ifunc("server0", "tsi", np.array([1], I32))
+        cl.client.flush()  # one 12-payload frame
+        assert len(srv.endpoint.inbox) == 1
+        srv.batching = True
+        srv.poll_budget = 5
+        seen = []
+        for _ in range(3):
+            srv.poll()
+            seen.append(counter(cl))
+        assert seen == [5, 10, 12]
+
+    def test_mode_switch_mid_partial_frame_is_exactly_once(self, tsi):
+        """Switching batching off while a coalesced frame sits partially
+        consumed at the lane head must not re-invoke the payloads the
+        budgeted batched poll already retired."""
+        cl = counter_cluster(tsi)
+        srv = cl.servers[0]
+        cl.client.batching = True
+        for _ in range(4):
+            cl.client.send_ifunc("server0", "tsi", np.array([1], I32))
+        cl.client.flush()  # one 4-payload frame
+        srv.batching = True
+        srv.poll_budget = 2
+        srv.poll()
+        assert counter(cl) == 2  # payloads 0-1 retired, offset recorded
+        srv.batching = False  # mode switch with the frame still pending
+        srv.poll()
+        assert counter(cl) == 4  # payloads 2-3 only — never 6
+
+    def test_budget_none_is_drain_all(self, tsi):
+        cl = counter_cluster(tsi)
+        for _ in range(7):
+            cl.client.send_ifunc("server0", "tsi", np.array([1], I32))
+        cl.servers[0].poll()
+        assert counter(cl) == 7
+
+
+# -------------------------------------------------------------- credits
+class TestCreditWindow:
+    def test_window_exactly_full_no_stall(self, tsi):
+        cl = counter_cluster(tsi)
+        cl.client.credit_window = 4
+        for _ in range(4):
+            cl.client.send_ifunc("server0", "tsi", np.array([1], I32))
+        assert cl.fabric.stats.credit_stalls == 0
+        assert cl.client.wire.queued_credit_frames() == 0
+        assert len(cl.servers[0].endpoint.inbox) == 4
+
+    def test_one_beyond_window_stalls_then_recovers(self, tsi):
+        cl = counter_cluster(tsi)
+        cl.client.credit_window = 4
+        for _ in range(5):
+            cl.client.send_ifunc("server0", "tsi", np.array([1], I32))
+        assert cl.fabric.stats.credit_stalls == 1
+        assert cl.client.stats.credit_stalls == 1
+        assert cl.client.wire.queued_credit_frames("server0") == 1
+        assert len(cl.servers[0].endpoint.inbox) == 4  # the peer was not flooded
+        cl.servers[0].poll()  # processes 4, returns their credits
+        assert counter(cl) == 4
+        assert cl.client.poll() > 0  # the pump counts as progress
+        assert cl.client.wire.queued_credit_frames() == 0
+        cl.servers[0].poll()
+        assert counter(cl) == 5  # nothing lost
+
+    def test_later_frames_queue_behind_stalled_ones(self, tsi):
+        """Per-destination FIFO holds: once one frame stalls, every later
+        data frame queues behind it even if a credit freed meanwhile."""
+        cl = counter_cluster(tsi)
+        cl.client.credit_window = 2
+        for _ in range(4):
+            cl.client.send_ifunc("server0", "tsi", np.array([1], I32))
+        assert cl.client.wire.queued_credit_frames("server0") == 2
+        cl.drain()
+        assert counter(cl) == 4
+
+    def test_control_frames_bypass_the_window(self, tsi):
+        cl = counter_cluster(tsi)
+        cl.client.credit_window = 1
+        cl.client.send_ifunc("server0", "tsi", np.array([1], I32))  # window full
+        stalls0 = cl.fabric.stats.credit_stalls
+        sent = cl.client.publish_ifunc("tsi", np.array([10], I32))
+        assert sent == ["server0"]  # the hop went out immediately
+        assert cl.fabric.stats.credit_stalls == stalls0
+        cl.drain()
+        assert counter(cl) == 11
+
+    def test_stalled_frames_dropped_when_peer_dies(self, tsi):
+        cl = counter_cluster(tsi)
+        cl.client.credit_window = 2
+        for _ in range(4):
+            cl.client.send_ifunc("server0", "tsi", np.array([1], I32))
+        assert cl.client.wire.queued_credit_frames("server0") == 2
+        cl.kill_server(0)
+        cl.client.poll()  # pump hits the dead endpoint
+        assert cl.client.wire.queued_credit_frames("server0") == 0
+        assert cl.client.stats.credit_dropped == 2
+
+    def test_kill_returns_credits_for_unprocessed_frames(self, tsi):
+        """A dead peer's inbox drops its frames — the sender's window must
+        reopen (a restarted peer starts empty), or the flow deadlocks."""
+        cl = counter_cluster(tsi)
+        cl.client.credit_window = 2
+        for _ in range(2):
+            cl.client.send_ifunc("server0", "tsi", np.array([1], I32))
+        assert cl.fabric.credit_outstanding("client", "server0") == 2
+        cl.kill_server(0)
+        assert cl.fabric.credit_outstanding("client", "server0") == 0
+        cl.restart_server(0)
+        cl.servers[0].register_region("counter", np.zeros(1, I32))
+        for _ in range(2):
+            cl.client.send_ifunc("server0", "tsi", np.array([1], I32))
+        assert cl.fabric.stats.credit_stalls == 0  # the window was fresh
+        cl.drain()
+        assert counter(cl) == 2
+
+
+# ----------------------------------------------- CQ-backpressure admission
+class TestAdmissionControl:
+    def make_service(self, max_slots=4, n_servers=2):
+        cl = Cluster(n_servers=n_servers, wire="ideal")
+        return EmbedShardService(
+            cl, vocab=64, dim=4, n_keys=4, max_slots=max_slots, seed=1
+        )
+
+    def test_full_cq_never_kills_inflight_requests(self):
+        """Regression for the pre-layering behaviour where slot exhaustion
+        raised mid-batch: 3x more requests than slots now saturate the CQ
+        (observed), nothing raises, and every request completes exactly."""
+        svc = self.make_service(max_slots=4)
+        cl = svc.cluster
+        batches = ragged_batches(svc.vocab, 12, svc.n_keys, seed=2)
+        for b in batches:
+            svc.submit(b)
+        saturated = False
+        rounds = 0
+        while svc.queue or svc.active:
+            svc._admit()
+            # observe saturation between admission and the polls that
+            # retire completions (an ideal wire completes within the tick)
+            saturated = saturated or (
+                svc.cq.free_slots == 0 and len(svc.queue) > 0
+            )
+            for pe in cl.alive_pes():
+                pe.poll()
+            svc._retire()
+            rounds += 1
+            assert rounds < 10_000
+        assert saturated, "test never saturated the CQ — shrink max_slots"
+        assert svc.cq.free_slots == 4
+        got = {r.rid: r.rows for r in svc.finished}
+        for rid, want in enumerate(svc.oracle(batches)):
+            np.testing.assert_array_equal(got[rid], want)
+
+    def test_cancel_under_exhaustion_releases_exactly_one_slot(self):
+        svc = self.make_service(max_slots=3)
+        cl = svc.cluster
+        futs = [
+            cl.client.submit("server0", "gatherer",
+                             svc._pad(np.array([k], I32)), svc.cq, expected=1)
+            for k in (1, 2, 3)
+        ]
+        assert svc.cq.free_slots == 0
+        assert cl.client.submit("server0", "gatherer",
+                                svc._pad(np.array([4], I32)),
+                                svc.cq, expected=1) is None
+        futs[1].cancel()
+        assert svc.cq.free_slots == 1  # exactly one slot came back
+        futs[1].cancel()  # idempotent: no double release
+        assert svc.cq.free_slots == 1
+        fut = cl.client.submit("server0", "gatherer",
+                               svc._pad(np.array([4], I32)), svc.cq, expected=1)
+        assert fut is not None
+        assert svc.cq.free_slots == 0
+        cl.run_until(fut.done)
+        np.testing.assert_array_equal(fut.result()[0], svc.table[4])
+        # the cancelled slot's late RETURN (if any) cannot corrupt: drain
+        # and check the other in-flight futures still complete correctly
+        cl.run_until(lambda: futs[0].done() and futs[2].done())
+        np.testing.assert_array_equal(futs[0].result()[0], svc.table[1])
+        np.testing.assert_array_equal(futs[2].result()[0], svc.table[3])
+
+
+# ----------------------------------------------------- property: invariants
+@settings(max_examples=4, deadline=None)
+@given(
+    lanes=st.sampled_from([False, True]),
+    budget=st.sampled_from([2, 5, None]),
+    window=st.sampled_from([0, 3, 16]),
+    publish_tick=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**20),
+)
+def test_any_interleaving_preserves_gather_and_publish_invariants(
+    lanes, budget, window, publish_tick, seed
+):
+    """Any combination of lanes/budget/credits, any publish timing: gather
+    results stay bit-identical to the take oracle and the concurrent tree
+    publish invokes exactly once per server."""
+    cl = Cluster(n_servers=4, wire="ideal")
+    svc = EmbedShardService(cl, vocab=64, dim=4, n_keys=4, max_slots=4, seed=3)
+    for pe in cl.servers:
+        pe.register_region("counter", np.zeros(1, I32))
+    cl.toolchain.publish(make_tsi())
+    batches = ragged_batches(svc.vocab, 10, svc.n_keys, seed=seed)
+    want = svc.oracle(batches)
+    cl.set_batching(True)
+    svc.batching = True
+    cl.set_flow(lanes=lanes, credit_window=window, poll_budget=budget)
+    for b in batches:
+        svc.submit(b)
+    tick = 0
+    published = False
+    while svc.queue or svc.active or not published or any(
+        int(pe.region("counter")[0]) != 9 for pe in cl.servers
+    ):
+        tick += 1
+        if tick == publish_tick:
+            cl.client.publish_ifunc("tsi", np.array([9], I32))
+            published = True
+        svc.tick()
+        assert tick < 10_000
+    counters = [int(pe.region("counter")[0]) for pe in cl.servers]
+    assert counters == [9] * 4  # exactly-once, no dupes, no losses
+    got = {r.rid: r.rows for r in svc.finished}
+    for rid, w in enumerate(want):
+        np.testing.assert_array_equal(got[rid], w)
+
+
+@settings(max_examples=3, deadline=None)
+@given(
+    budget=st.sampled_from([3, None]),
+    window=st.sampled_from([0, 4]),
+    seed=st.integers(min_value=0, max_value=2**20),
+)
+def test_dapc_oracle_identical_under_flow_knobs(budget, window, seed):
+    """The pointer chase retires oracle-identical under any budget/credit
+    configuration (the knobs change scheduling, never results)."""
+    rng = np.random.default_rng(seed)
+    cl = Cluster(n_servers=4, wire="ideal")
+    app = PointerChaseApp(cl, n_entries=64, max_slots=16, seed=7)
+    cl.set_flow(lanes=True, credit_window=window, poll_budget=budget)
+    starts = rng.integers(0, 64, size=8).astype(I32)
+    depth = 12
+    rep = app.dapc(starts, depth, batching=True)
+    want = [chase_ref(app.table, s, depth) for s in starts]
+    assert rep.results.tolist() == want

@@ -2,7 +2,6 @@
 deterministically, and the sender-cache invalidation story holds on the
 simulated fabric after a PE restart."""
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

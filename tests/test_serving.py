@@ -1,8 +1,6 @@
 """Continuous-batching scheduler: admission, lockstep decode, correctness
 against single-request decoding."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

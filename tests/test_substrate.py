@@ -1,7 +1,6 @@
 """Substrate tests: optimizer, data pipeline, checkpoint store, monitors,
 chunked-computation equivalences (deliverable (c))."""
 
-import time
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +9,7 @@ import pytest
 
 from repro.data import DataConfig, TokenPipeline
 from repro.checkpoint import CheckpointStore, latest_step, restore_state, save_state
-from repro.optim import AdamW, cosine_schedule, global_norm
+from repro.optim import AdamW, cosine_schedule
 from repro.runtime.monitor import HeartbeatMonitor, StepTimer, StragglerPolicy
 
 
