@@ -17,6 +17,8 @@ Guarded metrics — "higher is better" unless marked ``<``:
                         warm_modeled_us_reduction_pct, warm_code_bytes (<)
   BENCH_overload.json   hop_latency_improvement_pct, receiver_backlog_ratio,
                         hop_ticks_flow (<)
+  BENCH_reliability.json  ack_overhead_pct (<), recovery_p95_ticks_rel5 (<),
+                        goodput_rel5
 
 ``python -m benchmarks.check_regression`` (run from the repo root after
 regenerating the BENCH files); exits non-zero on any regression.
@@ -54,6 +56,13 @@ GUARDS = {
         ("receiver_backlog_ratio", True),
         # control-plane latency under overload must not creep back up
         ("hop_ticks_flow", False),
+    ],
+    "BENCH_reliability.json": [
+        # exactly-once must stay (nearly) free at zero loss ...
+        ("ack_overhead_pct", False),
+        # ... and recovery under 5% loss must stay fast and productive
+        ("recovery_p95_ticks_rel5", False),
+        ("goodput_rel5", True),
     ],
 }
 

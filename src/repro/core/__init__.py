@@ -10,6 +10,8 @@ Public API re-exports.  Layering:
   pe         — the layered PE runtime: source / wire / codecache / exec /
                progress layers + CompletionQueue + the PE facade
                (re-exported by the stable `ifunc` module)
+  reliability — exactly-once delivery config: seq/ack windows, retransmit
+               timers, failure detection knobs
   xrdma      — Chaser / ReturnResult / TSI / Gatherer / Reducer / Gossiper
   cluster    — in-process cluster + deterministic scheduler
   pointer_chase — DAPC miniapp + GBPC baseline (Secs. IV-C/D)
@@ -55,6 +57,7 @@ from .pe import (
     WireLayer,
 )
 from .pointer_chase import ChaseReport, PointerChaseApp, chase_ref, make_chain
+from .reliability import ReliabilityConfig
 from .propagate import (
     PropagationConfig,
     subtree_sizes,
@@ -117,6 +120,7 @@ __all__ = [
     "PropagationConfig",
     "ProtocolError",
     "RegionWrite",
+    "ReliabilityConfig",
     "SenderCache",
     "SlabLayout",
     "TargetCodeCache",

@@ -16,6 +16,7 @@ from typing import Callable
 from .dataplane import DataPlaneConfig
 from .pe import PE, Toolchain
 from .propagate import PropagationConfig
+from .reliability import ReliabilityConfig
 from .transport import Fabric, WireModel
 
 
@@ -85,19 +86,48 @@ class Cluster:
             if poll_budget is not ...:
                 pe.poll_budget = poll_budget
 
+    def set_reliability(self, config: ReliabilityConfig | None) -> None:
+        """Install one reliability policy (seq/ack tracking, retransmit
+        timers, failure detection) on every PE; ``None`` restores the
+        default (disabled — the pre-reliability runtime, bit-for-bit)."""
+        cfg = config or ReliabilityConfig()
+        for pe in self.pes():
+            pe.reliability = cfg
+
+    def _recovery_grace(self) -> int:
+        """Zero-progress rounds the scheduler must tolerate before calling
+        the cluster dead: under reliability, a lost frame sits silent until
+        its retransmit timer fires, so idleness up to the recovery horizon
+        is recovery in progress, not a hang."""
+        graces = [
+            pe.reliability.idle_grace()
+            for pe in self.alive_pes()
+            if pe.reliability.enabled
+        ]
+        return max(graces, default=0)
+
     def pes(self) -> list[PE]:
         return [*self.servers, self.client]
 
     def drain_rounds(self, max_rounds: int = 100_000) -> int:
         """Poll every live PE until a full round makes no progress; returns
         the round count.  (Unlike :meth:`drain` this needs no idle-grace
-        heuristics: propagation traffic is self-contained, so one
-        zero-progress round means the fabric is empty.)"""
+        heuristics when reliability is off: propagation traffic is
+        self-contained, so one zero-progress round means the fabric is
+        empty.  Under reliability a lost frame is silent until its
+        retransmit timer fires, so idle rounds up to the recovery horizon
+        are tolerated before declaring the fabric drained.)"""
         rounds = 0
+        idle = 0
+        grace = self._recovery_grace()
         while rounds < max_rounds:
             rounds += 1
             if sum(pe.poll() for pe in self.alive_pes()) == 0:
-                break
+                idle += 1
+                if idle > grace:
+                    break
+            else:
+                idle = 0
         return rounds
 
     def publish_and_cover(
@@ -181,13 +211,14 @@ class Cluster:
         the runtime layer recovers from.
         """
         idle = 0
+        idle_limit = max(2, self._recovery_grace())
         for rounds in range(max_rounds):
             if pred():
                 return rounds
             progress = sum(pe.poll() for pe in self.alive_pes())
             if progress == 0:
                 idle += 1
-                if idle > 2:
+                if idle > idle_limit:
                     raise TimeoutError("cluster idle but predicate unsatisfied")
             else:
                 idle = 0
@@ -223,9 +254,10 @@ class Cluster:
         )
         self.servers[idx] = pe
         for peer in self.pes():
-            peer.sender_cache.invalidate_endpoint(name)
-            # the restarted process re-mints publish ids from zero: peers
-            # must drop the dedup keys of its previous life or its fresh
-            # publishes of known code are silently swallowed as duplicates
-            peer.forget_publisher(idx)
+            # drops sender-cache rows, reliability seq/retransmit state,
+            # pairwise credits, and the publish dedup keys of the previous
+            # life (a restarted process re-mints publish ids from zero, and
+            # its fresh seq stream restarts at 1 — stale windows would
+            # swallow both)
+            peer.forget_peer_state(name)
         return pe

@@ -14,7 +14,14 @@ the expected trailing MAGIC is present (Sec. III-D).
 Header fields::
 
     magic4  version  kind  flags  name_len  payload_len  code_len  deps_len
-    digest(32B)  seq(8B)  name(name_len B)
+    digest(32B)  ack(4B) seq(4B)  name(name_len B)
+
+The trailing 8-byte word is the reliability layer's channel state: the low
+u32 is the sender-assigned per-peer sequence number, the high u32 a
+piggybacked cumulative ACK (every seq <= ack from the *receiver's* stream
+has been ingested by the sender of this frame).  Both are 0 when the
+reliability layer is off — the pre-reliability wire format, bit-for-bit,
+at zero added bytes when it is on.
 
 Multi-payload frames (coalescing)
 ---------------------------------
@@ -69,6 +76,7 @@ class FrameKind(IntEnum):
     ACTIVE_MESSAGE = 3  # pre-deployed handler, payload-only (baseline)
     GET_RESPONSE = 4  # transport-internal: RDMA GET reply
     RNDV = 5  # rendezvous descriptor: 16B control, data pulled by GET
+    ACK = 6  # standalone cumulative ACK (header-only; reliability layer)
 
 
 class FrameFlags(IntEnum):
@@ -302,7 +310,8 @@ class Frame:
     code: bytes = b""  # fat-bitcode archive (or single slice for BINARY)
     deps: tuple[str, ...] = ()
     digest: bytes = b"\x00" * 32  # sha256 of code section
-    seq: int = 0
+    seq: int = 0  # per-peer sequence number (u32; 0 = unsequenced)
+    ack: int = 0  # piggybacked cumulative ACK (u32; 0 = nothing to ack)
     flags: int = FrameFlags.NONE
     version: int = 1
 
@@ -329,7 +338,7 @@ class Frame:
             len(self.code),
             len(deps_b),
             self.digest,
-            self.seq,
+            ((self.ack & 0xFFFFFFFF) << 32) | (self.seq & 0xFFFFFFFF),
         )
         return b"".join(
             [hdr, name_b, self.payload, MAGIC, self.code, deps_b, MAGIC]
@@ -381,6 +390,7 @@ class ParsedHeader:
     deps_len: int
     digest: bytes
     seq: int
+    ack: int
     header_len: int  # header + name bytes
 
     @property
@@ -396,7 +406,7 @@ def peek_header(buf: bytes | bytearray | memoryview) -> ParsedHeader | None:
     """Parse the header if enough bytes have been delivered, else None."""
     if len(buf) < _HDR_LEN:
         return None
-    magic4, version, kind, flags, name_len, payload_len, code_len, deps_len, digest, seq = struct.unpack_from(
+    magic4, version, kind, flags, name_len, payload_len, code_len, deps_len, digest, seq_word = struct.unpack_from(
         _HDR_FMT, buf, 0
     )
     if magic4 != HDR_MAGIC:
@@ -416,7 +426,8 @@ def peek_header(buf: bytes | bytearray | memoryview) -> ParsedHeader | None:
         code_len=code_len,
         deps_len=deps_len,
         digest=digest,
-        seq=seq,
+        seq=seq_word & 0xFFFFFFFF,
+        ack=seq_word >> 32,
         header_len=_HDR_LEN + name_len,
     )
 
@@ -465,6 +476,7 @@ def unpack(buf: bytes | bytearray | memoryview, has_code: bool) -> Frame:
         deps=deps,
         digest=hdr.digest,
         seq=hdr.seq,
+        ack=hdr.ack,
         flags=hdr.flags,
     )
 

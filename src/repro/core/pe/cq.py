@@ -80,6 +80,18 @@ class CompletionQueue:
         pe.register_region(region, np.zeros((max_slots, 2 + self.width), np.int32))
         self._free: deque[int] = deque(range(max_slots))
         self._inflight: dict[int, "GatherFuture"] = {}
+        # deadline clock: advanced by the driving scheduler (one per service
+        # tick); futures submitted under reliability expire against it
+        self.ticks = 0
+
+    def advance(self, n: int = 1) -> None:
+        """Advance the deadline clock (the scheduler's tick, not wall time)."""
+        self.ticks += n
+
+    def expired(self) -> list["GatherFuture"]:
+        """In-flight futures past their deadline and still incomplete —
+        the set the service layer must resubmit or degrade."""
+        return [f for f in list(self._inflight.values()) if f.expired()]
 
     # -- slot lifecycle ----------------------------------------------------
     def try_alloc(self) -> tuple[int, int] | None:
@@ -142,13 +154,57 @@ class GatherFuture:
     frame) and recycles the slot — the epoch guard makes that safe even
     if the abandoned gather's RETURNs later arrive.  ``meta`` is caller
     scratch (e.g. the original un-padded key batch).
+
+    Reliability additions: ``submit_tick``/``deadline`` arm expiry against
+    the queue's tick clock (``deadline=0`` never expires — the
+    pre-reliability contract); ``attempts`` counts service-level
+    resubmissions of the same logical request; :meth:`valid_mask` /
+    :meth:`result_partial` expose the per-position arrival bitmask so a
+    gather whose owner died can degrade to a partial result instead of
+    hanging — each position is marked valid iff its RETURN actually
+    landed.
     """
 
     queue: CompletionQueue
     slot: int
     expected: int
     meta: Any = None
+    submit_tick: int = 0
+    deadline: int = 0  # ticks before expiry; 0 = no deadline
+    attempts: int = 0  # service-level resubmissions so far
     _released: bool = False
+
+    def expired(self) -> bool:
+        """Past the deadline with results still missing (never true for
+        a completed or released future, or with no deadline armed)."""
+        return (
+            self.deadline > 0
+            and not self._released
+            and not self.done()
+            and self.queue.ticks - self.submit_tick >= self.deadline
+        )
+
+    def valid_mask(self) -> np.ndarray:
+        """Per-position arrival mask: ``mask[i]`` is True iff result unit
+        ``i`` has been RETURNed into the slot."""
+        bits = int(self.queue.pe.region(self.queue.region)[self.slot, 0])
+        return np.array(
+            [(bits >> i) & 1 == 1 for i in range(self.expected)], bool
+        )
+
+    def result_partial(self, release: bool = True) -> "tuple[np.ndarray, np.ndarray]":
+        """Degraded completion: whatever arrived, plus the validity mask.
+        Positions with ``mask[i] == False`` hold zeros (their owner died
+        or their RETURN was lost past recovery) — the loud, attributed
+        alternative to hanging forever."""
+        if self._released:
+            raise RuntimeError("future already consumed")
+        mask = self.valid_mask()
+        out = self.queue._data(self.slot).copy()
+        if release:
+            self._released = True
+            self.queue._release(self.slot)
+        return out, mask
 
     def done(self) -> bool:
         return not self._released and self.queue._count(self.slot) >= self.expected

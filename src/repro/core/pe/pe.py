@@ -31,6 +31,7 @@ from ..cache import CachedExecutable, SenderCache, TargetCodeCache
 from ..dataplane import DataPlaneConfig
 from ..frame import Frame, FrameFlags, FrameKind, HopHeader, ProtocolError, pack_hop
 from ..propagate import PropagationConfig, tree_children
+from ..reliability import ReliabilityConfig
 from ..transport import EndpointDead, Fabric
 from .codecache import CodeCacheLayer
 from .cq import CompletionQueue, GatherFuture
@@ -68,6 +69,19 @@ class PEStats:
     publish_refused_digest: int = 0  # code bytes != header digest (poisoned)
     publish_stopped_ttl: int = 0  # had children but no hop budget left
     publish_send_failures: int = 0  # child endpoint dead at re-publish time
+    # --- reliability layer (sender: wire.py / receiver: progress.py) ---
+    retransmits: int = 0  # unacked frames resent after an rto expiry
+    frames_acked: int = 0  # unacked frames retired by a cumulative ack
+    acks_sent: int = 0  # standalone ACK frames emitted (piggybacks are free)
+    acks_received: int = 0  # standalone ACK frames consumed at ingest
+    dup_frames_dropped: int = 0  # duplicate deliveries dropped at the seq gate
+    frames_held_ooo: int = 0  # out-of-order arrivals parked for a gap
+    peers_suspected: int = 0  # retransmit budget exhausted -> suspect
+    peers_declared_dead: int = 0  # suspects the failure detector gave up on
+    sends_to_dead: int = 0  # PUTs absorbed against a dead endpoint
+    unacked_dropped: int = 0  # retransmit-queue frames dropped with a dead peer
+    region_write_failures: int = 0  # one-sided bursts absorbed against a dead peer
+    rndv_dead_pulls: int = 0  # rendezvous pulls whose source died pre-GET
     jit_ms_total: float = 0.0
 
     def as_dict(self) -> dict[str, float]:
@@ -132,6 +146,12 @@ class PE:
         self.progress = ProgressEngine(
             self, self.wire, self.codecache, self.execl, self.stats
         )
+        # reliability cross-wiring: the wire layer piggybacks the progress
+        # engine's cumulative acks, and budget exhaustion feeds the
+        # progress engine's failure detector
+        self.wire.ack_provider = self.progress.cum_for
+        self.wire.on_suspect = self._on_peer_suspect
+        self.on_peer_dead_callbacks: list[Callable[[str], None]] = []
 
     # --- runtime knobs (delegated to the owning layer) ---------------------
     @property
@@ -179,6 +199,49 @@ class PE:
     @poll_budget.setter
     def poll_budget(self, budget: int | None) -> None:
         self.progress.budget = budget
+
+    @property
+    def reliability(self) -> ReliabilityConfig:
+        """The reliable-delivery / failure-recovery policy (see
+        :class:`repro.core.reliability.ReliabilityConfig`); the default
+        (disabled) config is the pre-reliability runtime bit-for-bit."""
+        return self.wire.reliability
+
+    @reliability.setter
+    def reliability(self, config: ReliabilityConfig | None) -> None:
+        cfg = config or ReliabilityConfig()
+        self.wire.reliability = cfg
+        self.progress.detector.monitor.max_misses = cfg.max_misses
+
+    # --- failure handling ---------------------------------------------------
+    def _on_peer_suspect(self, peer: str) -> None:
+        self.progress.detector.suspect(peer, self.progress.tick)
+
+    def on_peer_dead(self, peer: str) -> None:
+        """The failure detector declared ``peer`` dead: clear every piece
+        of state entangled with it, exactly the invalidation
+        :meth:`repro.core.cluster.Cluster.restart_server` performs —
+        retransmit/credit queues, seq streams, sender-cache rows, publish
+        dedup for its root index, fabric credits — then notify listeners
+        (e.g. a service that must degrade or resubmit its futures)."""
+        self.stats.peers_declared_dead += 1
+        self.forget_peer_state(peer, forgive=False)
+        for cb in list(self.on_peer_dead_callbacks):
+            cb(peer)
+
+    def forget_peer_state(self, peer: str, forgive: bool = True) -> None:
+        """Drop all per-peer runtime state for ``peer`` (both wire and
+        progress halves).  ``forgive=True`` additionally clears the
+        failure detector's verdict — the restart case, where the peer's
+        next life must start with a clean slate."""
+        self.wire.forget_peer(peer)
+        self.progress.forget_src(peer)
+        self.sender_cache.invalidate_endpoint(peer)
+        if peer in self.peers:
+            self.forget_publisher(self.peer_index(peer))
+        self.fabric.clear_peer_credits(self.name, peer)
+        if forgive:
+            self.progress.detector.forgive(peer)
 
     # --- local state ------------------------------------------------------
     def register_region(self, name: str, arr: np.ndarray) -> None:
@@ -405,7 +468,12 @@ class PE:
         slot, epoch = alloc
         hdr = np.array([self.peer_index(self.name), slot, epoch], np.int32)
         payload = np.concatenate([hdr, np.asarray(body, np.int32)])
-        fut = GatherFuture(queue=queue, slot=slot, expected=int(expected))
+        rel = self.reliability
+        fut = GatherFuture(
+            queue=queue, slot=slot, expected=int(expected),
+            submit_tick=queue.ticks,
+            deadline=rel.future_deadline if rel.enabled else 0,
+        )
         queue._inflight[slot] = fut
         try:
             self.send_ifunc(dst, name, payload)

@@ -61,6 +61,64 @@ if TYPE_CHECKING:  # pragma: no cover - annotations only
     from .wire import WireLayer
 
 
+class FailureDetector:
+    """Suspect-gated peer-death detection on the progress-engine tick.
+
+    This folds :class:`repro.runtime.monitor.HeartbeatMonitor` into the
+    poll loop: the tick counter is the clock (``interval_s=1`` tick), every
+    ingested frame from a peer is its heartbeat, and — the gate — only
+    peers the wire layer escalated to *suspect* (retransmit budget
+    exhausted) are eligible to be declared dead after ``max_misses`` silent
+    ticks.  A healthy-but-quiet peer is never a failure: with nothing
+    unacked there is no evidence against it, so the monitor's timeout alone
+    must not kill it.  ``declare_dead`` is the bypass for *definitive*
+    evidence (a one-sided GET against freed memory).
+    """
+
+    def __init__(self, max_misses: int = 3) -> None:
+        # deferred import: repro.runtime's package __init__ imports the
+        # service layer, which imports repro.core — a cycle at module
+        # import time, but not by the time a PE is constructed
+        from ...runtime.monitor import HeartbeatMonitor
+
+        self.monitor = HeartbeatMonitor(interval_s=1.0, max_misses=max_misses)
+        self.suspects: set[str] = set()
+
+    @property
+    def dead(self) -> set[str]:
+        return self.monitor.dead
+
+    def alive(self, name: str, tick: int) -> None:
+        self.monitor.beat(name, now=float(tick))
+        self.suspects.discard(name)
+
+    def suspect(self, name: str, tick: int) -> None:
+        self.suspects.add(name)
+        self.monitor.last_seen.setdefault(name, float(tick))
+
+    def declare_dead(self, name: str) -> bool:
+        """Immediate death on definitive evidence; True if newly dead."""
+        newly = name not in self.monitor.dead
+        self.monitor.dead.add(name)
+        self.suspects.add(name)
+        return newly
+
+    def check(self, tick: int) -> set[str]:
+        """Peers newly declared dead at ``tick`` (suspects only)."""
+        newly = self.monitor.check(now=float(tick))
+        for name in list(newly):
+            if name not in self.suspects:
+                self.monitor.dead.discard(name)  # quiet, not suspect: spare
+                newly.discard(name)
+        return newly
+
+    def forgive(self, name: str) -> None:
+        """Forget a peer entirely (it restarted with a fresh identity)."""
+        self.monitor.dead.discard(name)
+        self.monitor.last_seen.pop(name, None)
+        self.suspects.discard(name)
+
+
 class ProgressEngine:
     """Poll-driven scheduler for one PE: lanes, budget, credits, routing."""
 
@@ -79,21 +137,102 @@ class ProgressEngine:
         self._control: deque[list] = deque()
         self._data: deque[list] = deque()
         self._seen_pubs: set[tuple[bytes, int, int]] = set()  # publish dedup
+        # --- reliability (receiver half; sender half in wire.py) ---
+        self.tick = 0  # the tick clock: one per poll while reliability is on
+        self.detector = FailureDetector()
+        # per-source receive state [cum, held]: ``cum`` the contiguous
+        # ingest high-water mark (everything <= cum entered the lanes
+        # exactly once, in order), ``held`` the out-of-order frames parked
+        # until the gap before them fills
+        self._recv: dict[str, list] = {}
+        self._ack_owed: dict[str, int] = {}  # src -> tick the debt started
+        # buffers consumed at the seq gate since the last poll returned
+        # (dups dropped, ACKs absorbed, OOO frames parked): link progress
+        # the idle detectors must see even though no lane entry resulted
+        self._gate_progress = 0
+        # publish dedup keys waiting to retire: (src, seq, key) retired
+        # once the ack for seq has actually been stamped toward src
+        self._pub_log: deque[tuple[str, int, tuple]] = deque()
 
     # --- lane bookkeeping --------------------------------------------------
     def _ingest(self) -> int:
         """Move arrived wire buffers from the endpoint inbox into the
         engine's lanes, classifying control vs data at ingest (a header
         peek, no full parse).  With lanes disabled everything lands in the
-        data lane in arrival order — the flat FIFO of the old runtime."""
+        data lane in arrival order — the flat FIFO of the old runtime.
+
+        With reliability on, ingest is also the seq gate: frames from each
+        source enter the lanes in seq order exactly once — duplicates
+        (retransmits that raced the ack) are dropped here with their
+        credits returned, out-of-order frames are held until the gap
+        before them fills, ACK frames are consumed without ever entering a
+        lane, and every sequenced frame's piggybacked ack retires the wire
+        layer's retransmit state.  Returns buffers drained (held and
+        dropped ones included: a duplicate arriving IS link progress)."""
+        rel = self.wire.reliability
         n = 0
         for buf in self.rt.endpoint.drain():
             src = getattr(buf, "src", "")
             raw = bytes(buf)
-            lane = self._control if self.lanes and self._is_control(raw) else self._data
-            lane.append([src, raw, 0])
             n += 1
+            if not (rel.enabled and src and src != self.rt.name):
+                self._admit_lane(src, raw)
+                continue
+            try:
+                hdr = peek_header(raw)
+            except CorruptFrame:
+                hdr = None  # the error surfaces when the frame is processed
+            if hdr is None:
+                self._admit_lane(src, raw)
+                continue
+            self.wire.peer_alive(src)
+            self.detector.alive(src, self.tick)
+            if hdr.ack:
+                self.wire.on_ack(src, hdr.ack)
+            if hdr.kind == FrameKind.ACK:
+                self.stats.acks_received += 1
+                self._gate_progress += 1
+                continue  # header-only: no payload, no credit, no lane
+            if hdr.seq == 0:
+                self._admit_lane(src, raw)  # unsequenced (pre-reliability)
+                continue
+            st = self._recv.setdefault(src, [0, {}])
+            if hdr.seq <= st[0] or hdr.seq in st[1]:
+                # duplicate delivery: drop before it can re-invoke, return
+                # the receive credit its PUT consumed, re-owe the ack (ours
+                # may have been the loss that caused the retransmit)
+                self.stats.dup_frames_dropped += 1
+                self._gate_progress += 1
+                self.rt.fabric.credit_return(
+                    src, self.rt.name, self._payloads_in(raw)
+                )
+                self._owe_ack(src)
+                continue
+            if hdr.seq > st[0] + 1:
+                st[1][hdr.seq] = raw  # out of order: hold for the gap
+                self.stats.frames_held_ooo += 1
+                self._gate_progress += 1
+                continue
+            st[0] = hdr.seq
+            self._admit_lane(src, raw)
+            while st[0] + 1 in st[1]:  # release now-contiguous held frames
+                st[0] += 1
+                self._admit_lane(src, st[1].pop(st[0]))
+            self._owe_ack(src)
         return n
+
+    def _admit_lane(self, src: str, raw: bytes) -> None:
+        lane = self._control if self.lanes and self._is_control(raw) else self._data
+        lane.append([src, raw, 0])
+
+    def _owe_ack(self, src: str) -> None:
+        self._ack_owed.setdefault(src, self.tick)
+
+    def cum_for(self, src: str) -> int:
+        """Cumulative ingest high-water mark for ``src`` — what the wire
+        layer piggybacks as the ack on every frame sent back to it."""
+        st = self._recv.get(src)
+        return st[0] if st is not None else 0
 
     def _is_control(self, raw: bytes) -> bool:
         """Control-lane admission: hop frames and rendezvous descriptors —
@@ -177,11 +316,62 @@ class ProgressEngine:
         plus credit-stalled sends pumped.
         """
         budget = max_msgs if max_msgs is not None else self.budget
+        rel = self.wire.reliability
+        if rel.enabled:
+            self.tick += 1
         if self.wire.batching:
             processed = self._poll_batched(budget)
         else:
             processed = self._poll_single(budget)
-        return processed + self.wire.pump()
+        processed += self.wire.pump()
+        if rel.enabled:
+            processed += self._reliability_tick()
+            processed += self._gate_progress
+            self._gate_progress = 0
+        return processed
+
+    def _reliability_tick(self) -> int:
+        """The per-poll reliability work: drive the sender's retransmit
+        clock, flush overdue standalone ACKs, retire publish-dedup keys
+        whose seq window is now cumulatively acked, and run the failure
+        detector.  Returns a progress count (retransmits + acks + deaths —
+        recovery activity must read as progress to the idle detectors)."""
+        rel = self.wire.reliability
+        n = self.wire.on_tick(self.tick)
+        for src, since in list(self._ack_owed.items()):
+            cum = self.cum_for(src)
+            if cum <= self.wire.acked_sent(src):
+                del self._ack_owed[src]  # a piggyback already covered it
+                continue
+            if self.tick - since >= rel.ack_delay:
+                self.wire.send_ack(src, cum)
+                del self._ack_owed[src]
+                n += 1
+        # bounded publish-dedup memory: once the ack for a key's carrying
+        # frame has been stamped toward its sender, every future replay of
+        # that frame dies at the seq gate before reaching the publish
+        # handler — the key has no work left to do
+        while self._pub_log:
+            src, seq, key = self._pub_log[0]
+            if seq > self.wire.acked_sent(src):
+                break
+            self._seen_pubs.discard(key)
+            self._pub_log.popleft()
+        for name in self.detector.check(self.tick):
+            self.rt.on_peer_dead(name)
+            n += 1
+        return n
+
+    def forget_src(self, src: str) -> None:
+        """Drop receiver-side reliability state for one peer (declared
+        dead or restarted): its seq stream restarts from zero with its
+        next life, so held fragments and the old high-water mark are
+        meaningless — keeping them would silently swallow the fresh
+        stream's first frames as duplicates."""
+        self._recv.pop(src, None)
+        self._ack_owed.pop(src, None)
+        if self._pub_log:
+            self._pub_log = deque(e for e in self._pub_log if e[0] != src)
 
     def _poll_single(self, budget: int | None) -> int:
         """Per-message mode: handle frames one at a time, FIFO within each
@@ -202,7 +392,7 @@ class ProgressEngine:
             # the frame partially and the mode switched: resume from the
             # recorded offset or the retired payloads would invoke twice
             used += self._payloads_in(entry[1]) - entry[2]
-            self.execute_frame(entry[1], start=entry[2])
+            self.execute_frame(entry[1], start=entry[2], src=entry[0])
             n += 1
             self.stats.msgs += 1
         return n
@@ -214,7 +404,7 @@ class ProgressEngine:
         in ONE batched XLA dispatch; then flush the coalesced output burst
         even if a frame was bad."""
         self._ingest()
-        taken: list[tuple[bytes, int, int | None]] = []  # (buf, start, stop)
+        taken: list[tuple[bytes, int, int | None, str]] = []  # (buf, start, stop, src)
         used = 0
         while budget is None or used < budget:
             lane = self._front()
@@ -231,13 +421,13 @@ class ProgressEngine:
             # poll consumed, whether or not the frame is finished
             self.rt.fabric.credit_return(src, self.rt.name, take)
             if start + take >= n_pay:
-                taken.append((raw, start, None))
+                taken.append((raw, start, None, src))
                 lane.popleft()
                 self.stats.msgs += 1
             else:
                 # partial consumption: remember the offset, keep the buffer
                 # at the lane head for the next poll
-                taken.append((raw, start, start + take))
+                taken.append((raw, start, start + take, src))
                 lane[0][2] = start + take
         if taken:
             try:
@@ -247,16 +437,17 @@ class ProgressEngine:
         return len(taken)
 
     # --- frame routing -----------------------------------------------------
-    def execute_frame(self, buf: bytes, start: int = 0) -> None:
+    def execute_frame(self, buf: bytes, start: int = 0, src: str = "") -> None:
         """Route one wire buffer: publish hop, AM, rendezvous descriptor,
         or plain ifunc frame (install if needed, invoke per payload).
         ``start`` skips payloads a previous (budgeted, batched) poll
-        already retired from this same frame."""
+        already retired from this same frame; ``src`` is the sending peer
+        when known (reliability bookkeeping)."""
         hdr = peek_header(buf)
         if hdr is None:
             raise ProtocolError("short frame")
         if hdr.flags & FrameFlags.HOP:
-            self._handle_publish(buf, hdr)
+            self._handle_publish(buf, hdr, src)
             return
         if hdr.kind == FrameKind.ACTIVE_MESSAGE:
             self._handle_am(unpack(buf, has_code=False), start)
@@ -265,6 +456,8 @@ class ProgressEngine:
             frame = unpack(buf, has_code=False)
             for desc in split_payloads(frame)[start:]:
                 exe, data = self._rndv_pull(frame.name, desc)
+                if exe is None:
+                    continue  # source died before the pull (detector fed)
                 self.execl.invoke(exe, data)
             return
         # ifunc path: does this wire carry code? (sender truncates iff it
@@ -286,7 +479,7 @@ class ProgressEngine:
         """
         groups: dict[bytes, tuple[CachedExecutable, list[bytes]]] = {}
         errors: list[Exception] = []
-        for buf, start, stop in bufs:
+        for buf, start, stop, src in bufs:
             try:
                 hdr = peek_header(buf)
                 if hdr is None:
@@ -295,7 +488,7 @@ class ProgressEngine:
                     # publishes are install-dominated and rare (one per PE
                     # per code distribution): handled inline, re-publishes
                     # ride the post-poll flush as everything else does
-                    self._handle_publish(buf, hdr)
+                    self._handle_publish(buf, hdr, src)
                     continue
                 if hdr.kind == FrameKind.ACTIVE_MESSAGE:
                     self._handle_am(unpack(buf, has_code=False), start, stop)
@@ -307,6 +500,8 @@ class ProgressEngine:
                     frame = unpack(buf, has_code=False)
                     for desc in split_payloads(frame)[start:stop]:
                         exe, data = self._rndv_pull(frame.name, desc)
+                        if exe is None:
+                            continue  # source died before the pull
                         entry = groups.setdefault(bytes.fromhex(exe.digest), (exe, []))
                         entry[1].append(data)
                     continue
@@ -332,11 +527,15 @@ class ProgressEngine:
             self.stats.am_handled += 1
             handler(self.rt, pay)
 
-    def _rndv_pull(self, name: str, desc: bytes) -> tuple[CachedExecutable, bytes]:
+    def _rndv_pull(self, name: str, desc: bytes):
         """Resolve a rendezvous descriptor: GET the staged payload from the
-        source's staging region.  The executable must already be cached —
-        descriptors cannot carry code (the sender only selects rendezvous
-        for cache-warm peers), so a miss here means a stale sender cache."""
+        source's staging region; returns ``(exe, data)``.  The executable
+        must already be cached — descriptors cannot carry code (the sender
+        only selects rendezvous for cache-warm peers), so a miss here means
+        a stale sender cache.  Under reliability, a source that died
+        between staging and the pull returns ``(None, None)`` after feeding
+        the failure detector (kill-mid-rendezvous: the CQ deadline recovers
+        the requester, nothing is left pinned here)."""
         src_idx, token, nbytes = unpack_rndv(desc)  # CorruptFrame if malformed
         exe = self.codecache.cache.lookup(name)
         if exe is None:
@@ -351,6 +550,15 @@ class ProgressEngine:
         src = self.rt.peers[src_idx]
         try:
             data = self.wire.fetch_rndv(src, token, nbytes)
+        except EndpointDead:
+            if not self.wire.reliability.enabled:
+                raise  # pre-reliability containment: loud at the caller
+            # definitive evidence — the staging memory died with its
+            # process; skip the detector's silence window entirely
+            self.stats.rndv_dead_pulls += 1
+            if self.detector.declare_dead(src):
+                self.rt.on_peer_dead(src)
+            return None, None
         except KeyError:
             # staging ring evicted the region, or the source restarted with
             # fresh (empty) registered memory — loud but contained, like the
@@ -361,7 +569,7 @@ class ProgressEngine:
             ) from None
         return exe, data
 
-    def _handle_publish(self, buf: bytes, hdr) -> None:
+    def _handle_publish(self, buf: bytes, hdr, src: str = "") -> None:
         """One PUBLISH hop: validate -> install -> invoke -> re-publish.
 
         The validation ladder runs *before* anything is installed or
@@ -415,6 +623,11 @@ class ProgressEngine:
         else:
             exe = self.codecache.resolve_publish_exe(hdr)
         self._seen_pubs.add(key)
+        if src and hdr.seq and self.wire.reliability.enabled:
+            # queued for retirement once this frame's seq is cumulatively
+            # acked toward src (bounded dedup memory under long gossip:
+            # replays after that die at the ingest seq gate instead)
+            self._pub_log.append((src, hdr.seq, key))
         self.stats.publish_handled += 1
         if inner:
             self.execl.invoke(exe, inner)

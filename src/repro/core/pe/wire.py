@@ -22,11 +22,12 @@ exactly the priority inversion the lane/credit design removes.
 from __future__ import annotations
 
 from collections import deque
-from typing import TYPE_CHECKING
+from typing import TYPE_CHECKING, Callable
 
 import numpy as np
 
 from ..frame import Frame, FrameFlags, FrameKind, coalesce, pack_rndv, rndv_region
+from ..reliability import ReliabilityConfig
 from ..transport import EndpointDead, Fabric, RegionWrite
 
 if TYPE_CHECKING:  # pragma: no cover - annotations only
@@ -42,10 +43,10 @@ RNDV_STAGING_DEPTH = 1024
 
 def is_control(kind: int, flags: int) -> bool:
     """The lane classification both ends of the wire agree on: PUBLISH hop
-    frames and rendezvous descriptors are control traffic (small, latency-
-    critical); everything else — ifunc payloads, RETURN data, AMs — is
-    bulk data."""
-    return bool(flags & FrameFlags.HOP) or kind == FrameKind.RNDV
+    frames, rendezvous descriptors, and ACKs are control traffic (small,
+    latency-critical); everything else — ifunc payloads, RETURN data,
+    AMs — is bulk data."""
+    return bool(flags & FrameFlags.HOP) or kind in (FrameKind.RNDV, FrameKind.ACK)
 
 
 class WireLayer:
@@ -75,6 +76,23 @@ class WireLayer:
         self._creditq: dict[str, deque[Frame]] = {}  # frames awaiting credits
         self._rndv_tokens: deque[str] = deque()  # staged rendezvous regions (ring)
         self._rndv_seq = 0
+        # --- reliability (sender half; receiver half in progress.py) ---
+        self.reliability = ReliabilityConfig()  # disabled by default
+        # cumulative-ack provider: the progress engine's per-source ingest
+        # high-water mark, stamped into every outgoing frame (piggyback)
+        self.ack_provider: Callable[[str], int] | None = None
+        # escalation hook: peer exhausted its retransmit budget -> suspect
+        self.on_suspect: Callable[[str], None] | None = None
+        self._tick = 0  # mirror of the progress engine's tick clock
+        self._peer_seq: dict[str, int] = {}  # next seq to assign, per peer
+        # per-peer retransmit queue, seq order.  Entries are mutable lists
+        # [seq, wire_bytes, n_payloads, kinds, hop, control, due, attempts]:
+        # the EXACT first-transmit bytes are kept and resent verbatim, so a
+        # retransmitted code-carrying frame is not wrongly truncated by the
+        # sender-cache entry its first flight created.
+        self._unacked: dict[str, deque[list]] = {}
+        self._suspect: set[str] = set()  # budget-exhausted peers (paused)
+        self._acked_sent: dict[str, int] = {}  # highest ack stamped per peer
 
     # --- sequencing -------------------------------------------------------
     def next_seq(self) -> int:
@@ -121,19 +139,156 @@ class WireLayer:
             cached = self.caching_enabled and self.sender_cache.check_and_add(
                 dst, frame.digest.hex(), len(frame.code)
             )
+        rel = self.reliability
+        tracked = rel.enabled and dst != self.name
+        if tracked:
+            # per-peer stream: one seq space per (src, dst), in-order
+            # ingest at the receiver (the per-QP ordering of a real RC
+            # transport); the piggybacked ack rides for free in the header
+            seq = self._peer_seq.get(dst, 0) + 1
+            self._peer_seq[dst] = seq
+            frame.seq = seq & 0xFFFFFFFF
+            frame.ack = self._ack_for(dst)
         wire = frame.wire_bytes(cached=cached)
+        kinds = frame.kind_breakdown(cached)
+        hop = bool(frame.flags & FrameFlags.HOP)
         self.stats.sends += 1
         if not cached and frame.code:
             self.stats.code_sends += 1
-        self.fabric.put(
-            self.name,
-            dst,
-            wire,
-            n_payloads=frame.n_payloads,
-            kinds=frame.kind_breakdown(cached),
-            hop=bool(frame.flags & FrameFlags.HOP),
-        )
+        if tracked:
+            self._unacked.setdefault(dst, deque()).append([
+                frame.seq, wire, frame.n_payloads, kinds, hop,
+                is_control(int(frame.kind), int(frame.flags)),
+                self._tick + rel.rto_after(0), 0,
+            ])
+        try:
+            self.fabric.put(
+                self.name, dst, wire, n_payloads=frame.n_payloads,
+                kinds=kinds, hop=hop,
+            )
+        except EndpointDead:
+            if not tracked:
+                raise
+            # under reliability a synchronous dead-endpoint PUT is just a
+            # lost frame: it stays on the retransmit queue and the failure
+            # detector — not the caller — attributes the death
+            self.stats.sends_to_dead += 1
         return len(wire)
+
+    # --- reliability: sender half -----------------------------------------
+    def _ack_for(self, dst: str) -> int:
+        if self.ack_provider is None:
+            return 0
+        ack = int(self.ack_provider(dst))
+        if ack > self._acked_sent.get(dst, 0):
+            self._acked_sent[dst] = ack
+        return ack
+
+    def acked_sent(self, peer: str) -> int:
+        """Highest cumulative ack this PE has stamped toward ``peer``."""
+        return self._acked_sent.get(peer, 0)
+
+    def on_ack(self, peer: str, ack: int) -> None:
+        """Retire every unacked frame to ``peer`` with seq <= ``ack``
+        (cumulative ACK, piggybacked or standalone)."""
+        q = self._unacked.get(peer)
+        if not q:
+            return
+        while q and q[0][0] <= ack:
+            q.popleft()
+            self.stats.frames_acked += 1
+        if not q:
+            del self._unacked[peer]
+
+    def peer_alive(self, peer: str) -> None:
+        """Any frame from ``peer`` is a sign of life: clear suspicion and
+        re-arm its retransmit timers from now."""
+        if peer not in self._suspect:
+            return
+        self._suspect.discard(peer)
+        for e in self._unacked.get(peer, ()):
+            e[6] = self._tick + self.reliability.rto_after(0)
+            e[7] = 0
+
+    def on_tick(self, tick: int) -> int:
+        """Drive the retransmit clock one tick: resend every due unacked
+        frame (control frames first) with exponential backoff; a frame out
+        of budget escalates its peer to *suspect* via :attr:`on_suspect`
+        and pauses that peer's retransmissions.  Returns frames resent."""
+        self._tick = tick
+        rel = self.reliability
+        if not rel.enabled:
+            return 0
+        resent = 0
+        for dst in list(self._unacked):
+            if dst in self._suspect:
+                continue
+            q = self._unacked[dst]
+            due = [e for e in q if e[6] <= tick]
+            if not due:
+                continue
+            due.sort(key=lambda e: (not e[5], e[0]))  # control first, then seq
+            for e in due:
+                if e[7] >= rel.retransmit_budget:
+                    self._suspect.add(dst)
+                    self.stats.peers_suspected += 1
+                    if self.on_suspect is not None:
+                        self.on_suspect(dst)
+                    break
+                e[7] += 1
+                e[6] = tick + rel.rto_after(e[7])
+                self.stats.retransmits += 1
+                resent += 1
+                try:
+                    # the exact bytes of the first flight — same truncation,
+                    # same seq, same (now possibly stale, harmlessly lower)
+                    # piggybacked ack
+                    self.fabric.put(
+                        self.name, dst, e[1], n_payloads=e[2],
+                        kinds=e[3], hop=e[4],
+                    )
+                except EndpointDead:
+                    self.stats.sends_to_dead += 1
+        return resent
+
+    def send_ack(self, dst: str, ack: int) -> None:
+        """Emit one standalone cumulative-ACK frame (header-only, never
+        sequenced or retransmitted — ACKs are not acked; a lost one is
+        covered by the next piggyback or the sender's retransmit)."""
+        frame = Frame(kind=FrameKind.ACK, name="", payload=b"", ack=ack)
+        if ack > self._acked_sent.get(dst, 0):
+            self._acked_sent[dst] = ack
+        wire = frame.wire_bytes(cached=True)
+        self.stats.acks_sent += 1
+        try:
+            # n_payloads=0: an ACK occupies no receive-buffer credit and is
+            # consumed at ingest without ever entering a lane
+            self.fabric.put(
+                self.name, dst, wire, n_payloads=0, kinds={"header": len(wire)}
+            )
+        except EndpointDead:
+            pass  # the detector owns death attribution
+
+    def suspects(self) -> set[str]:
+        return set(self._suspect)
+
+    def unacked_frames(self, peer: str | None = None) -> int:
+        if peer is not None:
+            return len(self._unacked.get(peer, ()))
+        return sum(len(q) for q in self._unacked.values())
+
+    def forget_peer(self, peer: str) -> None:
+        """Drop every piece of sender-side reliability and queue state for
+        ``peer`` (declared dead or restarted): its retransmit queue, its
+        seq stream, its credit-stalled frames, its suspicion."""
+        dropped = len(self._unacked.pop(peer, ()))
+        self.stats.unacked_dropped += dropped
+        stalled = self._creditq.pop(peer, None)
+        if stalled:
+            self.stats.credit_dropped += len(stalled)
+        self._peer_seq.pop(peer, None)
+        self._acked_sent.pop(peer, None)
+        self._suspect.discard(peer)
 
     def pump(self) -> int:
         """Transmit credit-stalled frames whose window reopened; returns
@@ -166,7 +321,15 @@ class WireLayer:
         if self.batching:
             self._regionq.setdefault(dst, []).extend(writes)
         else:
-            self.fabric.put_region_multi(self.name, dst, writes)
+            try:
+                self.fabric.put_region_multi(self.name, dst, writes)
+            except EndpointDead:
+                if not self.reliability.enabled:
+                    raise
+                # one-sided writes have no retransmit queue (the data lived
+                # in the dispatch that produced it): the requester's CQ
+                # deadline recovers — resubmit or degrade with a mask
+                self.stats.region_write_failures += 1
 
     # --- batched flush ----------------------------------------------------
     def flush(self) -> int:
@@ -210,6 +373,11 @@ class WireLayer:
             try:
                 self.fabric.put_region_multi(self.name, dst, writes)
                 puts += 1
+            except EndpointDead as e:
+                if self.reliability.enabled:
+                    self.stats.region_write_failures += 1
+                else:
+                    errors.append(e)
             except Exception as e:  # noqa: BLE001 - deliver the rest first
                 errors.append(e)
         if puts:

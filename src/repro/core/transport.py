@@ -111,6 +111,10 @@ class TrafficStats:
     hop_frames: int = 0  # PUBLISH frames (propagation hop header on board)
     hop_bytes: int = 0  # wire bytes those publish frames carried
     credit_stalls: int = 0  # sends deferred by an exhausted per-peer window
+    # --- injected loss (set_loss): sender-paid bytes that never arrived ---
+    frames_lost: int = 0  # PUTs the loss model ate (bytes still accounted)
+    lost_bytes: int = 0  # wire bytes those eaten PUTs carried
+    region_writes_lost: int = 0  # one-sided slab writes the loss model ate
     by_kind: dict[str, int] = field(default_factory=dict)  # see BYTE_KINDS
 
     def reset(self) -> None:
@@ -124,6 +128,8 @@ class TrafficStats:
         self.region_guard_drops = 0
         self.hop_frames = self.hop_bytes = 0
         self.credit_stalls = 0
+        self.frames_lost = self.lost_bytes = 0
+        self.region_writes_lost = 0
         self.by_kind = {}
 
     def add_kinds(self, kinds: dict[str, int] | None) -> None:
@@ -169,6 +175,9 @@ class TrafficStats:
             "hop_frames": self.hop_frames,
             "hop_bytes": self.hop_bytes,
             "credit_stalls": self.credit_stalls,
+            "frames_lost": self.frames_lost,
+            "lost_bytes": self.lost_bytes,
+            "region_writes_lost": self.region_writes_lost,
             "wire_bytes_by_kind": self.wire_bytes_by_kind,
         }
 
@@ -307,6 +316,32 @@ class Fabric:
         # receive-buffer occupancy a credit window bounds.
         self._credit_out: dict[tuple[str, str], int] = {}
         self._lock = threading.Lock()
+        # seeded Bernoulli loss injection (set_loss): 0.0 = lossless
+        self._loss_rate = 0.0
+        self._loss_rng: np.random.Generator | None = None
+
+    # loss injection ---------------------------------------------------------
+    def set_loss(self, rate: float, seed: int = 0) -> None:
+        """Arm (or disarm, ``rate=0``) seeded Bernoulli frame loss.
+
+        Each framed PUT and each one-sided region write is independently
+        dropped with probability ``rate`` *after* the sender pays for it
+        (bytes and modeled time are accounted — the NIC sent them; the
+        receiver just never sees them, and no receive credit is consumed).
+        One mechanism shared by the chaos suites and
+        ``benchmarks/reliability.py``; the seeded generator makes every
+        loss schedule reproducible under the deterministic scheduler.
+        """
+        if not 0.0 <= rate < 1.0:
+            raise ValueError(f"loss rate {rate} outside [0, 1)")
+        self._loss_rate = float(rate)
+        self._loss_rng = np.random.default_rng(seed) if rate else None
+
+    def _lose(self) -> bool:
+        return (
+            self._loss_rng is not None
+            and float(self._loss_rng.random()) < self._loss_rate
+        )
 
     def connect(self, name: str) -> Endpoint:
         ep = Endpoint(name)
@@ -339,6 +374,15 @@ class Fabric:
         with self._lock:
             for key in [k for k in self._credit_out if name in k]:
                 self._credit_out.pop(key, None)
+
+    def clear_peer_credits(self, a: str, b: str) -> None:
+        """Drop credit state between one pair of peers, both directions —
+        what a PE that just declared ``b`` dead clears, without touching
+        other senders' windows against ``b`` (each PE's failure detector
+        makes its own call)."""
+        with self._lock:
+            self._credit_out.pop((a, b), None)
+            self._credit_out.pop((b, a), None)
 
     def _target(self, dst: str) -> Endpoint:
         ep = self.endpoints[dst]
@@ -383,9 +427,16 @@ class Fabric:
             if hop:
                 self.stats.hop_frames += 1
                 self.stats.hop_bytes += n
-            self._credit_out[(src, dst)] = (
-                self._credit_out.get((src, dst), 0) + n_payloads
-            )
+            if self._lose():
+                # the sender paid for the bytes but they never land: no
+                # delivery, no receive-buffer occupancy, no credit consumed
+                self.stats.frames_lost += 1
+                self.stats.lost_bytes += n
+                return t
+            if n_payloads:
+                self._credit_out[(src, dst)] = (
+                    self._credit_out.get((src, dst), 0) + n_payloads
+                )
         ep.deliver(wire_bytes, src=src)
         return t
 
@@ -440,7 +491,16 @@ class Fabric:
                 len(writes) - 1
             ) * self.wire.o_us + self.wire.inverse_throughput_us(nbytes)
             self.stats.add_kinds({"region": nbytes})
+            lost = False
             for w in writes:
+                if lost or self._lose():
+                    # a lost WQE segment takes the rest of the chain with
+                    # it: QP delivery is in order, so the fenced doorbell
+                    # on the last segment never fires over a gap — a
+                    # half-landed partial stays invisible until resubmit
+                    lost = True
+                    self.stats.region_writes_lost += 1
+                    continue
                 if w.guard is not None:
                     g_off, g_want = w.guard
                     if ep.read_region_i32(w.region, g_off) != g_want:

@@ -59,6 +59,9 @@ class GatherRequest:
     done: bool = False
     t_submit: float = 0.0
     t_done: float = 0.0
+    valid: np.ndarray | None = None  # (n,) bool; None = all positions valid
+    degraded: bool = False  # completed partially (an owner died)
+    resubmits: int = 0  # deadline-driven re-submissions of this request
 
 
 @dataclass
@@ -131,6 +134,7 @@ class EmbedShardService:
         self.finished: list[GatherRequest] = []
         self._next_rid = 0
         self.batching = False
+        self.ticks = 0  # scheduler rounds driven; also the CQ deadline clock
 
     # ------------------------------------------------------------------ util
     def owner(self, key: int) -> int:
@@ -154,12 +158,43 @@ class EmbedShardService:
         self.queue.append(req)
         return req.rid
 
+    def _dead_peers(self) -> set[str]:
+        """Peers the failure detector has declared dead, from any alive
+        PE's point of view (the client's matters most: it submits)."""
+        dead: set[str] = set()
+        for pe in self.cluster.alive_pes():
+            dead |= pe.progress.detector.dead
+        return dead
+
+    def _entry_server(self, req: GatherRequest, dead: set[str]) -> str | None:
+        """Pick the request's entry server, skipping detector-dead owners.
+        ``None`` means every shard the request touches is dead."""
+        for key in req.keys:
+            name = f"server{self.owner(key)}"
+            if name not in dead:
+                return name
+        return None
+
     def _admit(self) -> int:
         admitted = 0
+        dead = self._dead_peers() if self.cluster.client.reliability.enabled else set()
         while self.queue:
             req = self.queue.popleft()
+            entry = self._entry_server(req, dead)
+            if entry is None:
+                # every owning shard is dead: nothing can serve any key —
+                # complete degraded with an all-invalid mask rather than
+                # submitting into a void
+                req.rows = np.zeros((len(req.keys), self.dim), np.float32)
+                req.valid = np.zeros(len(req.keys), bool)
+                req.degraded = True
+                req.done = True
+                req.t_done = time.perf_counter()
+                self.finished.append(req)
+                admitted += 1
+                continue
             fut = self.cluster.client.submit(
-                f"server{self.owner(req.keys[0])}",
+                entry,
                 "gatherer",
                 self._pad(req.keys),
                 self.cq,
@@ -172,10 +207,55 @@ class EmbedShardService:
                 # requests are untouched; nothing raises mid-batch.
                 self.queue.appendleft(req)
                 break
+            fut.attempts = req.resubmits
             req.future = fut
             self.active[fut.slot] = req
             admitted += 1
         return admitted
+
+    def _recover(self) -> int:
+        """Deadline-driven recovery: each expired in-flight gather either
+        degrades to a partial result (an owning shard is detector-dead —
+        its positions can never arrive) or is resubmitted to the surviving
+        owners (the loss was transient: a dropped one-sided RETURN write
+        has no retransmit queue, so the service layer is the retry).
+        Returns a progress count so recovery rounds read as progress."""
+        rel = self.cluster.client.reliability
+        if not rel.enabled:
+            return 0
+        actions = 0
+        dead = self._dead_peers()
+        for fut in self.cq.expired():
+            req = self.active.get(fut.slot)
+            if req is None:  # not one of ours (foreign submission)
+                continue
+            owners = {f"server{self.owner(k)}" for k in req.keys}
+            if owners & dead:
+                # attributed: an owner died — degrade, don't hang
+                rows, mask = fut.result_partial()
+                req.rows = rows[: len(req.keys)]
+                req.valid = mask[: len(req.keys)]
+                req.degraded = True
+                req.done = True
+                req.t_done = time.perf_counter()
+                self.finished.append(req)
+                del self.active[fut.slot]
+                actions += 1
+                continue
+            # owners all believed alive: transient loss — resubmit
+            del self.active[fut.slot]
+            fut.cancel()
+            req.future = None
+            req.resubmits += 1
+            if req.resubmits > rel.retransmit_budget:
+                raise TimeoutError(
+                    f"gather rid={req.rid} exceeded resubmit budget "
+                    f"({rel.retransmit_budget}): owners {sorted(owners)} "
+                    f"alive but results never arrive"
+                )
+            self.queue.appendleft(req)
+            actions += 1
+        return actions
 
     def _retire(self) -> int:
         retired = 0
@@ -191,29 +271,60 @@ class EmbedShardService:
         return retired
 
     def tick(self) -> int:
-        """One scheduler round: admit -> flush -> poll every PE -> retire.
-        Returns a progress count (admissions + polled messages + retires)."""
+        """One scheduler round: admit -> flush -> poll every PE -> recover
+        -> retire.  Returns a progress count (admissions + polled messages
+        + recovery actions + retires)."""
+        self.ticks += 1
+        self.cq.advance()
         progress = self._admit()
         if self.batching:
             self.cluster.client.flush()
         for pe in self.cluster.alive_pes():
             progress += pe.poll()
+        progress += self._recover()
         progress += self._retire()
         return progress
+
+    def _outstanding_detail(self) -> str:
+        """The attributed tail for the idle-timeout error: which requests
+        are stuck, where, and for how long (satellite of the reliability
+        layer — a bare timeout names nothing actionable)."""
+        now = time.perf_counter()
+        lines = []
+        for slot, req in sorted(self.active.items()):
+            fut = req.future
+            arrived = self.cq._count(slot) if fut is not None else 0
+            owners = sorted({f"server{self.owner(k)}" for k in req.keys})
+            age_t = self.cq.ticks - fut.submit_tick if fut is not None else 0
+            lines.append(
+                f"  slot {slot}: rid={req.rid} arrived={arrived}/"
+                f"{len(req.keys)} owners={owners} age={age_t} ticks "
+                f"({now - req.t_submit:.3f}s) resubmits={req.resubmits}"
+            )
+        if self.queue:
+            lines.append(f"  +{len(self.queue)} queued, never admitted")
+        return "\n".join(lines)
 
     def run(self, max_rounds: int = 1_000_000) -> int:
         """Drive ticks until every queued/active request finished; returns
         the number of rounds.  Raises TimeoutError if the cluster goes idle
         with work outstanding (a lost frame — the fault-injection tests'
-        detection path)."""
+        detection path); under reliability, idleness is tolerated through
+        the recovery horizon plus the CQ deadline before giving up, and
+        the error enumerates every stuck request (slot, owners, ages)."""
+        rel = self.cluster.client.reliability
+        idle_limit = rel.idle_grace() + rel.future_deadline if rel.enabled else 2
         rounds = idle = 0
         while self.queue or self.active:
             if self.tick():
                 idle = 0
             else:
                 idle += 1
-                if idle > 2:
-                    raise TimeoutError("service idle but requests outstanding")
+                if idle > idle_limit:
+                    raise TimeoutError(
+                        "service idle but requests outstanding:\n"
+                        + self._outstanding_detail()
+                    )
             rounds += 1
             if rounds > max_rounds:
                 raise TimeoutError("max_rounds exceeded")

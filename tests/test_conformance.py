@@ -12,12 +12,26 @@ The propagation axis ({flat, tree} x {bitcode, binary} x seeds) runs on
 *fresh* clusters per cell: tree code distribution only differs from flat
 on cold caches, and the claim is twofold — oracle-identical results AND
 strictly fewer client-side code dispatches for the tree.
+
+The loss axis (PR 6) re-runs the whole mode matrix on a lossy fabric
+(``Fabric.set_loss(0.05)``) with ``ReliabilityConfig.on()`` installed:
+the oracle check must still hold bit-identically — no hangs, no
+duplicated/double-applied rows — and in per-message mode the XLA invoke
+count must match the lossless run exactly (retransmits never re-invoke:
+the seq gate is exactly-once into the exec layer).
 """
 
 import numpy as np
 import pytest
 
-from repro.core import Cluster, PointerChaseApp, PropagationConfig, chase_ref
+from repro.core import (
+    Cluster,
+    DataPlaneConfig,
+    PointerChaseApp,
+    PropagationConfig,
+    ReliabilityConfig,
+    chase_ref,
+)
 
 I32 = np.int32
 
@@ -98,3 +112,64 @@ def test_dapc_propagation_conformance(seed, mode, prop):
             if pe.target_cache.lookup_digest(digest) is not None
         )
         assert cluster.client.stats.code_sends < flat_cost  # strictly fewer
+
+
+# ------------------------------------------------------------- loss axis
+LOSS_RATE = 0.05
+
+
+def _lossy_app(seed: int, loss: float) -> tuple:
+    cluster = Cluster(n_servers=4, wire="ideal")
+    app = PointerChaseApp(cluster, n_entries=512, max_slots=16, seed=seed)
+    cluster.set_reliability(ReliabilityConfig.on())
+    cluster.fabric.set_loss(loss, seed=seed + 1)
+    rng = np.random.default_rng(seed + 100)
+    starts = rng.integers(0, app.n_entries, 8).astype(I32)
+    return app, starts
+
+
+@pytest.mark.parametrize("batching", [False, True], ids=["permsg", "batched"])
+@pytest.mark.parametrize("mode", ["bitcode", "binary", "am"])
+@pytest.mark.parametrize("seed", SEEDS, ids=lambda s: f"seed{s}")
+def test_dapc_conformance_under_loss(seed, mode, batching):
+    """Every mode cell survives 5% frame loss bit-identically: recovery is
+    invisible to results, and in per-message mode the invoke count equals
+    the lossless run's — exactly-once, not at-least-once."""
+    depth = 16
+    app, starts = _lossy_app(seed, LOSS_RATE)
+    want = np.array([chase_ref(app.table, s, depth) for s in starts], I32)
+    rep = app.dapc(starts, depth, mode=mode, batching=batching)
+    np.testing.assert_array_equal(
+        rep.results, want, err_msg=f"mode={mode} batching={batching}"
+    )
+    assert app.cluster.fabric.stats.frames_lost > 0  # loss really happened
+    if not batching:
+        ref_app, ref_starts = _lossy_app(seed, 0.0)
+        ref = ref_app.dapc(ref_starts, depth, mode=mode, batching=False)
+        assert rep.invokes == ref.invokes
+
+
+@pytest.mark.parametrize(
+    "plane",
+    ["framed", "zerocopy", "rendezvous"],
+    ids=["framed", "zerocopy", "rndv"],
+)
+def test_gather_conformance_under_loss(plane):
+    """The gather service across every data-plane protocol at 5% loss:
+    oracle-identical rows (lost one-sided RETURN writes are recovered by
+    CQ-deadline resubmission, lost frames by retransmit)."""
+    from repro.runtime.embed_service import EmbedShardService, ragged_batches
+
+    cl = Cluster(n_servers=4, wire="ideal")
+    svc = EmbedShardService(cl, vocab=128, dim=16, n_keys=6, max_slots=8)
+    cl.set_reliability(ReliabilityConfig.on())
+    cl.fabric.set_loss(LOSS_RATE, seed=17)
+    dataplane = {
+        "framed": None,
+        "zerocopy": DataPlaneConfig.zero_copy(eager_max=0),
+        "rendezvous": DataPlaneConfig.rendezvous(rndv_min=1),
+    }[plane]
+    batches = ragged_batches(128, 16, 6, seed=17)
+    rep = svc.gather(batches, dataplane=dataplane)
+    for got, want in zip(rep.results, svc.oracle(batches)):
+        np.testing.assert_array_equal(got, want)

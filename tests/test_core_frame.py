@@ -102,9 +102,11 @@ class TestDelivery:
     payload=st.binary(max_size=512),
     code=st.binary(max_size=2048),
     deps=st.lists(st.sampled_from(["abi:xrdma", "region:t", "cap:m", "returns:r"]), max_size=4),
-    seq=st.integers(min_value=0, max_value=2**63 - 1),
+    # seq and ack share the header's u64 word (low/high 32 bits)
+    seq=st.integers(min_value=0, max_value=2**32 - 1),
+    ack=st.integers(min_value=0, max_value=2**32 - 1),
 )
-def test_frame_roundtrip_property(payload, code, deps, seq):
+def test_frame_roundtrip_property(payload, code, deps, seq, ack):
     f = Frame(
         kind=FrameKind.BITCODE,
         name="prop",
@@ -113,9 +115,12 @@ def test_frame_roundtrip_property(payload, code, deps, seq):
         deps=tuple(dict.fromkeys(deps)),
         digest=np.random.default_rng(0).bytes(32),
         seq=seq,
+        ack=ack,
     )
     g = unpack(f.pack(), has_code=True)
     assert g.payload == payload and g.code == code and g.seq == seq
+    assert g.ack == ack
+    assert peek_header(f.pack()).ack == ack
     assert g.deps == tuple(dict.fromkeys(deps))
     # truncated view always parses as payload-only
     h = unpack(f.wire_bytes(cached=True), has_code=False)
