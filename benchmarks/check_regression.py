@@ -19,6 +19,7 @@ Guarded metrics — "higher is better" unless marked ``<``:
                         hop_ticks_flow (<)
   BENCH_reliability.json  ack_overhead_pct (<), recovery_p95_ticks_rel5 (<),
                         goodput_rel5
+  BENCH_tenancy.json    bg_p95_ratio (<), hot_p95_ratio, shed_accuracy
 
 ``python -m benchmarks.check_regression`` (run from the repo root after
 regenerating the BENCH files); exits non-zero on any regression.
@@ -63,6 +64,14 @@ GUARDS = {
         # ... and recovery under 5% loss must stay fast and productive
         ("recovery_p95_ticks_rel5", False),
         ("goodput_rel5", True),
+    ],
+    "BENCH_tenancy.json": [
+        # background tenants must stay pinned to their solo baseline ...
+        ("bg_p95_ratio", False),
+        # ... because the hot tenant is genuinely throttled ...
+        ("hot_p95_ratio", True),
+        # ... and shedding stays exactly-once (1.0 or bust)
+        ("shed_accuracy", True),
     ],
 }
 

@@ -86,6 +86,14 @@ class Cluster:
             if poll_budget is not ...:
                 pe.poll_budget = poll_budget
 
+    def set_tenant_budgets(self, budgets: dict[str, int] | None) -> None:
+        """Install one per-tenant outgoing-credit budget map on every PE's
+        wire layer (tenant -> payloads in flight; 0/absent = unbudgeted);
+        ``None`` clears all budgets — the untenanted runtime."""
+        budgets = dict(budgets or {})
+        for pe in self.pes():
+            pe.wire.tenant_budgets = dict(budgets)
+
     def set_reliability(self, config: ReliabilityConfig | None) -> None:
         """Install one reliability policy (seq/ack tracking, retransmit
         timers, failure detection) on every PE; ``None`` restores the

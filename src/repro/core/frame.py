@@ -84,6 +84,9 @@ class FrameFlags(IntEnum):
     RESULT = 1  # carries a ReturnResult payload
     BATCH = 2  # PAYLOAD section is a multi-payload pack (see module docstring)
     HOP = 4  # PAYLOAD section starts with a propagation hop header (PUBLISH)
+    EXPRESS = 8  # latency-class hint: drain via the control lane when
+    # self-contained (multi-tenant QoS; flag travels in the existing
+    # flags byte, so pre-QoS receivers parse it unchanged)
 
 
 # 16-byte rendezvous descriptor: [src_peer_index, token, data_nbytes, reserved].
@@ -314,6 +317,9 @@ class Frame:
     ack: int = 0  # piggybacked cumulative ACK (u32; 0 = nothing to ack)
     flags: int = FrameFlags.NONE
     version: int = 1
+    # local scheduling metadata, never serialized: which tenant's budget
+    # this frame charges against (None = untenanted / infrastructure)
+    tenant: str | None = None
 
     @property
     def n_payloads(self) -> int:
@@ -516,6 +522,7 @@ def coalesce(frames: "list[Frame]") -> Frame:
         digest=head.digest,
         seq=frames[-1].seq,
         flags=head.flags | FrameFlags.BATCH,
+        tenant=head.tenant,
     )
 
 

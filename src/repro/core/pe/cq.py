@@ -80,6 +80,10 @@ class CompletionQueue:
         pe.register_region(region, np.zeros((max_slots, 2 + self.width), np.int32))
         self._free: deque[int] = deque(range(max_slots))
         self._inflight: dict[int, "GatherFuture"] = {}
+        # per-tag (tenant) slot occupancy, for quota-bounded admission:
+        # how many in-flight slots each tag currently holds
+        self._tag_inflight: dict[str, int] = {}
+        self._slot_tag: dict[int, str] = {}
         # deadline clock: advanced by the driving scheduler (one per service
         # tick); futures submitted under reliability expire against it
         self.ticks = 0
@@ -94,12 +98,24 @@ class CompletionQueue:
         return [f for f in list(self._inflight.values()) if f.expired()]
 
     # -- slot lifecycle ----------------------------------------------------
-    def try_alloc(self) -> tuple[int, int] | None:
+    def try_alloc(
+        self, tag: str | None = None, quota: int = 0
+    ) -> tuple[int, int] | None:
         """Take a free slot and advance its generation; -> (slot, epoch),
-        or ``None`` when every slot is in flight (would-block)."""
+        or ``None`` when every slot is in flight (would-block).
+
+        ``tag``/``quota`` add per-tenant admission control: with a quota
+        set, a tag already holding ``quota`` in-flight slots is refused
+        (the same would-block ``None``) even while global slots remain —
+        one tenant cannot monopolize the completion queue."""
+        if tag is not None and quota > 0 and self._tag_inflight.get(tag, 0) >= quota:
+            return None
         if not self._free:
             return None
         slot = self._free.popleft()
+        if tag is not None:
+            self._tag_inflight[tag] = self._tag_inflight.get(tag, 0) + 1
+            self._slot_tag[slot] = tag
         arr = self.pe.region(self.region)
         epoch = int(arr[slot, 1]) + 1
         arr[slot, 0] = 0
@@ -124,11 +140,22 @@ class CompletionQueue:
         # count/data cleared on next alloc; the epoch stays, so RETURNs
         # still in flight for the retired generation mismatch and drop
         self._inflight.pop(slot, None)
+        tag = self._slot_tag.pop(slot, None)
+        if tag is not None:
+            left = self._tag_inflight.get(tag, 0) - 1
+            if left > 0:
+                self._tag_inflight[tag] = left
+            else:
+                self._tag_inflight.pop(tag, None)
         self._free.append(slot)
 
     @property
     def free_slots(self) -> int:
         return len(self._free)
+
+    def tag_inflight(self, tag: str) -> int:
+        """In-flight slots currently held by ``tag`` (tenant occupancy)."""
+        return self._tag_inflight.get(tag, 0)
 
     def _count(self, slot: int) -> int:
         """Distinct results arrived: popcount of the position bitmask."""

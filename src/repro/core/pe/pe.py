@@ -20,7 +20,7 @@ capability/region linking — plus the source-side API (``send_ifunc``,
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
 import jax
@@ -83,10 +83,19 @@ class PEStats:
     region_write_failures: int = 0  # one-sided bursts absorbed against a dead peer
     rndv_dead_pulls: int = 0  # rendezvous pulls whose source died pre-GET
     jit_ms_total: float = 0.0
+    # --- multi-tenant QoS (wire layer) ---
+    tenant_sends: dict = field(default_factory=dict)  # frames sent, per tenant
+    tenant_stalls: dict = field(default_factory=dict)  # budget stalls, per tenant
+
+    def bump_tenant(self, which: str, tenant: str, n: int = 1) -> None:
+        d = self.tenant_sends if which == "sends" else self.tenant_stalls
+        d[tenant] = d.get(tenant, 0) + n
 
     def as_dict(self) -> dict[str, float]:
         d = self.__dict__.copy()
         d["jit_ms_total"] = round(self.jit_ms_total, 3)
+        d["tenant_sends"] = dict(self.tenant_sends)
+        d["tenant_stalls"] = dict(self.tenant_stalls)
         return d
 
 
@@ -288,11 +297,26 @@ class PE:
     # stable alias: pre-layering callers reached the private spelling
     _resolve_source = resolve_source
 
-    def send_ifunc(self, dst: str, name: str, payload: np.ndarray | bytes) -> int:
-        """Create and PUT an ifunc message; returns wire bytes sent."""
+    def send_ifunc(
+        self,
+        dst: str,
+        name: str,
+        payload: np.ndarray | bytes,
+        *,
+        express: bool = False,
+        tenant: str | None = None,
+    ) -> int:
+        """Create and PUT an ifunc message; returns wire bytes sent.
+
+        ``express`` flags the frame for control-lane drain priority at the
+        receiver (it still consumes credits); ``tenant`` charges the frame
+        against that tenant's credit budget and traffic counters."""
         ifunc = self.resolve_source(name)
         pay = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
         frame = ifunc.make_frame(pay, seq=self.wire.next_seq())
+        if express:
+            frame.flags = int(frame.flags) | int(FrameFlags.EXPRESS)
+        frame.tenant = tenant
         return self.wire.put_frame(dst, frame)
 
     def send_am(self, dst: str, name: str, payload: np.ndarray | bytes) -> int:
@@ -445,11 +469,22 @@ class PE:
         body: np.ndarray,
         queue: CompletionQueue,
         expected: int,
+        *,
+        express: bool = False,
+        tenant: str | None = None,
+        slot_quota: int = 0,
     ) -> GatherFuture | None:
         """Submit a completion-tracked X-RDMA op and return its future —
         or ``None`` (would-block) when every completion-queue slot is in
         flight, so a saturated queue backpressures admission instead of
         raising mid-batch.
+
+        Multi-tenant QoS: ``tenant`` tags the request's frames with the
+        budget they charge, ``express`` requests control-lane drain
+        priority, and ``slot_quota`` caps how many CQ slots this tenant
+        may hold concurrently (the same would-block ``None`` contract as
+        global saturation, so per-tenant admission control composes with
+        the existing backpressure loop).
 
         The completion-queue wire convention: the runtime prepends the
         routing header ``[requester, slot, epoch]`` to the caller's
@@ -462,7 +497,7 @@ class PE:
         several out-of-order RETURNs from different PEs — before the
         future reads done.
         """
-        alloc = queue.try_alloc()
+        alloc = queue.try_alloc(tag=tenant, quota=slot_quota)
         if alloc is None:
             return None
         slot, epoch = alloc
@@ -476,7 +511,7 @@ class PE:
         )
         queue._inflight[slot] = fut
         try:
-            self.send_ifunc(dst, name, payload)
+            self.send_ifunc(dst, name, payload, express=express, tenant=tenant)
         except Exception:
             fut.cancel()  # a failed send must not leak the slot
             raise

@@ -50,6 +50,7 @@ from ..frame import (
     unpack_rndv,
     uvarint_decode,
 )
+from ..liveness import HeartbeatMonitor
 from ..propagate import tree_children
 from ..transport import EndpointDead
 from .codecache import ISAMismatch
@@ -64,7 +65,7 @@ if TYPE_CHECKING:  # pragma: no cover - annotations only
 class FailureDetector:
     """Suspect-gated peer-death detection on the progress-engine tick.
 
-    This folds :class:`repro.runtime.monitor.HeartbeatMonitor` into the
+    This folds :class:`repro.core.liveness.HeartbeatMonitor` into the
     poll loop: the tick counter is the clock (``interval_s=1`` tick), every
     ingested frame from a peer is its heartbeat, and — the gate — only
     peers the wire layer escalated to *suspect* (retransmit budget
@@ -76,11 +77,6 @@ class FailureDetector:
     """
 
     def __init__(self, max_misses: int = 3) -> None:
-        # deferred import: repro.runtime's package __init__ imports the
-        # service layer, which imports repro.core — a cycle at module
-        # import time, but not by the time a PE is constructed
-        from ...runtime.monitor import HeartbeatMonitor
-
         self.monitor = HeartbeatMonitor(interval_s=1.0, max_misses=max_misses)
         self.suspects: set[str] = set()
 
@@ -235,26 +231,38 @@ class ProgressEngine:
         return st[0] if st is not None else 0
 
     def _is_control(self, raw: bytes) -> bool:
-        """Control-lane admission: hop frames and rendezvous descriptors —
-        but only when they are *self-contained*.  A digest-only hop whose
-        code this PE does not hold yet, or a descriptor for an uninstalled
-        ifunc, depends on an earlier code-carrying data frame; promoting it
-        past that frame would turn the sender-cache truncation protocol's
-        in-order assumption into a spurious stale-cache refusal, so those
-        stay in FIFO order with the data lane."""
+        """Control-lane admission: hop frames, rendezvous descriptors, and
+        EXPRESS-flagged tenant frames — but only when they are
+        *self-contained*.  A digest-only frame whose code this PE does not
+        hold yet, or a descriptor for an uninstalled ifunc, depends on an
+        earlier code-carrying data frame; promoting it past that frame
+        would turn the sender-cache truncation protocol's in-order
+        assumption into a spurious stale-cache refusal, so those stay in
+        FIFO order with the data lane.  EXPRESS is a receive-side drain
+        priority only: the frames still consumed credits at the sender
+        (see :mod:`repro.core.pe.wire`)."""
         try:
             hdr = peek_header(raw)
         except CorruptFrame:
             return False  # the error surfaces when the frame is processed
-        if hdr is None or not is_control(int(hdr.kind), int(hdr.flags)):
+        if hdr is None:
             return False
-        if hdr.flags & FrameFlags.HOP:
+        if is_control(int(hdr.kind), int(hdr.flags)):
+            if hdr.flags & FrameFlags.HOP:
+                has_code = len(raw) >= hdr.full_total and hdr.code_len > 0
+                return has_code or (
+                    self.codecache.cache.lookup_digest(hdr.digest.hex()) is not None
+                )
+            # rendezvous descriptors never carry code: the exe must be resident
+            return self.codecache.cache.has_name(hdr.name)
+        if hdr.flags & FrameFlags.EXPRESS:
+            # an express tenant frame drains ahead of bulk data when it is
+            # self-contained (code on board or already resident)
             has_code = len(raw) >= hdr.full_total and hdr.code_len > 0
             return has_code or (
                 self.codecache.cache.lookup_digest(hdr.digest.hex()) is not None
             )
-        # rendezvous descriptors never carry code: the exe must be resident
-        return self.codecache.cache.has_name(hdr.name)
+        return False
 
     def pending(self) -> int:
         """Frames held in the engine's lanes (ingested, not yet processed)."""

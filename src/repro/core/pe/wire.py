@@ -17,6 +17,17 @@ progress engine processes the frames, and the sender's next
 frames — PUBLISH hops and rendezvous descriptors — never consume credits:
 they are small, latency-critical, and starving them behind bulk data is
 exactly the priority inversion the lane/credit design removes.
+
+Multi-tenant QoS (:attr:`WireLayer.tenant_budgets`): a frame tagged with a
+tenant additionally charges that tenant's slice of the sender's outgoing
+occupancy (the fabric's per-tenant ledger).  A tenant over its budget
+stalls *its own* frames in a per-(destination, tenant) queue — other
+tenants' frames to the same peer keep flowing, which is the isolation
+property.  Stalled frames are unsequenced (seqs are assigned at transmit
+time), so cross-tenant reordering at one destination is invisible to the
+reliability layer's per-peer streams.  EXPRESS-flagged frames still
+consume credits and budgets — the flag only buys drain priority at the
+receiver (see :mod:`repro.core.pe.progress`), never window exemption.
 """
 
 from __future__ import annotations
@@ -70,10 +81,15 @@ class WireLayer:
         self.batching = False  # batched runtime: queue sends for flush()
         self.caching_enabled = True  # benchmark switch: uncached mode
         self.credit_window = 0  # 0 = flow control off (unlimited window)
+        # tenant -> outgoing-payload budget (0/absent = unbudgeted); the
+        # per-tenant carve-out of the receive-window occupancy
+        self.tenant_budgets: dict[str, int] = {}
         self._seq = 0
         self._sendq: dict[str, list[Frame]] = {}  # per-destination pending frames
         self._regionq: dict[str, list[RegionWrite]] = {}  # pending one-sided writes
-        self._creditq: dict[str, deque[Frame]] = {}  # frames awaiting credits
+        # frames awaiting credits, one FIFO lane per (dst, tenant) so a
+        # stalled tenant never heads-of-line-blocks its neighbours
+        self._creditq: dict[tuple[str, str | None], deque[Frame]] = {}
         self._rndv_tokens: deque[str] = deque()  # staged rendezvous regions (ring)
         self._rndv_seq = 0
         # --- reliability (sender half; receiver half in progress.py) ---
@@ -112,25 +128,40 @@ class WireLayer:
         return self.put_now(dst, frame)
 
     def put_now(self, dst: str, frame: Frame) -> int:
-        """PUT one frame, honouring the credit window.
+        """PUT one frame, honouring the credit window and tenant budget.
 
         Control frames (hop headers, rendezvous descriptors) always
-        transmit; a data frame beyond the window — or behind earlier
-        stalled frames, so per-destination FIFO order holds — queues
-        locally and travels on a later :meth:`pump`.  Returns wire bytes
-        sent (0 when credit-queued).
+        transmit; a data frame beyond the peer window or its tenant's
+        budget — or behind earlier stalled frames of the same (dst,
+        tenant) lane, so per-lane FIFO order holds — queues locally and
+        travels on a later :meth:`pump`.  Returns wire bytes sent (0 when
+        credit-queued).
         """
-        if not is_control(int(frame.kind), int(frame.flags)) and self.credit_window:
-            stalled = self._creditq.get(dst)
-            if stalled or not self._credit_ok(dst):
-                self._creditq.setdefault(dst, deque()).append(frame)
+        if not is_control(int(frame.kind), int(frame.flags)):
+            lane = (dst, frame.tenant)
+            window_full = bool(self.credit_window) and not self._credit_ok(dst)
+            budget_full = not self._tenant_ok(frame.tenant)
+            if self._creditq.get(lane) or window_full or budget_full:
+                self._creditq.setdefault(lane, deque()).append(frame)
                 self.stats.credit_stalls += 1
                 self.fabric.stats.credit_stalls += 1
+                if budget_full:
+                    ts = self.fabric.stats.tenant_stalls
+                    ts[frame.tenant] = ts.get(frame.tenant, 0) + 1
+                    self.stats.bump_tenant("stalls", frame.tenant)
                 return 0
         return self._transmit(dst, frame)
 
     def _credit_ok(self, dst: str) -> bool:
         return self.fabric.credit_outstanding(self.name, dst) < self.credit_window
+
+    def _tenant_ok(self, tenant: str | None) -> bool:
+        if tenant is None:
+            return True
+        budget = self.tenant_budgets.get(tenant, 0)
+        if not budget:
+            return True
+        return self.fabric.tenant_outstanding(self.name, tenant) < budget
 
     def _transmit(self, dst: str, frame: Frame) -> int:
         if frame.kind in (FrameKind.ACTIVE_MESSAGE, FrameKind.RNDV):
@@ -159,12 +190,14 @@ class WireLayer:
             self._unacked.setdefault(dst, deque()).append([
                 frame.seq, wire, frame.n_payloads, kinds, hop,
                 is_control(int(frame.kind), int(frame.flags)),
-                self._tick + rel.rto_after(0), 0,
+                self._tick + rel.rto_after(0), 0, frame.tenant,
             ])
+        if frame.tenant is not None:
+            self.stats.bump_tenant("sends", frame.tenant)
         try:
             self.fabric.put(
                 self.name, dst, wire, n_payloads=frame.n_payloads,
-                kinds=kinds, hop=hop,
+                kinds=kinds, hop=hop, tenant=frame.tenant,
             )
         except EndpointDead:
             if not tracked:
@@ -242,10 +275,11 @@ class WireLayer:
                 try:
                     # the exact bytes of the first flight — same truncation,
                     # same seq, same (now possibly stale, harmlessly lower)
-                    # piggybacked ack
+                    # piggybacked ack; the tenant pays for its own
+                    # retransmissions (they occupy the same receive buffer)
                     self.fabric.put(
                         self.name, dst, e[1], n_payloads=e[2],
-                        kinds=e[3], hop=e[4],
+                        kinds=e[3], hop=e[4], tenant=e[8],
                     )
                 except EndpointDead:
                     self.stats.sends_to_dead += 1
@@ -283,22 +317,28 @@ class WireLayer:
         seq stream, its credit-stalled frames, its suspicion."""
         dropped = len(self._unacked.pop(peer, ()))
         self.stats.unacked_dropped += dropped
-        stalled = self._creditq.pop(peer, None)
-        if stalled:
-            self.stats.credit_dropped += len(stalled)
+        for lane in [k for k in self._creditq if k[0] == peer]:
+            self.stats.credit_dropped += len(self._creditq.pop(lane))
         self._peer_seq.pop(peer, None)
         self._acked_sent.pop(peer, None)
         self._suspect.discard(peer)
 
     def pump(self) -> int:
-        """Transmit credit-stalled frames whose window reopened; returns
-        the number sent.  A destination that died while frames were queued
-        loses exactly its own queue (the fabric's loss model — those
-        frames were in flight), counted in ``stats.credit_dropped``."""
+        """Transmit credit-stalled frames whose window (and tenant budget)
+        reopened; returns the number sent.  Lanes drain independently —
+        one tenant's backlog never gates another's.  A destination that
+        died while frames were queued loses exactly its own lanes (the
+        fabric's loss model — those frames were in flight), counted in
+        ``stats.credit_dropped``."""
         sent = 0
-        for dst in list(self._creditq):
-            q = self._creditq[dst]
-            while q and self._credit_ok(dst):
+        for lane in list(self._creditq):
+            dst, tenant = lane
+            q = self._creditq[lane]
+            while (
+                q
+                and (not self.credit_window or self._credit_ok(dst))
+                and self._tenant_ok(tenant)
+            ):
                 frame = q.popleft()
                 try:
                     self._transmit(dst, frame)
@@ -307,12 +347,22 @@ class WireLayer:
                     self.stats.credit_dropped += 1 + len(q)
                     q.clear()
             if not q:
-                del self._creditq[dst]
+                del self._creditq[lane]
         return sent
 
-    def queued_credit_frames(self, dst: str | None = None) -> int:
+    def queued_credit_frames(
+        self, dst: str | None = None, tenant: str | None = None
+    ) -> int:
         if dst is not None:
-            return len(self._creditq.get(dst, ()))
+            return sum(
+                len(q)
+                for lane, q in self._creditq.items()
+                if lane[0] == dst and (tenant is None or lane[1] == tenant)
+            )
+        if tenant is not None:
+            return sum(
+                len(q) for lane, q in self._creditq.items() if lane[1] == tenant
+            )
         return sum(len(q) for q in self._creditq.values())
 
     # --- one-sided writes -------------------------------------------------
@@ -353,16 +403,19 @@ class WireLayer:
             # defined and xrdma plen varies, so same-name frames can be
             # ragged — those travel as separate coalesced PUTs), preserving
             # first-seen order.  PUBLISH hop frames never coalesce: each
-            # carries its own per-edge path header.
-            groups: dict[tuple[int, str, bytes, int, int], list[Frame]] = {}
+            # carries its own per-edge path header.  EXPRESS and tenant are
+            # part of the key: a coalesced frame has one lane class and one
+            # budget to charge, so mixed-QoS bursts travel separately.
+            groups: dict[tuple[int, str, bytes, int, int, str | None], list[Frame]] = {}
             for f in frames:
                 key = (
                     int(f.kind), f.name, f.digest, len(f.payload),
-                    int(f.flags) & FrameFlags.HOP,
+                    int(f.flags) & (FrameFlags.HOP | FrameFlags.EXPRESS),
+                    f.tenant,
                 )
                 groups.setdefault(key, []).append(f)
             for key, members in groups.items():
-                batch = [coalesce(members)] if not key[4] else members
+                batch = [coalesce(members)] if not key[4] & FrameFlags.HOP else members
                 for frame in batch:
                     try:
                         if self.put_now(dst, frame):

@@ -111,6 +111,11 @@ class TrafficStats:
     hop_frames: int = 0  # PUBLISH frames (propagation hop header on board)
     hop_bytes: int = 0  # wire bytes those publish frames carried
     credit_stalls: int = 0  # sends deferred by an exhausted per-peer window
+    # --- per-tenant accounting (multi-tenant QoS; untenanted traffic is
+    # not broken out — it is the difference against the aggregates) ---
+    tenant_puts: dict[str, int] = field(default_factory=dict)
+    tenant_put_bytes: dict[str, int] = field(default_factory=dict)
+    tenant_stalls: dict[str, int] = field(default_factory=dict)  # budget stalls
     # --- injected loss (set_loss): sender-paid bytes that never arrived ---
     frames_lost: int = 0  # PUTs the loss model ate (bytes still accounted)
     lost_bytes: int = 0  # wire bytes those eaten PUTs carried
@@ -131,6 +136,9 @@ class TrafficStats:
         self.frames_lost = self.lost_bytes = 0
         self.region_writes_lost = 0
         self.by_kind = {}
+        self.tenant_puts = {}
+        self.tenant_put_bytes = {}
+        self.tenant_stalls = {}
 
     def add_kinds(self, kinds: dict[str, int] | None) -> None:
         for k, v in (kinds or {}).items():
@@ -179,6 +187,9 @@ class TrafficStats:
             "lost_bytes": self.lost_bytes,
             "region_writes_lost": self.region_writes_lost,
             "wire_bytes_by_kind": self.wire_bytes_by_kind,
+            "tenant_puts": dict(self.tenant_puts),
+            "tenant_put_bytes": dict(self.tenant_put_bytes),
+            "tenant_stalls": dict(self.tenant_stalls),
         }
 
 
@@ -315,6 +326,15 @@ class Fabric:
         # receiver's progress engine processes them.  This is the
         # receive-buffer occupancy a credit window bounds.
         self._credit_out: dict[tuple[str, str], int] = {}
+        # per-tenant slice of that occupancy: a FIFO ledger of
+        # [tenant, n_payloads] entries per (src, dst) link, plus the
+        # aggregate per-(src, tenant) outstanding count a tenant budget
+        # bounds.  Attribution on credit_return is FIFO — exact when the
+        # receiver drains in order, approximate under lane reordering,
+        # but conserved either way: a tenant's count only ever drains by
+        # what it deposited.
+        self._tenant_fifo: dict[tuple[str, str], deque] = {}
+        self._tenant_out: dict[tuple[str, str], int] = {}
         self._lock = threading.Lock()
         # seeded Bernoulli loss injection (set_loss): 0.0 = lossless
         self._loss_rate = 0.0
@@ -354,6 +374,34 @@ class Fabric:
         """Payloads PUT by ``src`` that ``dst`` has not yet processed."""
         return self._credit_out.get((src, dst), 0)
 
+    def tenant_outstanding(self, src: str, tenant: str) -> int:
+        """Payloads PUT by ``src`` on ``tenant``'s behalf (any destination)
+        not yet processed — what a per-tenant credit budget bounds."""
+        return self._tenant_out.get((src, tenant), 0)
+
+    def _tenant_credit(self, src: str, tenant: str, delta: int) -> None:
+        # lock held by caller
+        key = (src, tenant)
+        left = self._tenant_out.get(key, 0) + delta
+        if left > 0:
+            self._tenant_out[key] = left
+        else:
+            self._tenant_out.pop(key, None)
+
+    def _drain_tenant_fifo(self, key: tuple[str, str], n: int) -> None:
+        # lock held by caller; attribute n retired payloads FIFO-first
+        fifo = self._tenant_fifo.get(key)
+        while n > 0 and fifo:
+            entry = fifo[0]  # mutable [tenant, n_payloads]
+            take = min(entry[1], n)
+            entry[1] -= take
+            n -= take
+            self._tenant_credit(key[0], entry[0], -take)
+            if entry[1] == 0:
+                fifo.popleft()
+        if fifo is not None and not fifo:
+            self._tenant_fifo.pop(key, None)
+
     def credit_return(self, src: str, dst: str, n: int = 1) -> None:
         """Release ``n`` receive credits from ``dst`` back to ``src``
         (called by the receiver's progress engine as frames retire)."""
@@ -366,6 +414,13 @@ class Fabric:
                 self._credit_out[key] = left
             else:
                 self._credit_out.pop(key, None)
+            self._drain_tenant_fifo(key, n)
+
+    def _release_tenant_fifo(self, key: tuple[str, str]) -> None:
+        # lock held by caller; give every ledgered payload on this link
+        # back to its tenant (the frames themselves are gone)
+        for tenant, count in self._tenant_fifo.pop(key, ()):
+            self._tenant_credit(key[0], tenant, -count)
 
     def _clear_credits(self, name: str) -> None:
         """Drop all credit state involving ``name`` (its frames are gone —
@@ -374,6 +429,8 @@ class Fabric:
         with self._lock:
             for key in [k for k in self._credit_out if name in k]:
                 self._credit_out.pop(key, None)
+            for key in [k for k in self._tenant_fifo if name in k]:
+                self._release_tenant_fifo(key)
 
     def clear_peer_credits(self, a: str, b: str) -> None:
         """Drop credit state between one pair of peers, both directions —
@@ -383,6 +440,8 @@ class Fabric:
         with self._lock:
             self._credit_out.pop((a, b), None)
             self._credit_out.pop((b, a), None)
+            self._release_tenant_fifo((a, b))
+            self._release_tenant_fifo((b, a))
 
     def _target(self, dst: str) -> Endpoint:
         ep = self.endpoints[dst]
@@ -399,6 +458,7 @@ class Fabric:
         n_payloads: int = 1,
         kinds: dict[str, int] | None = None,
         hop: bool = False,
+        tenant: str | None = None,
     ) -> float:
         """One-sided PUT of a (possibly truncated, possibly coalesced) frame.
 
@@ -410,7 +470,9 @@ class Fabric:
         benchmarks can report it.  ``kinds`` attributes the bytes across
         :data:`BYTE_KINDS` (omitted = all counted as payload).  ``hop``
         marks a propagation PUBLISH frame (hop header on board) so tree
-        multicasts are visible in the fabric accounting.
+        multicasts are visible in the fabric accounting.  ``tenant`` charges
+        the frame's payloads against that tenant's credit ledger (and its
+        per-tenant traffic counters) — multi-tenant QoS accounting.
         """
         ep = self._target(dst)
         n = len(wire_bytes)
@@ -427,6 +489,11 @@ class Fabric:
             if hop:
                 self.stats.hop_frames += 1
                 self.stats.hop_bytes += n
+            if tenant is not None:
+                tp = self.stats.tenant_puts
+                tp[tenant] = tp.get(tenant, 0) + 1
+                tb = self.stats.tenant_put_bytes
+                tb[tenant] = tb.get(tenant, 0) + n
             if self._lose():
                 # the sender paid for the bytes but they never land: no
                 # delivery, no receive-buffer occupancy, no credit consumed
@@ -437,6 +504,11 @@ class Fabric:
                 self._credit_out[(src, dst)] = (
                     self._credit_out.get((src, dst), 0) + n_payloads
                 )
+                if tenant is not None:
+                    self._tenant_fifo.setdefault((src, dst), deque()).append(
+                        [tenant, n_payloads]
+                    )
+                    self._tenant_credit(src, tenant, n_payloads)
         ep.deliver(wire_bytes, src=src)
         return t
 

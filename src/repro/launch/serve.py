@@ -22,6 +22,14 @@ def main() -> int:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--remote-embed",
+        action="store_true",
+        help="serving-tier mode: fetch embedding rows from an embedding-shard "
+        "service (CQ gathers over the PE fabric) instead of a local lookup "
+        "(tests/test_tenancy.py pins the streams bit-identical)",
+    )
+    ap.add_argument("--embed-servers", type=int, default=2)
     args = ap.parse_args()
 
     import jax
@@ -59,7 +67,18 @@ def main() -> int:
         return _head(cfg, params, h[:, -1:, :])[:, -1, :], cache
 
     prefill = jax.jit(prefill_fn)
-    serve = jax.jit(make_serve_step(cfg))
+    serve = jax.jit(make_serve_step(cfg, remote_embed=args.remote_embed))
+
+    embed_client = None
+    if args.remote_embed:
+        from repro.runtime.tenancy import RemoteEmbedClient
+
+        embed_client = RemoteEmbedClient(
+            np.asarray(params["embed.tok"], np.float32),
+            n_servers=args.embed_servers,
+        )
+        batch = dict(batch)
+        batch["token_rows"] = jnp.asarray(embed_client.rows(np.asarray(batch["tokens"])))
 
     t0 = time.perf_counter()
     logits, cache = jax.block_until_ready(prefill(params, batch))
@@ -70,7 +89,13 @@ def main() -> int:
     t0 = time.perf_counter()
     for i in range(args.gen):
         toks.append(np.asarray(tok[:, 0]))
-        logits, cache = serve(params, cache, tok, jnp.int32(args.prompt_len + i))
+        if embed_client is not None:
+            rows = jnp.asarray(embed_client.rows(np.asarray(tok)))
+            logits, cache = serve(
+                params, cache, tok, jnp.int32(args.prompt_len + i), rows
+            )
+        else:
+            logits, cache = serve(params, cache, tok, jnp.int32(args.prompt_len + i))
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     jax.block_until_ready(logits)
     t_decode = time.perf_counter() - t0
@@ -88,6 +113,10 @@ def main() -> int:
         "decode_tok_s": round(args.batch * args.gen / t_decode),
         "sample_ids": gen[0, :8].tolist(),
     }
+    if embed_client is not None:
+        out["remote_embed"] = True
+        out["embed_servers"] = args.embed_servers
+        out["embed_gathers"] = embed_client.gathers
     print(json.dumps(out))
     return 0
 

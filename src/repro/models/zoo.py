@@ -129,9 +129,16 @@ def forward(
             b_axes = d
         if "model" not in mesh.axis_names:
             mode = "plain"
-    x = embed_tokens(
-        params["embed.tok"], tokens, mode=mode, mesh=mesh, batch_axes=b_axes
-    )
+    if "token_rows" in batch:
+        # serving-tier bypass: embedding rows were gathered remotely
+        # (CQ futures over the PE fabric) instead of looked up here —
+        # rows arrive pre-lookup, so the rest of the pipeline (embed_mult,
+        # frontends, blocks) is shared with the local-embed path
+        x = batch["token_rows"].astype(cfg.dtype)
+    else:
+        x = embed_tokens(
+            params["embed.tok"], tokens, mode=mode, mesh=mesh, batch_axes=b_axes
+        )
     if cfg.embed_mult != 1.0:
         x = (x.astype(jnp.float32) * cfg.embed_mult).astype(x.dtype)
     if cfg.frontend == "patch" and "patch_embeds" in batch:
@@ -421,8 +428,29 @@ def make_prefill_step(cfg: ModelConfig, mesh=None) -> Callable:
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig, mesh=None) -> Callable:
-    """One decode step: next-token logits + updated cache."""
+def make_serve_step(cfg: ModelConfig, mesh=None, remote_embed: bool = False) -> Callable:
+    """One decode step: next-token logits + updated cache.
+
+    ``remote_embed`` builds the serving-tier variant whose embedding rows
+    are fetched off-host (gathered via CQ futures over the PE fabric,
+    see :class:`repro.runtime.tenancy.RemoteEmbedClient`): the step takes
+    an extra ``rows`` argument — ``(B, S, D)`` pre-lookup embedding rows —
+    and never touches ``params["embed.tok"]`` for the lookup, so the two
+    variants produce bit-identical streams when fed the same rows."""
+
+    if remote_embed:
+
+        def serve_step_remote(
+            params: Params, cache: Any, tokens: jax.Array, pos: jax.Array,
+            rows: jax.Array,
+        ):
+            logits, cache, _ = forward(
+                cfg, params, {"tokens": tokens, "token_rows": rows},
+                caches=cache, offset=pos, mesh=mesh,
+            )
+            return logits[:, -1, :], cache
+
+        return serve_step_remote
 
     def serve_step(params: Params, cache: Any, tokens: jax.Array, pos: jax.Array):
         logits, cache, _ = forward(

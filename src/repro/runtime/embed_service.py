@@ -62,6 +62,11 @@ class GatherRequest:
     valid: np.ndarray | None = None  # (n,) bool; None = all positions valid
     degraded: bool = False  # completed partially (an owner died)
     resubmits: int = 0  # deadline-driven re-submissions of this request
+    # --- multi-tenant QoS (set by the serving tier's router) ---
+    tenant: str | None = None  # whose credit budget the frames charge
+    express: bool = False  # control-lane drain priority at the servers
+    slot_quota: int = 0  # max CQ slots this tenant may hold (0 = uncapped)
+    t_admit: float = 0.0  # when the request last entered the fabric
 
 
 @dataclass
@@ -96,6 +101,7 @@ class EmbedShardService:
         max_slots: int = 64,
         seed: int = 0,
         table: np.ndarray | None = None,
+        strict_recovery: bool = False,
     ) -> None:
         if vocab % cluster.n_servers:
             raise ValueError("vocab must divide evenly across servers")
@@ -104,6 +110,9 @@ class EmbedShardService:
         self.dim = dim
         self.n_keys = n_keys
         self.max_slots = max_slots
+        # strict_recovery: resubmit-budget exhaustion raises (after the
+        # recovery sweep completes) instead of silently degrading
+        self.strict_recovery = strict_recovery
         self.rows_per_shard = vocab // cluster.n_servers
         if table is None:
             rng = np.random.default_rng(seed)
@@ -146,14 +155,27 @@ class EmbedShardService:
         return padded
 
     # ------------------------------------------------------------------- API
-    def submit(self, keys: np.ndarray) -> int:
-        """Queue one gather request (a batch of up to ``n_keys`` row ids)."""
+    def submit(
+        self,
+        keys: np.ndarray,
+        tenant: str | None = None,
+        express: bool = False,
+        slot_quota: int = 0,
+    ) -> int:
+        """Queue one gather request (a batch of up to ``n_keys`` row ids).
+
+        ``tenant``/``express``/``slot_quota`` thread the serving tier's
+        per-tenant QoS down to the PE runtime: credit-budget attribution,
+        control-lane drain priority, and CQ-slot admission quota."""
         keys = np.asarray(keys, np.int32)
         if not (1 <= len(keys) <= self.n_keys):
             raise ValueError(f"request must carry 1..{self.n_keys} keys")
         if keys.min() < 0 or keys.max() >= self.vocab:
             raise ValueError("key out of table range")
-        req = GatherRequest(self._next_rid, keys, t_submit=time.perf_counter())
+        req = GatherRequest(
+            self._next_rid, keys, t_submit=time.perf_counter(),
+            tenant=tenant, express=express, slot_quota=slot_quota,
+        )
         self._next_rid += 1
         self.queue.append(req)
         return req.rid
@@ -178,6 +200,7 @@ class EmbedShardService:
     def _admit(self) -> int:
         admitted = 0
         dead = self._dead_peers() if self.cluster.client.reliability.enabled else set()
+        held: list[GatherRequest] = []
         while self.queue:
             req = self.queue.popleft()
             entry = self._entry_server(req, dead)
@@ -199,18 +222,31 @@ class EmbedShardService:
                 self._pad(req.keys),
                 self.cq,
                 expected=len(req.keys),
+                express=req.express,
+                tenant=req.tenant,
+                slot_quota=req.slot_quota,
             )
             if fut is None:
-                # completion queue saturated: submit would-block (CQ
-                # backpressure admission) — requeue at the front and stop
-                # admitting until retirements free slots.  In-flight
-                # requests are untouched; nothing raises mid-batch.
-                self.queue.appendleft(req)
-                break
+                if self.cq.free_slots == 0:
+                    # completion queue saturated: submit would-block (CQ
+                    # backpressure admission) — requeue at the front and
+                    # stop admitting until retirements free slots.
+                    # In-flight requests are untouched; nothing raises
+                    # mid-batch.
+                    self.queue.appendleft(req)
+                    break
+                # slots remain but this request's tenant is at its CQ
+                # quota: hold IT back and keep admitting other tenants —
+                # one tenant's backlog must not head-of-line-block the rest
+                held.append(req)
+                continue
             fut.attempts = req.resubmits
             req.future = fut
+            req.t_admit = time.perf_counter()
             self.active[fut.slot] = req
             admitted += 1
+        for req in reversed(held):
+            self.queue.appendleft(req)
         return admitted
 
     def _recover(self) -> int:
@@ -225,36 +261,51 @@ class EmbedShardService:
             return 0
         actions = 0
         dead = self._dead_peers()
+        exhausted: list[tuple[GatherRequest, list[str]]] = []
         for fut in self.cq.expired():
             req = self.active.get(fut.slot)
             if req is None:  # not one of ours (foreign submission)
                 continue
             owners = {f"server{self.owner(k)}" for k in req.keys}
-            if owners & dead:
-                # attributed: an owner died — degrade, don't hang
+            del self.active[fut.slot]
+            dead_owner = bool(owners & dead)
+            if not dead_owner:
+                req.resubmits += 1
+            if dead_owner or req.resubmits > rel.retransmit_budget:
+                # attributed: an owner died, or the budget is spent with
+                # owners alive — either way degrade to whatever arrived
+                # (result_partial preserves landed rows + validity mask;
+                # cancelling first would discard them) and keep sweeping.
+                # Raising here used to abandon every later expired future
+                # mid-sweep, leaking its slot and stranding its request.
                 rows, mask = fut.result_partial()
+                req.future = None
                 req.rows = rows[: len(req.keys)]
                 req.valid = mask[: len(req.keys)]
                 req.degraded = True
                 req.done = True
                 req.t_done = time.perf_counter()
                 self.finished.append(req)
-                del self.active[fut.slot]
+                if not dead_owner:
+                    exhausted.append((req, sorted(owners)))
                 actions += 1
                 continue
-            # owners all believed alive: transient loss — resubmit
-            del self.active[fut.slot]
+            # owners all believed alive, budget remains: transient loss —
+            # resubmit (a dropped one-sided RETURN has no retransmit
+            # queue, so the service layer is the retry)
             fut.cancel()
             req.future = None
-            req.resubmits += 1
-            if req.resubmits > rel.retransmit_budget:
-                raise TimeoutError(
-                    f"gather rid={req.rid} exceeded resubmit budget "
-                    f"({rel.retransmit_budget}): owners {sorted(owners)} "
-                    f"alive but results never arrive"
-                )
             self.queue.appendleft(req)
             actions += 1
+        if exhausted and self.strict_recovery:
+            detail = "; ".join(
+                f"rid={r.rid} owners={o} resubmits={r.resubmits}"
+                for r, o in exhausted
+            )
+            raise TimeoutError(
+                f"{len(exhausted)} gather(s) exceeded resubmit budget "
+                f"({rel.retransmit_budget}) with owners alive: {detail}"
+            )
         return actions
 
     def _retire(self) -> int:

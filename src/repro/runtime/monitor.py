@@ -16,35 +16,15 @@ costs more than the restart it takes to shed it.
 
 from __future__ import annotations
 
-import time
 from collections import defaultdict
 from dataclasses import dataclass
 
+# The liveness primitive moved into core (the progress engine's failure
+# detector is built on it; core must not import runtime).  Re-exported
+# here unchanged for the deployment-facing monitoring surface.
+from repro.core.liveness import HeartbeatMonitor
 
-class HeartbeatMonitor:
-    """Tracks last-seen times; a PE missing ``max_misses`` beats is dead."""
-
-    def __init__(self, interval_s: float = 1.0, max_misses: int = 3):
-        self.interval_s = interval_s
-        self.max_misses = max_misses
-        self.last_seen: dict[str, float] = {}
-        self.dead: set[str] = set()
-
-    def beat(self, name: str, now: float | None = None) -> None:
-        self.last_seen[name] = time.monotonic() if now is None else now
-        self.dead.discard(name)
-
-    def check(self, now: float | None = None) -> set[str]:
-        """Returns the set of PEs newly declared dead."""
-        now = time.monotonic() if now is None else now
-        newly = set()
-        for name, seen in self.last_seen.items():
-            if name in self.dead:
-                continue
-            if now - seen > self.interval_s * self.max_misses:
-                self.dead.add(name)
-                newly.add(name)
-        return newly
+__all__ = ["HeartbeatMonitor", "StragglerPolicy", "StepTimer"]
 
 
 @dataclass

@@ -50,11 +50,23 @@ class Request:
 
 
 class ServeScheduler:
-    def __init__(self, cfg, params, slots: int = 4, t_max: int = 256, seed: int = 0):
+    def __init__(
+        self,
+        cfg,
+        params,
+        slots: int = 4,
+        t_max: int = 256,
+        seed: int = 0,
+        embed_client: Any = None,
+    ):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.t_max = t_max
+        # serving-tier mode: embedding rows come from a remote shard service
+        # (RemoteEmbedClient — CQ futures over the PE fabric) instead of a
+        # local table lookup; the compiled steps take the rows as an input
+        self.embed_client = embed_client
         fl = frontend_len(cfg, t_max)
         self.cache = init_kv_cache(cfg, slots, t_max, enc_len=fl, dtype=cfg.dtype)
         self.pos = np.zeros(slots, np.int32)  # next position per slot
@@ -64,18 +76,26 @@ class ServeScheduler:
         self._next_rid = 0
         self._tokens = jnp.zeros((slots, 1), jnp.int32)
 
-        self._step = jax.jit(make_serve_step(cfg))
+        self._step = jax.jit(make_serve_step(cfg, remote_embed=embed_client is not None))
         # single-sequence prefill producing the slot's cache stripe
-        def prefill_one(params, tokens):
+        def prefill_one(params, tokens, rows=None):
             cache1 = init_kv_cache(cfg, 1, t_max, enc_len=fl, dtype=cfg.dtype)
+            batch = {"tokens": tokens}
+            if rows is not None:
+                batch["token_rows"] = rows
             h, cache1, _ = forward(
-                cfg, params, {"tokens": tokens}, caches=cache1,
+                cfg, params, batch, caches=cache1,
                 offset=jnp.int32(0), return_hidden=True,
             )
             logits = _head(cfg, params, h[:, -1:, :])[:, -1, :]
             return logits, cache1
 
-        self._prefill = jax.jit(prefill_one)
+        if embed_client is None:
+            self._prefill = jax.jit(prefill_one)
+        else:
+            self._prefill = jax.jit(
+                lambda params, tokens, rows: prefill_one(params, tokens, rows)
+            )
 
     # ------------------------------------------------------------------ API
     def submit(self, prompt: np.ndarray, max_new: int) -> int:
@@ -103,7 +123,13 @@ class ServeScheduler:
             req = self.queue.popleft()
             p = len(req.prompt)
             assert p + req.max_new <= self.t_max, "prompt too long for cache"
-            logits, cache1 = self._prefill(self.params, jnp.asarray(req.prompt)[None])
+            if self.embed_client is not None:
+                rows = self.embed_client.rows(req.prompt[None])
+                logits, cache1 = self._prefill(
+                    self.params, jnp.asarray(req.prompt)[None], jnp.asarray(rows)
+                )
+            else:
+                logits, cache1 = self._prefill(self.params, jnp.asarray(req.prompt)[None])
             self._write_slot(slot, cache1)
             tok = int(jnp.argmax(logits[0]))
             req.out.append(tok)
@@ -122,9 +148,14 @@ class ServeScheduler:
                 del self.active[slot]
 
     def tick(self) -> int:
-        """One scheduler round: admit -> one batched decode step -> retire.
-        Returns the number of active sequences that advanced."""
+        """One scheduler round: admit -> retire satisfied -> one batched
+        decode step -> retire.  Returns the number of active sequences
+        that advanced.  The early retire matters: admission's prefill
+        already appended a token, so a ``max_new=1`` request is satisfied
+        before any decode — decoding it anyway would overshoot its budget
+        by one token."""
         self._admit()
+        self._retire()
         if not self.active:
             return 0
         # ragged positions: one serve_step per distinct position group keeps
@@ -134,10 +165,22 @@ class ServeScheduler:
         for slot in self.active:
             groups.setdefault(int(self.pos[slot]), []).append(slot)
         advanced = 0
-        for pos, slots in sorted(groups.items()):
-            logits, cache = self._step(
-                self.params, self.cache, self._tokens, jnp.int32(pos)
+        # remote-embed: one row gather covers every group this tick (the
+        # step input is the full (slots, 1) token batch either way)
+        step_rows = None
+        if self.embed_client is not None:
+            step_rows = jnp.asarray(
+                self.embed_client.rows(np.asarray(self._tokens))
             )
+        for pos, slots in sorted(groups.items()):
+            if step_rows is not None:
+                logits, cache = self._step(
+                    self.params, self.cache, self._tokens, jnp.int32(pos), step_rows
+                )
+            else:
+                logits, cache = self._step(
+                    self.params, self.cache, self._tokens, jnp.int32(pos)
+                )
             # keep updates only for this group's slots
             mask = np.zeros(self.slots, bool)
             mask[slots] = True

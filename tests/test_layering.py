@@ -19,7 +19,8 @@ import pathlib
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
-PE_PACKAGE = REPO / "src" / "repro" / "core" / "pe"
+CORE_PACKAGE = REPO / "src" / "repro" / "core"
+PE_PACKAGE = CORE_PACKAGE / "pe"
 LAYER_MODULES = ("source", "wire", "codecache", "exec", "progress", "cq", "pe")
 
 
@@ -109,6 +110,41 @@ class TestImportHygiene:
                 if name.startswith("_"):
                     offenders.append(f"{path.name}: from {mod} import {name}")
         assert not offenders, "\n".join(offenders)
+
+    def test_core_never_imports_runtime_or_launch(self):
+        """``repro.core`` is the bottom of the stack: no core module may
+        import from ``repro.runtime`` or ``repro.launch`` — not even a
+        deferred (function-level) import, which is how the inversion last
+        crept in (the failure detector reaching up for the heartbeat
+        monitor).  The walk covers every statement in every core module,
+        absolute and relative spellings alike."""
+        offenders = []
+        for path in sorted(CORE_PACKAGE.rglob("*.py")):
+            # the package this file's relative imports resolve against
+            pkg = ["repro", "core", *path.relative_to(CORE_PACKAGE).parts[:-1]]
+            tree = ast.parse(path.read_text())
+            for node in ast.walk(tree):
+                if isinstance(node, ast.Import):
+                    targets = [alias.name for alias in node.names]
+                elif isinstance(node, ast.ImportFrom):
+                    mod = node.module or ""
+                    if node.level:
+                        base = pkg[: len(pkg) - (node.level - 1)]
+                        targets = [".".join([*base, *mod.split(".")]).rstrip(".")]
+                    else:
+                        targets = [mod]
+                else:
+                    continue
+                for target in targets:
+                    parts = target.split(".")
+                    if parts[:1] == ["repro"] and parts[1:2] and parts[1] in (
+                        "runtime", "launch"
+                    ):
+                        offenders.append(f"{path.relative_to(REPO)}: {target}")
+        assert not offenders, (
+            "repro.core must not depend on repro.runtime/repro.launch:\n"
+            + "\n".join(offenders)
+        )
 
     def test_layers_do_not_import_the_facade(self):
         """The facade composes the layers; a layer importing `.pe` back

@@ -322,6 +322,81 @@ class TestServiceRecovery:
         assert "owners=" in msg and "arrived=" in msg and "rid=" in msg
         assert "server0" in msg
 
+    def _exhaust_two(self, strict_recovery=False):
+        """Drive two concurrent gathers to resubmit-budget exhaustion in
+        the same recovery sweep, with one partial row having landed."""
+        cl = Cluster(2)
+        svc = EmbedShardService(cl, vocab=64, dim=4, n_keys=4, max_slots=8,
+                                strict_recovery=strict_recovery)
+        cl.set_reliability(ReliabilityConfig.on(rto_ticks=64,
+                                                retransmit_budget=1,
+                                                max_misses=64,
+                                                future_deadline=2))
+        # warm both servers' code caches with real (delivered) gathers so
+        # later digest-only resubmissions are executable on arrival
+        svc.gather([np.array([1], I32), np.array([40], I32)])
+        svc.submit(np.array([3, 40], I32))  # spans both shards
+        svc.submit(np.array([45], I32))     # server1 only
+        svc._admit()
+
+        def eat_and_expire():
+            for srv in cl.servers:
+                srv.endpoint.inbox.clear()
+            svc.cq.advance(2)
+
+        eat_and_expire()
+        assert svc._recover() == 2  # round 1: both resubmitted
+        assert svc._admit() == 2
+        # round 2: request 0's local row lands via the one-sided zero-copy
+        # RETURN path (no frame, no seq gate — exactly the data plane whose
+        # losses the resubmit loop exists for) before the rest of the round
+        # is lost; that row must survive budget exhaustion
+        req0 = next(r for r in svc.active.values() if r.keys[0] == 3)
+        stride = (2 + svc.cq.width) * 4
+        base = req0.future.slot * stride
+        cl.fabric.put_region(
+            "server0", cl.client.name, svc.cq.region,
+            base + 8, svc.table[3].tobytes(), doorbell=(base, 1, "or"),
+        )
+        eat_and_expire()
+        return cl, svc
+
+    def test_budget_exhaustion_degrades_every_expired_request(self):
+        """Regression: two in-flight gathers blowing their resubmit budget
+        in the same sweep used to raise TimeoutError on the *first* —
+        abandoning the second mid-sweep (slot leaked, request stuck) and
+        discarding the partial rows that had already arrived (the future
+        was cancelled before the budget check).  Exhaustion must instead
+        degrade each request to an attributed partial result, finish the
+        sweep, and recycle every slot."""
+        cl, svc = self._exhaust_two()
+        svc._recover()  # must not raise mid-sweep
+        assert not svc.active and not svc.queue
+        assert svc.cq.free_slots == svc.max_slots
+        done = {r.rid: r for r in svc.finished}
+        r0, r1 = done[2], done[3]  # rids 0/1 were the warm-up gathers
+        assert r0.degraded and r1.degraded
+        assert r0.resubmits == 2 and r1.resubmits == 2
+        # the row that DID arrive is preserved and attributed valid
+        assert r0.valid.tolist() == [True, False]
+        np.testing.assert_array_equal(r0.rows[0], svc.table[3])
+        assert r1.valid.tolist() == [False]
+
+    def test_strict_recovery_raises_once_after_the_sweep(self):
+        """Under ``strict_recovery`` exhaustion still raises — but only
+        after every expired future has been degraded and retired, and the
+        error names every exhausted request, not just the first."""
+        cl, svc = self._exhaust_two(strict_recovery=True)
+        with pytest.raises(TimeoutError) as exc:
+            svc._recover()
+        # the sweep completed before the raise: nothing leaked
+        assert not svc.active
+        assert svc.cq.free_slots == svc.max_slots
+        assert len(svc.finished) == 2
+        msg = str(exc.value)
+        assert "rid=2" in msg and "rid=3" in msg
+        assert "resubmit budget" in msg
+
 
 class TestKillMidRendezvous:
     def test_source_death_between_descriptor_and_get(self):

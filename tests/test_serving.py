@@ -41,6 +41,36 @@ def test_more_requests_than_slots(served):
         assert r.out == want, (r.rid, r.out, want)
 
 
+def test_max_new_one_returns_exactly_one_token(served):
+    """Regression: the prefill token already satisfies ``max_new=1``, so
+    the scheduler must retire the request before the decode step — it
+    used to decode (and return) a second token."""
+    cfg, params = served
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+    sched = ServeScheduler(cfg, params, slots=2, t_max=64)
+    sched.submit(prompt, max_new=1)
+    (req,) = sched.run()
+    assert len(req.out) == 1, req.out
+    assert req.out == _reference_decode(cfg, params, prompt, 1)
+
+
+def test_max_new_never_overshot(served):
+    """No request — any ``max_new``, mixed in one batch — may ever exceed
+    its token budget."""
+    cfg, params = served
+    rng = np.random.default_rng(3)
+    sched = ServeScheduler(cfg, params, slots=2, t_max=64)
+    budgets = [1, 2, 5]
+    prompts = [rng.integers(0, cfg.vocab, 4).astype(np.int32) for _ in budgets]
+    for p, m in zip(prompts, budgets):
+        sched.submit(p, max_new=m)
+    done = sched.run()
+    assert sorted(len(r.out) for r in done) == sorted(budgets)
+    for r in done:
+        assert r.out == _reference_decode(cfg, params, prompts[r.rid], budgets[r.rid])
+
+
 def test_late_arrivals_join_running_batch(served):
     cfg, params = served
     rng = np.random.default_rng(1)

@@ -1,0 +1,335 @@
+"""Multi-tenant serving-tier contracts: QoS classes, shedding, isolation.
+
+The serving tier (runtime/tenancy.py) maps tenant classes onto three
+runtime mechanisms — EXPRESS control-lane drain priority, per-tenant
+credit budgets in the wire layer, and per-tenant CQ-slot quotas — and
+sheds above the fabric at each tenant's queue limit.  Every test here
+checks both the scheduling effect (what the knob buys) and the invariants
+that must survive it: shed requests never enter the fabric, accepted
+requests complete exactly once and bit-identical to the numpy oracle, and
+the per-tenant ledgers (wire occupancy, CQ tags) drain back to zero.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis, or local fallback
+
+from repro.core import Cluster, make_tsi
+from repro.runtime.embed_service import EmbedShardService
+from repro.runtime.tenancy import RemoteEmbedClient, TenantClass, TenantRouter
+
+I32 = np.int32
+
+
+def service(n_servers=2, max_slots=8, n_keys=4, dim=4, vocab_per_shard=16):
+    cl = Cluster(n_servers)
+    svc = EmbedShardService(
+        cl, vocab=vocab_per_shard * n_servers, dim=dim, n_keys=n_keys,
+        max_slots=max_slots,
+    )
+    # warm the gather code path so admission tests measure QoS, not
+    # first-contact code movement
+    svc.gather([np.arange(1, n_keys + 1, dtype=I32)])
+    return cl, svc
+
+
+def batches(svc, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(0, svc.vocab, rng.integers(1, svc.n_keys + 1)).astype(I32)
+        for _ in range(n)
+    ]
+
+
+# ---------------------------------------------------------------- router
+class TestRouter:
+    def test_duplicate_class_names_rejected(self):
+        _, svc = service()
+        with pytest.raises(ValueError):
+            TenantRouter(svc, [TenantClass("a"), TenantClass("a")])
+
+    def test_shed_at_queue_limit_is_exactly_once(self):
+        """A shed request never enters the fabric: no rid, no slot, no
+        frame, no late result — and every accepted request completes
+        exactly once, bit-identical to the oracle."""
+        cl, svc = service()
+        router = TenantRouter(svc, [TenantClass("t", queue_limit=2)])
+        keys = batches(svc, 5)
+        rids = [router.submit("t", k) for k in keys]
+        accepted = [r for r in rids if r is not None]
+        assert len(accepted) == 2 and rids[2:] == [None, None, None]
+        assert router.stats["t"].shed == 3
+        done = []
+        while svc.queue or svc.active:
+            done += router.tick()
+        # exactly the accepted rids completed, exactly once each
+        assert sorted(r.rid for r in done) == sorted(accepted)
+        for req, k in zip(sorted(done, key=lambda r: r.rid), keys[:2]):
+            assert np.array_equal(req.rows, svc.table[k])
+        # shedding freed capacity: the tenant may submit again now
+        assert router.submit("t", keys[0]) is not None
+
+    def test_outstanding_tracks_completion(self):
+        cl, svc = service()
+        router = TenantRouter(svc, [TenantClass("t", queue_limit=4)])
+        router.submit("t", np.array([1, 2], I32))
+        assert router.outstanding("t") == 1
+        while svc.queue or svc.active:
+            router.tick()
+        assert router.outstanding("t") == 0
+        assert router.stats["t"].latencies  # tick latency recorded
+
+    def test_unknown_tenant_raises(self):
+        _, svc = service()
+        router = TenantRouter(svc, [TenantClass("a")])
+        with pytest.raises(KeyError):
+            router.submit("nobody", np.array([1], I32))
+
+
+# ------------------------------------------------------------ slot quota
+class TestSlotQuota:
+    def test_quota_caps_cq_occupancy(self):
+        """A tenant with slot_quota=1 never holds more than one CQ slot,
+        however deep its backlog — and still completes everything."""
+        cl, svc = service(max_slots=8)
+        router = TenantRouter(svc, [TenantClass("t", slot_quota=1)])
+        keys = batches(svc, 6)
+        rids = [router.submit("t", k) for k in keys]
+        done = []
+        while svc.queue or svc.active:
+            done += router.tick()
+            assert svc.cq.tag_inflight("t") <= 1
+        assert sorted(r.rid for r in done) == rids
+        for req in done:
+            assert np.array_equal(
+                req.rows, svc.table[keys[rids.index(req.rid)]]
+            )
+        assert svc.cq.tag_inflight("t") == 0  # ledger drained
+
+    def test_quota_block_does_not_head_of_line_block(self):
+        """With the hot tenant at quota and more of its requests queued
+        *ahead* of a background request, the background request still
+        admits this tick — the quota holds back the hot tenant only."""
+        cl, svc = service(max_slots=8)
+        router = TenantRouter(
+            svc, [TenantClass("hot", slot_quota=1), TenantClass("bg")]
+        )
+        for k in batches(svc, 4, seed=1):
+            router.submit("hot", k)
+        router.submit("bg", np.array([3, 5], I32))
+        svc._admit()
+        assert svc.cq.tag_inflight("hot") == 1
+        # bg admitted past three quota-held hot requests
+        assert any(r.tenant == "bg" for r in svc.active.values())
+        assert sum(1 for r in svc.queue if r.tenant == "hot") == 3
+        while svc.queue or svc.active:
+            router.tick()
+        assert router.stats["bg"].served == 1
+
+
+# ---------------------------------------------------------- credit budget
+class TestCreditBudget:
+    def _warm_counter_cluster(self):
+        cl = Cluster(n_servers=1, wire="ideal")
+        cl.servers[0].register_region("counter", np.zeros(1, I32))
+        cl.toolchain.publish(make_tsi())
+        cl.client.send_ifunc("server0", "tsi", np.array([0], I32))
+        cl.drain()  # code installed, sender cache warm
+        return cl
+
+    def test_budget_stalls_excess_and_conserves(self):
+        """With a budget of 1 payload in flight, back-to-back tenant sends
+        queue at the sender (counted per tenant), drain as the receiver
+        polls, and the tenant's wire occupancy returns to zero."""
+        cl = self._warm_counter_cluster()
+        cl.set_tenant_budgets({"t": 1})
+        for _ in range(3):
+            cl.client.send_ifunc("server0", "tsi", np.array([1], I32), tenant="t")
+        assert cl.fabric.tenant_outstanding("client", "t") == 1
+        assert cl.client.wire.queued_credit_frames(tenant="t") == 2
+        assert cl.fabric.stats.tenant_stalls["t"] == 2
+        assert cl.client.stats.tenant_stalls["t"] == 2
+        cl.drain()
+        assert int(cl.servers[0].region("counter")[0]) == 3  # nothing lost
+        assert cl.fabric.tenant_outstanding("client", "t") == 0
+        assert cl.client.wire.queued_credit_frames() == 0
+
+    def test_budget_lanes_are_per_tenant(self):
+        """One tenant at budget must not stall another tenant's sends —
+        the wire queues are per (dst, tenant) lanes, not one FIFO."""
+        cl = self._warm_counter_cluster()
+        cl.set_tenant_budgets({"a": 1})
+        cl.client.send_ifunc("server0", "tsi", np.array([1], I32), tenant="a")
+        cl.client.send_ifunc("server0", "tsi", np.array([1], I32), tenant="a")
+        before = int(cl.fabric.stats.puts)
+        cl.client.send_ifunc("server0", "tsi", np.array([10], I32), tenant="b")
+        assert int(cl.fabric.stats.puts) == before + 1  # b flowed past a's stall
+        cl.drain()
+        assert int(cl.servers[0].region("counter")[0]) == 12
+
+    def test_untenanted_traffic_ignores_budgets(self):
+        cl = self._warm_counter_cluster()
+        cl.set_tenant_budgets({"t": 1})
+        for _ in range(4):
+            cl.client.send_ifunc("server0", "tsi", np.array([1], I32))
+        assert cl.client.wire.queued_credit_frames() == 0
+        cl.drain()
+        assert int(cl.servers[0].region("counter")[0]) == 4
+
+
+# ----------------------------------------------------------- express lane
+class TestExpressLane:
+    def _backlogged(self, express_last=True):
+        cl = Cluster(n_servers=1, wire="ideal")
+        srv = cl.servers[0]
+        srv.register_region("counter", np.zeros(1, I32))
+        cl.toolchain.publish(make_tsi())
+        cl.client.send_ifunc("server0", "tsi", np.array([0], I32))
+        cl.drain()  # warm: later frames are digest-only and resolvable
+        for _ in range(3):
+            cl.client.send_ifunc("server0", "tsi", np.array([1], I32))
+        cl.client.send_ifunc(
+            "server0", "tsi", np.array([100], I32), express=express_last
+        )
+        srv.batching = True
+        srv.poll_budget = 1  # one payload per poll: order is observable
+        return cl, srv
+
+    def test_express_jumps_the_bulk_backlog(self):
+        cl, srv = self._backlogged()
+        srv.lanes = True
+        srv.poll()
+        # the express frame was served first despite arriving last...
+        assert int(srv.region("counter")[0]) == 100
+        cl.drain()
+        # ...and nothing was lost or doubled behind it
+        assert int(srv.region("counter")[0]) == 103
+
+    def test_express_without_lanes_stays_fifo(self):
+        cl, srv = self._backlogged()
+        srv.lanes = False
+        srv.poll()
+        assert int(srv.region("counter")[0]) == 1
+        cl.drain()
+        assert int(srv.region("counter")[0]) == 103
+
+
+# ------------------------------------------------------ remote-embed decode
+@pytest.fixture(scope="module")
+def served():
+    from repro.configs import get_config
+    from repro.models.zoo import build_params
+
+    cfg = get_config("yi-9b", smoke=True)
+    params, _ = build_params(cfg, 0)
+    return cfg, params
+
+
+class TestRemoteEmbedDecode:
+    def test_rows_bit_identical_to_table(self, served):
+        _, params = served
+        table = np.asarray(params["embed.tok"], np.float32)
+        client = RemoteEmbedClient(table, n_servers=2, n_keys=4)
+        rng = np.random.default_rng(3)
+        ids = rng.integers(0, table.shape[0], (2, 7)).astype(I32)
+        got = client.rows(ids)
+        assert got.shape == (2, 7, table.shape[1])
+        assert np.array_equal(got, table[ids])  # f32 through int32 CQ words
+
+    def test_decode_stream_bit_identical_local_vs_remote(self, served):
+        """The end-to-end LM serving scenario: a ServeScheduler whose
+        embedding rows arrive via CQ gather futures over the PE fabric
+        must emit the same token stream as the local-lookup scheduler —
+        bit-for-bit, across continuous batching and ragged admission."""
+        from repro.runtime.serving import ServeScheduler
+
+        cfg, params = served
+        prompts = [np.arange(1, 6, dtype=I32), np.array([7, 3, 2], I32)]
+
+        local = ServeScheduler(cfg, params, slots=2, t_max=32)
+        for p in prompts:
+            local.submit(p, 5)
+        want = {r.rid: r.out for r in local.run()}
+
+        embed = RemoteEmbedClient(np.asarray(params["embed.tok"], np.float32))
+        remote = ServeScheduler(cfg, params, slots=2, t_max=32, embed_client=embed)
+        for p in prompts:
+            remote.submit(p, 5)
+        got = {r.rid: r.out for r in remote.run()}
+        assert got == want
+        assert embed.gathers > 0  # the rows really travelled the fabric
+
+
+# ----------------------------------------------------- isolation property
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    quota=st.integers(1, 3),
+    limit=st.integers(0, 4),
+    budget=st.integers(0, 2),
+    n_hot=st.integers(1, 10),
+    n_bg=st.integers(1, 5),
+    lanes=st.sampled_from([False, True]),
+    loss=st.sampled_from([0.0, 0.05]),
+)
+def test_tenant_isolation_invariants(
+    seed, quota, limit, budget, n_hot, n_bg, lanes, loss
+):
+    """For any QoS configuration (budgets x lanes x loss rate) and any
+    interleaved two-tenant workload: accounting is exactly-once (accepted
+    + shed == offered; every accepted request retires exactly once, no
+    request both shed and served), results are oracle-identical, and
+    every per-tenant ledger — wire occupancy, CQ tags, stalled lanes —
+    drains back to zero."""
+    from repro.core import ReliabilityConfig
+
+    cl, svc = service(n_servers=2, max_slots=4)
+    cl.set_flow(lanes=lanes)
+    if loss:
+        # a lossy fabric needs the reliability layer to stay exactly-once
+        cl.set_reliability(ReliabilityConfig.on(retransmit_budget=50))
+        cl.fabric.set_loss(loss, seed=seed + 7)
+    router = TenantRouter(
+        svc,
+        [
+            TenantClass(
+                "hot", slot_quota=quota, queue_limit=limit, credit_budget=budget
+            ),
+            TenantClass("bg", express=True),
+        ],
+    )
+    rng = np.random.default_rng(seed)
+    offered = [("hot", k) for k in batches(svc, n_hot, seed)]
+    offered += [("bg", k) for k in batches(svc, n_bg, seed + 1)]
+    rng.shuffle(offered)
+
+    expected = {}
+    done = []
+    for i, (tenant, keys) in enumerate(offered):
+        rid = router.submit(tenant, keys)
+        if rid is not None:
+            expected[rid] = svc.table[keys]
+        if i % 3 == 2:  # interleave progress with submission
+            done += router.tick()
+    ticks = 0
+    while svc.queue or svc.active:
+        done += router.tick()
+        ticks += 1
+        assert ticks < 10_000
+    done += router.tick()  # final harvest
+
+    # exactly-once: every accepted request retired once, none twice, and
+    # accepted + shed accounts for every submission attempt
+    rids = sorted(r.rid for r in done)
+    assert rids == sorted(expected)
+    shed = sum(s.shed for s in router.stats.values())
+    assert len(expected) + shed == len(offered)
+    for req in done:
+        assert not req.degraded
+        assert np.array_equal(req.rows, expected[req.rid])
+    # ledgers drained: no leaked credits, slots, or stalled frames
+    for tenant in ("hot", "bg"):
+        assert cl.fabric.tenant_outstanding("client", tenant) == 0
+        assert svc.cq.tag_inflight(tenant) == 0
+    assert cl.client.wire.queued_credit_frames() == 0
+    assert svc.cq.free_slots == svc.max_slots
