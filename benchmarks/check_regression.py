@@ -20,6 +20,7 @@ Guarded metrics — "higher is better" unless marked ``<``:
   BENCH_reliability.json  ack_overhead_pct (<), recovery_p95_ticks_rel5 (<),
                         goodput_rel5
   BENCH_tenancy.json    bg_p95_ratio (<), hot_p95_ratio, shed_accuracy
+  BENCH_sandbox.json    verify_overhead_pct (<), hostile_contained
 
 ``python -m benchmarks.check_regression`` (run from the repo root after
 regenerating the BENCH files); exits non-zero on any regression.
@@ -72,6 +73,12 @@ GUARDS = {
         ("hot_p95_ratio", True),
         # ... and shedding stays exactly-once (1.0 or bust)
         ("shed_accuracy", True),
+    ],
+    "BENCH_sandbox.json": [
+        # a warm tree must stay verification-free (0.0 or bust) ...
+        ("verify_overhead_pct", False),
+        # ... while every hostile scenario stays contained (1.0 or bust)
+        ("hostile_contained", True),
     ],
 }
 

@@ -1,0 +1,296 @@
+"""Safe code injection A/B — what the install-time verifier + runtime
+sandbox cost, and what they contain.
+
+The paper's headline capability (remotely injected ifuncs that recursively
+propagate themselves) is exactly the thing a shared fabric cannot extend
+on trust; core/verify.py adds an install-time verifier and a runtime
+resource sandbox.  Three arms, identical benign workload (one cold tree
+publish of the TSI counter ifunc, then ``warm_rounds`` warm re-publishes
+riding digest-only hops):
+
+  ``off``      sandbox disabled (the default config) — the pre-sandbox
+               runtime, bit-for-bit: zero verifications, zero stamps,
+               zero refusals anywhere.
+  ``on``       sandbox enabled: each PE pays exactly **one** cold
+               verification per digest; every warm hop resolves through
+               the capability-stamp cache, so the warm path re-verifies
+               **nothing** (``verify_overhead_pct`` is deterministically
+               0.0 — the headline guarded metric).
+  ``hostile``  sandbox enabled with a ttl ceiling, benign direct sends
+               interleaved with a rogue self-propagating ifunc that
+               re-mints a deeper publish budget than the ceiling admits:
+               the re-mint must be refused loudly, the digest banished
+               cluster-wide (uninstalled + sender caches forgotten +
+               refused on sight thereafter), and the benign counters must
+               come out oracle-exact — ``hostile_contained`` is 1.0 or
+               the run fails.
+
+``python -m benchmarks.sandbox --ab --json BENCH_sandbox.json`` records
+the committed trajectory (guarded by benchmarks/check_regression.py);
+``--tiny`` is the CI fast-lane smoke.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    A_PUBLISH,
+    ACTION_WIDTH,
+    Cluster,
+    IFunc,
+    SandboxConfig,
+    SandboxViolation,
+    make_tsi,
+)
+
+from .hw_model import PROFILES
+
+I32 = np.int32
+TARGETS = ("cpu-host", "cpu-bf2")  # two triples keep toolchain builds cheap
+
+
+def make_reminter() -> IFunc:
+    """A rogue gossiper: structurally a ring gossiper, but each arrival
+    re-publishes itself granting ttl 9 — re-minting a deeper propagation
+    budget than its capability stamp holds."""
+
+    def entry(
+        payload: jax.Array, log: jax.Array, meta: jax.Array
+    ) -> "tuple[jax.Array, jax.Array]":
+        me, n = meta[0], meta[1]
+        nxt = jnp.where(me + 1 >= n, 0, me + 1)
+        row = jnp.zeros(ACTION_WIDTH, I32)
+        row = row.at[0].set(A_PUBLISH).at[1].set(nxt).at[2].set(3)
+        row = row.at[3].set(9).at[5].set(payload[1])  # p0 = granted ttl 9
+        return log + 1, row
+
+    return IFunc.build(
+        name="reminter",
+        fn=entry,
+        payload_aval=jax.ShapeDtypeStruct((2,), I32),
+        dep_avals=(
+            jax.ShapeDtypeStruct((2,), I32),
+            jax.ShapeDtypeStruct((2,), I32),
+        ),
+        deps=("region:gossip_log", "cap:gossip_meta"),
+        abi="propagate",
+        targets=TARGETS,
+    )
+
+
+def _fresh_cluster(
+    n_servers: int, profile: str, *, gossip: bool = False
+) -> Cluster:
+    cl = Cluster(n_servers=n_servers, wire=profile)
+    for i, pe in enumerate(cl.pes()):
+        if pe is not cl.client:
+            pe.register_region("counter", np.zeros(1, I32))
+        if gossip:
+            pe.register_region("gossip_log", np.zeros(2, I32))
+            pe.register_cap("gossip_meta", np.array([i, n_servers + 1], I32))
+    cl.toolchain.publish(make_tsi())
+    return cl
+
+
+def _counters(cl: Cluster) -> "list[int]":
+    return [int(pe.region("counter")[0]) for pe in cl.servers]
+
+
+def _verifier_totals(cl: Cluster) -> "dict[str, float]":
+    return {
+        "verifies": sum(pe.verifier.verifies for pe in cl.pes()),
+        "stamp_hits": sum(pe.verifier.stamp_hits for pe in cl.pes()),
+        "verify_ms": sum(pe.verifier.verify_ms_total for pe in cl.pes()),
+    }
+
+
+def run_publish_arm(
+    n_servers: int,
+    profile: str,
+    warm_rounds: int,
+    value: int,
+    sandbox: "SandboxConfig | None",
+) -> dict:
+    """One cold tree publish + ``warm_rounds`` warm re-publishes; returns
+    the arm's verifier ledger split at the cold/warm boundary."""
+    cl = _fresh_cluster(n_servers, profile)
+    if sandbox is not None:
+        cl.set_sandbox(sandbox)
+    payload = np.array([value], I32)
+
+    cl.client.publish_ifunc("tsi", payload)
+    cl.drain()
+    assert _counters(cl) == [value] * n_servers, "cold publish oracle"
+    cold = _verifier_totals(cl)
+
+    for _ in range(warm_rounds):
+        cl.client.publish_ifunc("tsi", payload)
+        cl.drain()
+    want = (1 + warm_rounds) * value
+    assert _counters(cl) == [want] * n_servers, "warm publish oracle"
+    after = _verifier_totals(cl)
+
+    warm_hops = warm_rounds * n_servers  # digest-only deliveries
+    warm_verifies = after["verifies"] - cold["verifies"]
+    enabled = sandbox is not None and sandbox.enabled
+    if enabled:
+        # exactly one cold verification per server (client stamps at mint)
+        assert all(pe.verifier.verifies == 1 for pe in cl.servers)
+    else:
+        assert after["verifies"] == 0 and after["stamp_hits"] == 0
+        assert cl.refusals() == {}
+    return {
+        "cold_verifies": cold["verifies"],
+        "cold_verify_ms_mean": round(
+            cold["verify_ms"] / max(cold["verifies"], 1), 4
+        ),
+        "warm_hops": warm_hops,
+        "warm_verifies": int(warm_verifies),
+        "warm_stamp_hits": int(after["stamp_hits"] - cold["stamp_hits"]),
+        "refusals": cl.refusals(),
+    }
+
+
+def run_hostile_arm(
+    n_servers: int, profile: str, benign_rounds: int, value: int
+) -> dict:
+    """Benign direct sends sharing a sandboxed fabric with a ttl re-minter:
+    the hostile digest must be refused + banished with the benign counters
+    oracle-exact.  Returns the containment scorecard."""
+    reminter = make_reminter()
+    cl = _fresh_cluster(n_servers, profile, gossip=True)
+    cl.toolchain.publish(reminter)
+    cl.set_sandbox(SandboxConfig.on(max_publish_ttl=4))
+    payload = np.array([value], I32)
+
+    # benign first half: direct sends, verified once per server then warm
+    for _ in range(benign_rounds):
+        for i in range(n_servers):
+            cl.client.send_ifunc(f"server{i}", "tsi", payload)
+        cl.drain()
+
+    # the attack: reminter grants ttl 9 against a stamp ceiling of 4
+    refused = False
+    cl.client.send_ifunc("server0", "reminter", np.array([1, value], I32))
+    try:
+        cl.servers[0].poll()
+    except SandboxViolation as e:
+        refused = "ttl 9" in str(e)
+    cl.drain()
+
+    hexd = reminter.digest.hex()
+    banished = all(
+        hexd in pe.verifier.quarantined
+        and not pe.target_cache.has_name("reminter")
+        for pe in cl.pes()
+    )
+    # the refused publish never travelled one hop
+    no_spread = all(
+        pe.region("gossip_log").tolist() == [0, 0] for pe in cl.servers[1:]
+    )
+    # refused on sight thereafter: the banished digest cannot re-enter
+    resend_refused = False
+    cl.client.send_ifunc("server1", "reminter", np.array([1, value], I32))
+    try:
+        cl.servers[1].poll()
+    except SandboxViolation as e:
+        resend_refused = "quarantined" in str(e)
+    cl.drain()
+
+    # benign second half: the other tenant's traffic is unaffected
+    for i in range(n_servers):
+        cl.client.send_ifunc(f"server{i}", "tsi", payload)
+    cl.drain()
+    want = (benign_rounds + 1) * value
+    benign_exact = _counters(cl) == [want] * n_servers
+
+    roll = cl.refusals()
+    contained = all(
+        (refused, banished, no_spread, resend_refused, benign_exact)
+    ) and roll.get("verify_ttl", 0) >= 1
+    return {
+        "refused_at_mint": refused,
+        "banished_cluster_wide": banished,
+        "zero_spread": no_spread,
+        "refused_on_sight": resend_refused,
+        "benign_oracle_exact": benign_exact,
+        "refusals": roll,
+        "contained": 1.0 if contained else 0.0,
+    }
+
+
+def sandbox_ab(
+    n_servers: int = 16,
+    warm_rounds: int = 8,
+    benign_rounds: int = 3,
+    value: int = 5,
+    profile: str = "thor_bf2",
+) -> dict:
+    """The A/B: the disabled baseline, the enabled arm's cold-once/warm-free
+    verification ledger, and the hostile containment scorecard."""
+    off = run_publish_arm(n_servers, profile, warm_rounds, value, None)
+    on = run_publish_arm(
+        n_servers, profile, warm_rounds, value, SandboxConfig.on()
+    )
+    hostile = run_hostile_arm(n_servers, profile, benign_rounds, value)
+
+    overhead = 100.0 * on["warm_verifies"] / max(on["warm_hops"], 1)
+    return {
+        "config": {
+            "n_servers": n_servers,
+            "warm_rounds": warm_rounds,
+            "benign_rounds": benign_rounds,
+            "profile": profile,
+        },
+        "off": off,
+        "on": on,
+        "hostile": hostile,
+        # the headline pair: a warm tree re-verifies nothing (the stamp
+        # cache eats every digest-only hop) and hostility is contained
+        "verify_overhead_pct": round(overhead, 2),
+        "hostile_contained": hostile["contained"],
+        "cold_verify_ms_mean": on["cold_verify_ms_mean"],
+        "warm_verifies": on["warm_verifies"],
+        "oracle_checked": True,
+    }
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ab", action="store_true",
+                    help="off / on / hostile sweep (the only mode)")
+    ap.add_argument("--json", metavar="PATH", help="write the result dict to PATH")
+    ap.add_argument("--servers", type=int, default=16)
+    ap.add_argument("--warm-rounds", type=int, default=8)
+    ap.add_argument("--profile", default="thor_bf2", choices=PROFILES)
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke-test size (4 servers, 2 warm rounds)")
+    args = ap.parse_args()
+
+    out = sandbox_ab(
+        n_servers=4 if args.tiny else args.servers,
+        warm_rounds=2 if args.tiny else args.warm_rounds,
+        benign_rounds=1 if args.tiny else 3,
+        profile=args.profile,
+    )
+    # acceptance floor at every size: the warm path must be free and the
+    # hostile scenario contained — both are binary, not statistical
+    assert out["verify_overhead_pct"] == 0.0, out["verify_overhead_pct"]
+    assert out["hostile_contained"] == 1.0, out["hostile"]
+    if not args.tiny:
+        assert out["on"]["cold_verifies"] >= args.servers
+    text = json.dumps(out, indent=1, default=float)
+    print(text)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,9 @@ Public API re-exports.  Layering:
                (re-exported by the stable `ifunc` module)
   reliability — exactly-once delivery config: seq/ack windows, retransmit
                timers, failure detection knobs
+  verify     — safe code injection: install-time bitcode verifier +
+               runtime resource sandbox (capability stamps, quotas,
+               cluster-wide quarantine)
   xrdma      — Chaser / ReturnResult / TSI / Gatherer / Reducer / Gossiper
   cluster    — in-process cluster + deterministic scheduler
   pointer_chase — DAPC miniapp + GBPC baseline (Secs. IV-C/D)
@@ -67,6 +70,12 @@ from .propagate import (
     tree_depth,
     tree_parent,
 )
+from .verify import (
+    CapabilityStamp,
+    SandboxConfig,
+    SandboxViolation,
+    Verifier,
+)
 from .transport import (
     Endpoint,
     EndpointDead,
@@ -96,6 +105,7 @@ __all__ = [
     "A_SPAWN",
     "BitcodeSlice",
     "CacheStats",
+    "CapabilityStamp",
     "ChaseReport",
     "Cluster",
     "CompletionQueue",
@@ -121,10 +131,13 @@ __all__ = [
     "ProtocolError",
     "RegionWrite",
     "ReliabilityConfig",
+    "SandboxConfig",
+    "SandboxViolation",
     "SenderCache",
     "SlabLayout",
     "TargetCodeCache",
     "Toolchain",
+    "Verifier",
     "WIRE_PROFILES",
     "WireLayer",
     "WireModel",

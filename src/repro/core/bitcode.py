@@ -23,6 +23,8 @@ from typing import Any, Callable, Mapping, Sequence
 import jax
 import jax.export
 
+from .frame import CorruptFrame
+
 # Target triples. ``platform`` is what jax.export lowers for; ``mcpu`` models
 # the micro-architecture field the paper optimizes for on the target (A64FX
 # SVE vs. Xeon AVX2). On this container only the cpu slice is *executable*,
@@ -127,15 +129,30 @@ class FatBitcode:
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "FatBitcode":
+        """Parse one archive; anything malformed — truncated slice table,
+        undecodable triple, lengths past the end of the buffer — is a loud
+        :class:`~repro.core.frame.CorruptFrame`, never a struct/index/
+        decode error leaking out of a hostile frame."""
         if data[:4] != _MAGIC:
-            raise ValueError("not a fat-bitcode archive")
+            raise CorruptFrame("not a fat-bitcode archive")
+        if len(data) < 6:
+            raise CorruptFrame("corrupt fat-bitcode: truncated slice count")
         (n,) = struct.unpack_from("<H", data, 4)
         off = 6
         slices: dict[str, bytes] = {}
         for _ in range(n):
+            if len(data) < off + 6:
+                raise CorruptFrame("corrupt fat-bitcode: truncated slice header")
             tlen, blen = struct.unpack_from("<HI", data, off)
             off += 6
-            triple = data[off : off + tlen].decode()
+            if len(data) < off + tlen + blen:
+                raise CorruptFrame("corrupt fat-bitcode: slice exceeds archive")
+            try:
+                triple = data[off : off + tlen].decode()
+            except UnicodeDecodeError as e:
+                raise CorruptFrame(
+                    f"corrupt fat-bitcode: undecodable triple ({e})"
+                ) from None
             off += tlen
             slices[triple] = data[off : off + blen]
             off += blen

@@ -92,6 +92,15 @@ class SenderCache:
         with self._lock:
             self._seen = {k for k in self._seen if k[0] != endpoint}
 
+    def invalidate_digest(self, digest: str) -> None:
+        """Drop all entries for one code digest, every endpoint: the digest
+        was quarantined (sandbox refusal) and uninstalled fabric-wide, so
+        any later send of those bytes must travel full — where the
+        receiving verifier refuses it loudly instead of silently invoking
+        a stale truncated reference."""
+        with self._lock:
+            self._seen = {k for k in self._seen if k[1] != digest}
+
 
 @dataclass
 class CachedExecutable:

@@ -18,6 +18,7 @@ from .pe import PE, Toolchain
 from .propagate import PropagationConfig
 from .reliability import ReliabilityConfig
 from .transport import Fabric, WireModel
+from .verify import SandboxConfig
 
 
 class Cluster:
@@ -101,6 +102,37 @@ class Cluster:
         cfg = config or ReliabilityConfig()
         for pe in self.pes():
             pe.reliability = cfg
+
+    def set_sandbox(self, config: SandboxConfig | None) -> None:
+        """Install one safe-code-injection policy (install-time verifier +
+        runtime quotas) on every PE, and wire quarantine propagation: a
+        digest refused anywhere is uninstalled everywhere, every sender
+        cache forgets it, and each PE degrades its own in-flight futures;
+        ``None`` restores the default (disabled — the unverified runtime,
+        bit-for-bit)."""
+        cfg = config or SandboxConfig()
+        for pe in self.pes():
+            pe.sandbox = cfg
+            # idempotent re-wiring: exactly one cluster listener per PE
+            pe.verifier.on_quarantine = [self._quarantine_cluster_wide]
+
+    def _quarantine_cluster_wide(self, digest: str, name: str) -> None:
+        """One PE originated a quarantine: absorb it on every PE (local
+        uninstall + CQ degradation + queue purge, no re-broadcast) and
+        make every sender cache forget the digest, so no truncated frame
+        referencing the banished code ever travels again."""
+        for pe in self.pes():
+            pe.sender_cache.invalidate_digest(digest)
+            pe.verifier.absorb_quarantine(digest, name)
+
+    def refusals(self) -> dict[str, int]:
+        """Cluster-wide rollup of every PE's refusal counters (publish-path
+        refusals, verifier refusals, sandbox quota refusals), per reason."""
+        total: dict[str, int] = {}
+        for pe in self.pes():
+            for reason, n in pe.stats.refusals.items():
+                total[reason] = total.get(reason, 0) + n
+        return total
 
     def _recovery_grace(self) -> int:
         """Zero-progress rounds the scheduler must tolerate before calling

@@ -457,7 +457,8 @@ def delivery_complete(buf: bytes | bytearray | memoryview, expect_code: bool) ->
 def unpack(buf: bytes | bytearray | memoryview, has_code: bool) -> Frame:
     """Materialize a Frame from a delivered buffer."""
     hdr = peek_header(buf)
-    assert hdr is not None
+    if hdr is None:
+        raise CorruptFrame("corrupt frame: truncated header")
     off = hdr.header_len
     payload = bytes(buf[off : off + hdr.payload_len])
     off += hdr.payload_len
@@ -471,7 +472,10 @@ def unpack(buf: bytes | bytearray | memoryview, has_code: bool) -> Frame:
         off += hdr.code_len
         deps_b = bytes(buf[off : off + hdr.deps_len])
         off += hdr.deps_len
-        deps = tuple(d for d in deps_b.decode().split("\n") if d)
+        try:
+            deps = tuple(d for d in deps_b.decode().split("\n") if d)
+        except UnicodeDecodeError as e:
+            raise CorruptFrame(f"corrupt frame: undecodable deps ({e})") from None
         if bytes(buf[off : off + MAGIC_LEN]) != MAGIC:
             raise CorruptFrame("corrupt frame: bad code sentinel")
     return Frame(

@@ -32,21 +32,42 @@ class ISAMismatch(RuntimeError):
 class CodeCacheLayer:
     """Install/resolve/batch-compile for one PE's target code cache."""
 
-    def __init__(self, name: str, triple: str, cache: TargetCodeCache, stats) -> None:
+    def __init__(
+        self, name: str, triple: str, cache: TargetCodeCache, stats, verifier=None
+    ) -> None:
         self.name = name
         self.triple = triple
         self.cache = cache
         self.stats = stats  # the PE's PEStats (shared across layers)
+        self.verifier = verifier  # the PE's Verifier (None in bare tests)
+
+    def _gate(self, name, digest_hex, deps, exported, admitted_ttl=None) -> None:
+        """Run the install-time verifier over one code-cache ingress.  A
+        stamped digest is a dict hit (the warm path the benchmark pins at
+        zero cost); a quarantined or failing one raises SandboxViolation
+        before the code becomes resolvable."""
+        ver = self.verifier
+        if ver is not None and ver.config.enabled:
+            ver.admit(name, digest_hex, deps, exported, admitted_ttl)
 
     # --- install ----------------------------------------------------------
-    def install(self, frame: Frame) -> CachedExecutable:
-        """Extract slice -> (ORC-)JIT -> digest cache (Sec. III-C/D).
+    def install(
+        self, frame: Frame, admitted_ttl: int | None = None
+    ) -> CachedExecutable:
+        """Extract slice -> verify -> (ORC-)JIT -> digest cache (Sec.
+        III-C/D).  ``admitted_ttl`` is the admitting PUBLISH hop's
+        remaining budget, clamped into the capability stamp's re-mint
+        ceiling.
 
         A digest hit skips compilation entirely (ORC-JIT's internal symbol
         cache, which the paper observed makes re-JIT of already-seen code
         free) — only the name registration is new."""
         hit = self.cache.lookup_digest(frame.digest.hex())
         if hit is not None:
+            self._gate(
+                frame.name, hit.digest, frame.deps or hit.deps,
+                hit.extras.get("exported"), admitted_ttl,
+            )
             exe = CachedExecutable(
                 name=frame.name,
                 digest=hit.digest,
@@ -72,8 +93,11 @@ class CodeCacheLayer:
             blob = fat.slices[self.triple]
         else:
             blob = fat.extract(self.triple).blob
-        t0 = time.perf_counter()
         exported = jax.export.deserialize(blob)
+        # verify between deserialize and compile: a refused slice must not
+        # cost this PE an XLA compilation (the compile itself is a resource)
+        self._gate(frame.name, frame.digest.hex(), frame.deps, exported, admitted_ttl)
+        t0 = time.perf_counter()
         compiled = jax.jit(exported.call).lower(*exported.in_avals).compile()
         jit_ms = (time.perf_counter() - t0) * 1e3
         abi = "pure"
@@ -128,6 +152,9 @@ class CodeCacheLayer:
                     f"unknown code digest (stale sender cache)"
                 )
             exe = hit
+        # warm-path gate: quarantine refusal or stamp dict hit; a digest
+        # never seen by an (enabled-later) verifier is admitted here
+        self._gate(exe.name, exe.digest, exe.deps, exe.extras.get("exported"))
         return exe, frame
 
     def validate_publish_code(self, frame: Frame, hdr) -> None:
@@ -135,13 +162,15 @@ class CodeCacheLayer:
         does not hash to the header digest is refused loudly (and the
         caller must not re-publish it down the tree)."""
         if hashlib.sha256(frame.code).digest() != frame.digest:
-            self.stats.publish_refused_digest += 1
+            self.stats.refuse("publish_digest")
             raise ProtocolError(
                 f"{self.name}: publish of {hdr.name!r} carries code that does "
                 f"not match its digest (poisoned code refused, not re-published)"
             )
 
-    def resolve_publish_exe(self, hdr) -> CachedExecutable:
+    def resolve_publish_exe(
+        self, hdr, admitted_ttl: int | None = None
+    ) -> CachedExecutable:
         """Resolve a digest-only (truncated) publish: the code must already
         be digest-cached here, or the sender's cache belief was stale."""
         exe = self.cache.lookup(hdr.name)
@@ -162,8 +191,17 @@ class CodeCacheLayer:
                 kind=int(hdr.kind),
                 extras=dict(hit.extras),
             )
+            self._gate(
+                exe.name, exe.digest, exe.deps,
+                exe.extras.get("exported"), admitted_ttl,
+            )
             self.cache.install(exe, jit_ms=0.0)
             self.stats.ifunc_installs += 1
+        else:
+            self._gate(
+                exe.name, exe.digest, exe.deps,
+                exe.extras.get("exported"), admitted_ttl,
+            )
         return exe
 
     # --- batched executables ----------------------------------------------

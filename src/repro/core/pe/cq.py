@@ -78,6 +78,12 @@ class CompletionQueue:
         self.max_slots = max_slots
         self.region = region
         pe.register_region(region, np.zeros((max_slots, 2 + self.width), np.int32))
+        # the owning PE tracks its queues so a sandbox quarantine can
+        # degrade the in-flight futures of a banished digest (older stub
+        # PEs in unit tests may lack the registry)
+        queues = getattr(pe, "completion_queues", None)
+        if queues is not None:
+            queues.append(self)
         self._free: deque[int] = deque(range(max_slots))
         self._inflight: dict[int, "GatherFuture"] = {}
         # per-tag (tenant) slot occupancy, for quota-bounded admission:
@@ -199,15 +205,27 @@ class GatherFuture:
     submit_tick: int = 0
     deadline: int = 0  # ticks before expiry; 0 = no deadline
     attempts: int = 0  # service-level resubmissions so far
+    code_digest: str = ""  # digest of the submitted ifunc (quarantine sweep)
+    poisoned: bool = False  # the submitted code was quarantined mid-flight
     _released: bool = False
 
+    def poison(self) -> None:
+        """Mark this future's code quarantined: it reads as expired from
+        now on, so the service's recovery sweep degrades it through
+        :meth:`result_partial` (partial rows + validity mask) instead of
+        waiting for RETURNs that are never coming."""
+        self.poisoned = True
+
     def expired(self) -> bool:
-        """Past the deadline with results still missing (never true for
-        a completed or released future, or with no deadline armed)."""
+        """Past the deadline with results still missing — or poisoned by a
+        sandbox quarantine (never true for a completed or released
+        future; absent both, no deadline armed means no expiry)."""
+        if self._released or self.done():
+            return False
+        if self.poisoned:
+            return True
         return (
             self.deadline > 0
-            and not self._released
-            and not self.done()
             and self.queue.ticks - self.submit_tick >= self.deadline
         )
 

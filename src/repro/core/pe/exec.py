@@ -60,12 +60,20 @@ import numpy as np
 
 from ..cache import CachedExecutable
 from ..frame import ProtocolError
+from .. import verify as _verify_codes
 
 if TYPE_CHECKING:  # pragma: no cover - annotations only
     from .codecache import CodeCacheLayer
 
 ACTION_WIDTH = 11  # [action, dst, plen, p0..p7]
 A_DONE, A_FORWARD, A_RETURN, A_SPAWN, A_NOP, A_PUBLISH = 0, 1, 2, 3, 4, 5
+
+# core/verify.py mirrors these codes (importing this package there would
+# cycle through the pe facade); keep the two in lockstep
+assert (A_DONE, A_FORWARD, A_RETURN, A_SPAWN, A_NOP, A_PUBLISH) == (
+    _verify_codes.A_DONE, _verify_codes.A_FORWARD, _verify_codes.A_RETURN,
+    _verify_codes.A_SPAWN, _verify_codes.A_NOP, _verify_codes.A_PUBLISH,
+)
 
 
 # --------------------------------------------------------- dep-list helpers
@@ -99,10 +107,11 @@ class ExecLayer:
     the travelling actions to the wire.
     """
 
-    def __init__(self, rt, codecache: "CodeCacheLayer", stats) -> None:
+    def __init__(self, rt, codecache: "CodeCacheLayer", stats, verifier=None) -> None:
         self.rt = rt
         self.codecache = codecache
         self.stats = stats  # the PE's PEStats (shared across layers)
+        self.verifier = verifier  # the PE's sandbox ledger (None in bare tests)
 
     # --- payload/dep decoding ---------------------------------------------
     @staticmethod
@@ -141,6 +150,11 @@ class ExecLayer:
 
     # --- invoke -------------------------------------------------------------
     def invoke(self, exe: CachedExecutable, payload: bytes) -> None:
+        ver = self.verifier
+        if ver is not None and ver.config.enabled:
+            # retire-time quota charge, before the dispatch: code over its
+            # payload/invoke budget is refused + quarantined, never run
+            ver.charge_invoke(exe, [len(payload)])
         self.stats.invokes += 1
         self.stats.invoked_payloads += 1
         pay = self.decode_payload(exe, payload)
@@ -167,6 +181,9 @@ class ExecLayer:
         if len(pays) == 1:  # the per-message executable is already compiled
             self.invoke(exe, pays[0])
             return
+        ver = self.verifier
+        if ver is not None and ver.config.enabled:
+            ver.charge_invoke(exe, [len(p) for p in pays])
         n = len(pays)
         bucket = self.codecache.bucket(n)
         block = self.decode_payload_block(exe, pays, bucket)
@@ -219,6 +236,11 @@ class ExecLayer:
         pay = np.ascontiguousarray(action[3 : 3 + plen])
         if code == A_NOP:
             return
+        ver = self.verifier
+        if ver is not None and ver.config.enabled:
+            # capability-stamp action whitelist + cumulative action/fan-out
+            # quotas; a refused row quarantines the digest before dispatch
+            ver.charge_action(exe, code)
         if code == A_DONE:
             self.rt.completed.append(pay)
             return

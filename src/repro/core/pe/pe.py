@@ -33,6 +33,7 @@ from ..frame import Frame, FrameFlags, FrameKind, HopHeader, ProtocolError, pack
 from ..propagate import PropagationConfig, tree_children
 from ..reliability import ReliabilityConfig
 from ..transport import EndpointDead, Fabric
+from ..verify import SandboxConfig, Verifier
 from .codecache import CodeCacheLayer
 from .cq import CompletionQueue, GatherFuture
 from .exec import ExecLayer
@@ -64,9 +65,6 @@ class PEStats:
     publishes: int = 0  # hop frames sent (root fan-out + re-publishes)
     publish_handled: int = 0  # publishes accepted (installed/invoked) here
     publish_dupes: int = 0  # re-delivered publishes dropped by the dedup key
-    publish_refused_ttl: int = 0  # arrived with ttl already expired (loud)
-    publish_refused_cycle: int = 0  # own index on the visited path (loud)
-    publish_refused_digest: int = 0  # code bytes != header digest (poisoned)
     publish_stopped_ttl: int = 0  # had children but no hop budget left
     publish_send_failures: int = 0  # child endpoint dead at re-publish time
     # --- reliability layer (sender: wire.py / receiver: progress.py) ---
@@ -86,6 +84,30 @@ class PEStats:
     # --- multi-tenant QoS (wire layer) ---
     tenant_sends: dict = field(default_factory=dict)  # frames sent, per tenant
     tenant_stalls: dict = field(default_factory=dict)  # budget stalls, per tenant
+    # --- unified refusal accounting (publish path + verifier + quotas) ---
+    # reason -> count; reasons: publish_ttl / publish_cycle / publish_digest
+    # (the PR 4 publish-path refusals), verify_quarantined / verify_ops /
+    # verify_region / verify_action / verify_ttl (install-time verifier),
+    # quota_payload / quota_invokes / quota_actions / quota_fanout (runtime
+    # sandbox), quarantine_drop (queued frames purged on quarantine)
+    refusals: dict = field(default_factory=dict)
+
+    def refuse(self, reason: str, n: int = 1) -> None:
+        self.refusals[reason] = self.refusals.get(reason, 0) + n
+
+    # legacy spellings of the PR 4 publish-path counters, now keys in the
+    # unified dict (read-only: writers must go through refuse())
+    @property
+    def publish_refused_ttl(self) -> int:
+        return self.refusals.get("publish_ttl", 0)
+
+    @property
+    def publish_refused_cycle(self) -> int:
+        return self.refusals.get("publish_cycle", 0)
+
+    @property
+    def publish_refused_digest(self) -> int:
+        return self.refusals.get("publish_digest", 0)
 
     def bump_tenant(self, which: str, tenant: str, n: int = 1) -> None:
         d = self.tenant_sends if which == "sends" else self.tenant_stalls
@@ -96,6 +118,7 @@ class PEStats:
         d["jit_ms_total"] = round(self.jit_ms_total, 3)
         d["tenant_sends"] = dict(self.tenant_sends)
         d["tenant_stalls"] = dict(self.tenant_stalls)
+        d["refusals"] = dict(self.refusals)
         return d
 
 
@@ -146,12 +169,18 @@ class PE:
         self.propagation = PropagationConfig()  # tree multicast policy
         self._region_dev: dict[str, tuple[int, jax.Array]] = {}
         self._pub_seq = 0  # publish ids minted by this PE as a tree root
+        # completion queues draining into this PE (quarantine sweeps them)
+        self.completion_queues: list[CompletionQueue] = []
         # --- the layers (constructed over the shared state above) ---
+        self.verifier = Verifier(name, self.stats)
+        self.verifier.local_cleanup = self._quarantine_cleanup
         self.wire = WireLayer(
             name, fabric, self.endpoint, self.sender_cache, self.stats, self.peers
         )
-        self.codecache = CodeCacheLayer(name, triple, self.target_cache, self.stats)
-        self.execl = ExecLayer(self, self.codecache, self.stats)
+        self.codecache = CodeCacheLayer(
+            name, triple, self.target_cache, self.stats, self.verifier
+        )
+        self.execl = ExecLayer(self, self.codecache, self.stats, self.verifier)
         self.progress = ProgressEngine(
             self, self.wire, self.codecache, self.execl, self.stats
         )
@@ -222,6 +251,17 @@ class PE:
         self.wire.reliability = cfg
         self.progress.detector.monitor.max_misses = cfg.max_misses
 
+    @property
+    def sandbox(self) -> SandboxConfig:
+        """The safe-code-injection policy (see
+        :class:`repro.core.verify.SandboxConfig`); the default (disabled)
+        config is the unverified runtime bit-for-bit."""
+        return self.verifier.config
+
+    @sandbox.setter
+    def sandbox(self, config: SandboxConfig | None) -> None:
+        self.verifier.config = config or SandboxConfig()
+
     # --- failure handling ---------------------------------------------------
     def _on_peer_suspect(self, peer: str) -> None:
         self.progress.detector.suspect(peer, self.progress.tick)
@@ -251,6 +291,28 @@ class PE:
         self.fabric.clear_peer_credits(self.name, peer)
         if forgive:
             self.progress.detector.forgive(peer)
+
+    def _quarantine_cleanup(self, digest: str, name: str) -> None:
+        """Local teardown for one quarantined digest (the verifier's
+        ``local_cleanup`` hook): uninstall the compiled executable, forget
+        every sender-cache truncation belief, purge queued frames still
+        carrying the digest, and degrade in-flight CQ futures waiting on
+        it via the validity-mask path instead of letting them hang."""
+        exe = self.target_cache.lookup_digest(digest)
+        if exe is not None:
+            self.target_cache.deregister(exe.name)
+        elif name:
+            held = self.target_cache.lookup(name)
+            if held is not None and held.digest == digest:
+                self.target_cache.deregister(name)
+        self.sender_cache.invalidate_digest(digest)
+        dropped = self.wire.drop_queued_digest(bytes.fromhex(digest))
+        if dropped:
+            self.stats.refuse("quarantine_drop", dropped)
+        for cq in self.completion_queues:
+            for fut in list(cq._inflight.values()):
+                if fut.code_digest == digest:
+                    fut.poison()
 
     # --- local state ------------------------------------------------------
     def register_region(self, name: str, arr: np.ndarray) -> None:
@@ -508,6 +570,7 @@ class PE:
             queue=queue, slot=slot, expected=int(expected),
             submit_tick=queue.ticks,
             deadline=rel.future_deadline if rel.enabled else 0,
+            code_digest=self.resolve_source(name).digest.hex(),
         )
         queue._inflight[slot] = fut
         try:
@@ -574,6 +637,7 @@ class PE:
         the hop budget it grants, the rest travels as the published
         payload; the paper's "recursively propagate itself" emitted by the
         code, not the runtime."""
+        self.verifier.check_publish_ttl(exe, int(pay[0]))
         me = self.peer_index(self.name)
         self._pub_seq += 1
         hop = HopHeader(

@@ -615,21 +615,23 @@ class ProgressEngine:
             self.stats.publish_dupes += 1
             return
         if hop.ttl <= 0:
-            self.stats.publish_refused_ttl += 1
+            self.stats.refuse("publish_ttl")
             raise ProtocolError(
                 f"{self.rt.name}: publish of {hdr.name!r} arrived with expired "
                 f"ttl (path {hop.path})"
             )
         if me in hop.path:
-            self.stats.publish_refused_cycle += 1
+            self.stats.refuse("publish_cycle")
             raise ProtocolError(
                 f"{self.rt.name}: publish of {hdr.name!r} would cycle — own "
                 f"index {me} already on path {hop.path}"
             )
+        # the admitting hop's ttl clamps the verifier's capability stamp:
+        # code delivered with budget t may never re-mint a tree deeper than t
         if has_code:
-            exe = self.codecache.install(frame)
+            exe = self.codecache.install(frame, admitted_ttl=hop.ttl)
         else:
-            exe = self.codecache.resolve_publish_exe(hdr)
+            exe = self.codecache.resolve_publish_exe(hdr, admitted_ttl=hop.ttl)
         self._seen_pubs.add(key)
         if src and hdr.seq and self.wire.reliability.enabled:
             # queued for retirement once this frame's seq is cumulatively

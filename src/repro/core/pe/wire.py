@@ -323,6 +323,29 @@ class WireLayer:
         self._acked_sent.pop(peer, None)
         self._suspect.discard(peer)
 
+    def drop_queued_digest(self, digest: bytes) -> int:
+        """Purge every not-yet-transmitted frame carrying ``digest`` from
+        the batching send queues and the credit-stall lanes: the digest
+        was quarantined, and a queued frame must not carry banished code
+        (or a digest-only reference to it) onto the fabric after the
+        uninstall.  Returns the number of frames dropped."""
+        dropped = 0
+        for dst, frames in list(self._sendq.items()):
+            kept = [f for f in frames if f.digest != digest]
+            dropped += len(frames) - len(kept)
+            if kept:
+                self._sendq[dst] = kept
+            else:
+                del self._sendq[dst]
+        for lane, q in list(self._creditq.items()):
+            kept_q = deque(f for f in q if f.digest != digest)
+            dropped += len(q) - len(kept_q)
+            if kept_q:
+                self._creditq[lane] = kept_q
+            else:
+                del self._creditq[lane]
+        return dropped
+
     def pump(self) -> int:
         """Transmit credit-stalled frames whose window (and tenant budget)
         reopened; returns the number sent.  Lanes drain independently —

@@ -24,6 +24,13 @@ Wire-format counterpart: :class:`repro.core.frame.HopHeader` (ttl + path
 digest); runtime counterpart: the PUBLISH path in
 :mod:`repro.core.pe.progress` (target side) and the publish fan-out on the
 :mod:`repro.core.pe.pe` facade (source side).
+
+Safety counterpart: :mod:`repro.core.verify`.  Under a sandbox the
+verifier caps recursive propagation *below* this module's ttl: a digest's
+capability stamp records ``min(SandboxConfig.max_publish_ttl, admitting
+hop's ttl)``, so shipped code re-publishing itself (A_PUBLISH) can spend
+hops but never re-mint a budget larger than the one it arrived with —
+``DEFAULT_TTL`` here is the ceiling an *unsandboxed* publish starts from.
 """
 
 from __future__ import annotations

@@ -1,5 +1,12 @@
 """Health monitoring: heartbeats and straggler detection.
 
+.. deprecated::
+   ``HeartbeatMonitor`` lives in :mod:`repro.core.liveness`; this module
+   is kept as a re-export shim for deployment-facing imports and will not
+   grow new liveness features — import from ``repro.core.liveness`` in
+   new code.  ``StragglerPolicy``/``StepTimer`` still live here (they are
+   training-loop policy, not fabric liveness).
+
 On a real multi-pod deployment each host process runs a heartbeat thread
 against the coordinator (jax.distributed's liveness check plays this role
 natively); here the monitor is exercised in-process against the simulated

@@ -28,18 +28,26 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.verify import SandboxConfig
 from repro.runtime.embed_service import EmbedShardService
 
 
 @dataclass(frozen=True)
 class TenantClass:
-    """One tenant's QoS contract (all zeros = best-effort, no isolation)."""
+    """One tenant's QoS contract (all zeros = best-effort, no isolation).
+
+    ``sandbox`` optionally declares the code-injection policy this tenant
+    is willing to run under; the router merges every declaring class's
+    policy with :meth:`SandboxConfig.strictest` and installs the result
+    cluster-wide — the substrate is shared, so the fabric must enforce
+    the strictest contract any tenant demanded."""
 
     name: str
     express: bool = False  # control-lane drain priority at the receivers
     credit_budget: int = 0  # outgoing payloads in flight (0 = unbudgeted)
     slot_quota: int = 0  # concurrent CQ slots (0 = uncapped)
     queue_limit: int = 0  # outstanding requests before shedding (0 = never)
+    sandbox: SandboxConfig | None = None  # code-injection policy (None = none)
 
 
 @dataclass
@@ -91,6 +99,10 @@ class TenantRouter:
         service.cluster.set_tenant_budgets(
             {c.name: c.credit_budget for c in classes if c.credit_budget}
         )
+        # install the strictest declared code-injection policy cluster-wide
+        boxes = [c.sandbox for c in classes if c.sandbox is not None]
+        if boxes:
+            service.cluster.set_sandbox(SandboxConfig.strictest(boxes))
 
     # ------------------------------------------------------------------ API
     def outstanding(self, tenant: str) -> int:

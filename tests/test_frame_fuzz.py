@@ -1,0 +1,210 @@
+"""Fuzz-hardening of the wire-ingest surfaces (satellite of the sandbox PR).
+
+Contract: hostile bytes fed to any parser a remote peer can reach —
+``peek_header`` / ``unpack`` / ``unpack_hop`` / ``uvarint_decode`` /
+``unpack_payloads`` / ``unpack_rndv`` / ``FatBitcode.from_bytes`` — must
+either succeed on genuinely well-formed input or raise the
+:class:`ProtocolError` family (:class:`CorruptFrame`), **never** leak an
+``IndexError`` / ``struct.error`` / ``UnicodeDecodeError`` /
+``AssertionError`` out of the parsing layer.  ``peek_header`` may also
+return ``None`` (more bytes pending) and ``delivery_complete`` ``False``
+— those are flow-control signals, not errors.
+
+test_core_frame.py already property-tests round-trips and single-byte
+tampering; this module drives *structured* hostility: truncation at every
+prefix length of a valid buffer, forged length fields that point past the
+end, and undecodable text sections.
+"""
+
+import struct
+
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis, or fallback
+
+from repro.core.bitcode import FatBitcode
+from repro.core.frame import (
+    CorruptFrame,
+    Frame,
+    FrameKind,
+    HopHeader,
+    ProtocolError,
+    delivery_complete,
+    pack_hop,
+    pack_payloads,
+    peek_header,
+    unpack,
+    unpack_hop,
+    unpack_payloads,
+    unpack_rndv,
+    uvarint_decode,
+)
+
+FORBIDDEN = (IndexError, struct.error, UnicodeDecodeError, AssertionError)
+
+
+def _frame_buf(deps=("abi:update", "region:counter")) -> bytes:
+    return Frame(
+        kind=FrameKind.BITCODE,
+        name="fuzzee",
+        payload=b"\x01\x02\x03\x04",
+        code=b"C" * 40,
+        deps=deps,
+        digest=b"\xab" * 32,
+    ).pack()
+
+
+def _fat_buf() -> bytes:
+    return FatBitcode(
+        slices={"cpu-host": b"H" * 24, "tpu-v5e": b"T" * 56}
+    ).to_bytes()
+
+
+def _ingest_all(buf: bytes) -> None:
+    """Feed one buffer to every reachable parser; loud or clean only."""
+    for fn in (
+        lambda b: peek_header(b),
+        lambda b: unpack(b, has_code=True),
+        lambda b: unpack(b, has_code=False),
+        lambda b: delivery_complete(b, expect_code=True),
+        lambda b: unpack_hop(b),
+        lambda b: uvarint_decode(b, 0),
+        lambda b: unpack_payloads(b),
+        lambda b: FatBitcode.from_bytes(b),
+    ):
+        try:
+            fn(buf)
+        except ProtocolError:
+            pass
+        except ValueError as e:  # CorruptFrame is also a ValueError
+            assert not isinstance(e, FORBIDDEN), e
+
+
+# ---------------------------------------------------------------- truncation
+class TestTruncation:
+    def test_frame_every_prefix_is_loud_or_pending(self):
+        buf = _frame_buf()
+        for cut in range(len(buf)):
+            prefix = buf[:cut]
+            assert peek_header(prefix) is None or True  # must not raise junk
+            try:
+                unpack(prefix, has_code=True)
+            except ProtocolError:
+                continue
+            except FORBIDDEN as e:  # pragma: no cover - the failure mode
+                pytest.fail(f"cut={cut}: {type(e).__name__} leaked: {e}")
+            pytest.fail(f"cut={cut}: truncated frame parsed silently")
+
+    def test_fat_bitcode_every_prefix_is_loud(self):
+        buf = _fat_buf()
+        for cut in range(len(buf)):
+            try:
+                FatBitcode.from_bytes(buf[:cut])
+            except CorruptFrame:
+                continue
+            except FORBIDDEN as e:  # pragma: no cover - the failure mode
+                pytest.fail(f"cut={cut}: {type(e).__name__} leaked: {e}")
+            pytest.fail(f"cut={cut}: truncated archive parsed silently")
+
+    def test_fat_bitcode_roundtrip_still_exact(self):
+        fat = FatBitcode.from_bytes(_fat_buf())
+        assert fat.slices == {"cpu-host": b"H" * 24, "tpu-v5e": b"T" * 56}
+
+    def test_hop_every_prefix_is_loud(self):
+        buf = pack_hop(HopHeader(ttl=3, root=2, pub_id=9, path=(2, 0), k=0))
+        for cut in range(len(buf)):
+            with pytest.raises(CorruptFrame):
+                unpack_hop(buf[:cut])
+
+
+# ------------------------------------------------------------- forged fields
+class TestForgedLengths:
+    def test_fat_bitcode_slice_count_lies(self):
+        """A slice count larger than the archive holds must not walk off
+        the buffer (the pre-hardening struct.error/IndexError path)."""
+        buf = bytearray(_fat_buf())
+        struct.pack_into("<H", buf, 4, 0xFFFF)
+        with pytest.raises(CorruptFrame, match="truncated slice"):
+            FatBitcode.from_bytes(bytes(buf))
+
+    def test_fat_bitcode_blob_length_lies(self):
+        buf = bytearray(_fat_buf())
+        struct.pack_into("<I", buf, 8, 2**31)  # first slice's blob length
+        with pytest.raises(CorruptFrame, match="exceeds archive"):
+            FatBitcode.from_bytes(bytes(buf))
+
+    def test_fat_bitcode_triple_not_utf8(self):
+        buf = bytearray(_fat_buf())
+        buf[12] = 0xFF  # first byte of the first triple's name
+        with pytest.raises(CorruptFrame, match="undecodable"):
+            FatBitcode.from_bytes(bytes(buf))
+
+    def test_fat_bitcode_bad_magic_is_corrupt_and_value_error(self):
+        err = None
+        try:
+            FatBitcode.from_bytes(b"XXXX" + _fat_buf()[4:])
+        except CorruptFrame as e:
+            err = e
+        assert err is not None and isinstance(err, ValueError)
+        assert "not a fat-bitcode archive" in str(err)
+
+    def test_frame_deps_not_utf8(self):
+        """Corrupt the DEPS text section of a full frame: unpack must
+        refuse loudly, not leak UnicodeDecodeError."""
+        frame = Frame(
+            kind=FrameKind.BITCODE,
+            name="fuzzee",
+            payload=b"p",
+            code=b"C" * 8,
+            deps=("abi:update",),
+            digest=b"\xab" * 32,
+        )
+        buf = bytearray(frame.pack())
+        deps_off = len(buf) - 8 - len("abi:update")  # before trailing MAGIC
+        buf[deps_off] = 0xFF
+        with pytest.raises(CorruptFrame, match="deps"):
+            unpack(bytes(buf), has_code=True)
+
+    def test_rndv_wrong_sizes_are_loud(self):
+        for n in (0, 1, 8, 15, 17, 32):
+            with pytest.raises(CorruptFrame):
+                unpack_rndv(b"\x00" * n)
+
+    def test_batch_count_lies(self):
+        section = bytearray(pack_payloads([b"ab", b"cd"]))
+        section[0] = 0x7F  # claim 127 payloads
+        with pytest.raises(CorruptFrame):
+            unpack_payloads(bytes(section))
+
+
+# ----------------------------------------------------------- random hostility
+@settings(max_examples=200, deadline=None)
+@given(junk=st.binary(min_size=0, max_size=200))
+def test_garbage_never_leaks_low_level_errors(junk):
+    _ingest_all(junk)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    pos=st.integers(min_value=0, max_value=10_000),
+    val=st.integers(min_value=0, max_value=255),
+)
+def test_single_byte_corruption_never_leaks(pos, val):
+    """Overwrite one byte anywhere in a valid frame, archive, or batch
+    section: every ingest either still parses (benign byte) or refuses
+    via the ProtocolError family."""
+    for base in (_frame_buf(), _fat_buf(), pack_payloads([b"xy", b"zw!"])):
+        buf = bytearray(base)
+        buf[pos % len(buf)] = val
+        _ingest_all(bytes(buf))
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    junk=st.binary(min_size=0, max_size=64),
+    hdr=st.binary(min_size=0, max_size=24),
+)
+def test_valid_magic_with_hostile_tail_never_leaks(junk, hdr):
+    """The adversary knows the magics: prefix them to junk so parsing gets
+    past the cheap first check into the length-field logic."""
+    _ingest_all(b"FBC1" + junk)
+    _ingest_all(b"3CHN" + hdr + junk)  # frame header magic (HDR_MAGIC)

@@ -214,6 +214,105 @@ class TestExpressLane:
         assert int(srv.region("counter")[0]) == 103
 
 
+# ------------------------------------------------------------- quota edges
+class TestQuotaEdges:
+    def test_zero_quota_fields_mean_unlimited(self):
+        """The all-zeros class is documented best-effort: no shedding, no
+        slot cap, no budget — a backlog deeper than the CQ still completes
+        via admission backpressure alone."""
+        cl, svc = service(max_slots=4)
+        router = TenantRouter(svc, [TenantClass("t")])
+        keys = batches(svc, 10)
+        rids = [router.submit("t", k) for k in keys]
+        assert None not in rids and router.stats["t"].shed == 0
+        done = []
+        while svc.queue or svc.active:
+            done += router.tick()
+        assert sorted(r.rid for r in done) == rids
+        assert svc.cq.free_slots == svc.max_slots
+
+    def test_slot_quota_exactly_at_max_slots(self):
+        """quota == max_slots is the degenerate cap: global saturation and
+        the tenant ledger bind at the same point, and neither leaks."""
+        cl, svc = service(max_slots=4)
+        router = TenantRouter(
+            svc, [TenantClass("t", slot_quota=svc.max_slots)]
+        )
+        rids = [router.submit("t", k) for k in batches(svc, 7)]
+        done = []
+        while svc.queue or svc.active:
+            done += router.tick()
+            assert svc.cq.tag_inflight("t") <= svc.max_slots
+        assert sorted(r.rid for r in done) == rids
+        assert svc.cq.tag_inflight("t") == 0
+        assert svc.cq.free_slots == svc.max_slots
+
+    def test_queue_limit_exactly_at_offered_load(self):
+        """Submitting exactly queue_limit requests sheds nothing; the
+        (limit+1)-th is the first refusal."""
+        cl, svc = service()
+        router = TenantRouter(svc, [TenantClass("t", queue_limit=3)])
+        keys = batches(svc, 4)
+        rids = [router.submit("t", k) for k in keys[:3]]
+        assert None not in rids and router.stats["t"].shed == 0
+        assert router.submit("t", keys[3]) is None
+        assert router.stats["t"].shed == 1
+        while svc.queue or svc.active:
+            router.tick()
+        assert router.stats["t"].served == 3
+
+    def test_quota_held_requests_survive_recovery_sweep(self):
+        """The interaction the sandbox PR hardens: requests held on the
+        quota aside-list while ``_recover`` degrades a dead-owner future
+        must neither be lost, double-admitted, nor leak a slot.  Every
+        accepted request retires exactly once (degraded or whole) and the
+        CQ ledgers drain to empty."""
+        from repro.core import ReliabilityConfig
+
+        cl, svc = service(n_servers=2, max_slots=4, vocab_per_shard=16)
+        cl.set_reliability(
+            ReliabilityConfig.on(
+                rto_ticks=1, retransmit_budget=2, max_misses=2,
+                future_deadline=8,
+            )
+        )
+        router = TenantRouter(svc, [TenantClass("hot", slot_quota=1)])
+        # every request touches both shards: key < 16 owned by server0,
+        # key >= 16 by server1 — so server0's death degrades, not voids
+        keys = [np.array([2 + i, 18 + i], I32) for i in range(4)]
+        rids = [router.submit("hot", k) for k in keys]
+        assert None not in rids
+        done = router.tick()  # admits one (quota), holds three aside
+        assert len(svc.queue) == 3  # the aside-list requeued, none lost
+        cl.kill_server(0)
+        ticks = 0
+        while svc.queue or svc.active:
+            done += router.tick()
+            assert svc.cq.tag_inflight("hot") <= 1  # quota held throughout
+            ticks += 1
+            assert ticks < 10_000
+        done += router.tick()
+        # exactly-once through the sweep: all four retired, none twice
+        assert sorted(r.rid for r in done) == rids
+        for req, k in zip(sorted(done, key=lambda r: r.rid), keys):
+            if req.degraded:  # admitted after (or across) the death
+                # server0's half can never be valid; server1's half may or
+                # may not have landed before the recovery sweep fired —
+                # but whatever is marked valid must be oracle-exact.
+                assert not req.valid.tolist()[0]
+                for j, ok in enumerate(req.valid.tolist()):
+                    if ok:
+                        np.testing.assert_array_equal(
+                            req.rows[j], svc.table[k[j]]
+                        )
+            else:  # completed whole before server0 died
+                np.testing.assert_array_equal(req.rows, svc.table[k])
+        assert sum(r.degraded for r in done) >= 3
+        # no slot leak, no stale tag ledger
+        assert svc.cq.free_slots == svc.max_slots
+        assert svc.cq.tag_inflight("hot") == 0
+
+
 # ------------------------------------------------------ remote-embed decode
 @pytest.fixture(scope="module")
 def served():
