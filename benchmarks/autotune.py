@@ -1,0 +1,252 @@
+"""Trace-driven knob autotuning: capture → replay → tune → live A/B proof.
+
+Closes the loop over the runtime's grown configuration space (batching,
+data-plane thresholds, credit windows, poll budgets, lanes, propagation
+fanout): for each calibrated hardware profile × workload cell,
+
+  1. run the workload once under the hand-tuned default runtime with a
+     :class:`repro.analysis.TraceRecorder` attached and prove *replay
+     fidelity* — ``replay_stats`` over the captured event stream must
+     reproduce the live fabric's ``TrafficStats`` bit-identically;
+  2. save the trace to JSONL, reload it from disk, and coordinate-descend
+     the knob grid against the :class:`repro.analysis.ReplayModel`
+     (``autotune``) — the tuned :class:`FlowProfile` is derived from the
+     file alone;
+  3. A/B the tuned profile against the default *live*, loading the tuned
+     knobs back through ``Cluster.set_flow(profile=<path>)``, with every
+     arm verified against the numpy oracle before any number is reported.
+
+The headline metrics are the **minimum** improvement across all cells —
+tuned must beat the hand-tuned default on every profile × workload pair,
+on both the replay estimate and the live run, or the guard in
+``benchmarks/check_regression.py`` fails.  ``python -m benchmarks.autotune
+--ab --json BENCH_autotune.json`` records the trajectory; ``--tiny`` is
+the CI fast-lane smoke (thor_xeon only, small sizes).
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.analysis import (
+    FlowProfile,
+    autotune,
+    capture,
+    load_trace,
+    replay_stats,
+    save_trace,
+)
+from repro.core import Cluster, PointerChaseApp, chase_ref
+from repro.runtime.embed_service import EmbedShardService, ragged_batches
+
+#: Default (profile, workload) sizes of the committed BENCH_autotune.json.
+FULL = {
+    "dapc": dict(n_servers=8, depth=64, n_chases=256, n_entries=1 << 14),
+    "gather": dict(
+        n_servers=8, n_requests=256, n_keys=8, dim=32, vocab=4096, max_slots=64
+    ),
+}
+#: Fast-lane smoke sizes (seconds, not minutes).
+TINY = {
+    "dapc": dict(n_servers=4, depth=16, n_chases=32, n_entries=1 << 10),
+    "gather": dict(
+        n_servers=4, n_requests=32, n_keys=4, dim=8, vocab=512, max_slots=16
+    ),
+}
+
+
+def _dapc_workload(profile: str, sizes: dict, seed: int):
+    cl = Cluster(n_servers=sizes["n_servers"], wire=profile)
+    app = PointerChaseApp(
+        cl, n_entries=sizes["n_entries"], max_slots=sizes["n_chases"], seed=seed
+    )
+    rng = np.random.default_rng(seed + 1)
+    starts = rng.integers(0, sizes["n_entries"], sizes["n_chases"]).astype(np.int32)
+    depth = sizes["depth"]
+    expect = np.array([chase_ref(app.table, s, depth) for s in starts], np.int32)
+
+    def warm() -> None:
+        app.dapc(starts, depth)
+        app.dapc(starts, depth, batching=True)
+
+    def run(batching: bool = False, dataplane=None):
+        rep = app.dapc(starts, depth, batching=batching, dataplane=dataplane)
+        assert np.array_equal(rep.results, expect), "dapc diverged from oracle"
+        return rep
+
+    return cl, warm, run
+
+
+def _gather_workload(profile: str, sizes: dict, seed: int):
+    cl = Cluster(n_servers=sizes["n_servers"], wire=profile)
+    svc = EmbedShardService(
+        cl,
+        vocab=sizes["vocab"],
+        dim=sizes["dim"],
+        n_keys=sizes["n_keys"],
+        max_slots=sizes["max_slots"],
+        seed=seed,
+    )
+    batches = ragged_batches(
+        sizes["vocab"], sizes["n_requests"], sizes["n_keys"], seed + 1
+    )
+    want = svc.oracle(batches)
+
+    def warm() -> None:
+        svc.gather(batches[: min(32, len(batches))], batching=False)
+        svc.gather(batches, batching=True)
+
+    def run(batching: bool = False, dataplane=None):
+        rep = svc.gather(batches, batching=batching, dataplane=dataplane)
+        for got, wanted in zip(rep.results, want):
+            assert np.array_equal(got, wanted), "gather diverged from oracle"
+        return rep
+
+    return cl, warm, run
+
+
+WORKLOADS = {"dapc": _dapc_workload, "gather": _gather_workload}
+
+
+def tune_cell(
+    workload: str,
+    profile: str,
+    sizes: dict,
+    seed: int = 0,
+    trace_dir: str | None = "traces",
+) -> dict:
+    """One capture → replay-fidelity → tune → live-A/B cell."""
+    cl, warm, run = WORKLOADS[workload](profile, sizes, seed)
+    warm()  # code caches + pad-bucket compiles on both sides of the A/B
+
+    # -- 1. capture the default (per-message, framed) arm
+    with capture(cl, meta={"workload": workload, "profile": profile, **sizes}) as rec:
+        live_default = run()
+
+    # replay fidelity: the event stream alone must reproduce the live
+    # run's aggregate counters bit-identically (floats included)
+    st, _ = replay_stats(rec)
+    live = cl.fabric.stats.as_dict()
+    assert st.as_dict() == live, "trace replay diverged from live TrafficStats"
+
+    # -- 2. tune from the serialized artifact, not the in-memory recorder
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
+        trace_path = os.path.join(trace_dir, f"autotune_{profile}_{workload}.jsonl")
+        save_trace(rec, trace_path)
+        trace = load_trace(trace_path)
+    else:
+        trace_path = None
+        trace = rec
+    report = autotune(trace, seed=seed)
+    tuned = report.profile
+
+    # -- 3. live A/B: install the tuned knobs through the disk loader
+    live_default2 = run()  # fresh default arm without the tracer attached
+    assert live_default2.modeled_us == live_default.modeled_us, (
+        "capture is not zero-cost: modeled_us changed with the tracer attached"
+    )
+    if trace_dir:
+        profile_path = os.path.join(
+            trace_dir, f"flowprofile_{profile}_{workload}.json"
+        )
+        tuned.save(profile_path)
+        cl.set_flow(profile=profile_path)  # flow knobs persist across runs
+        loaded = FlowProfile.load(profile_path)
+        assert loaded == tuned, "FlowProfile did not round-trip through disk"
+    else:
+        tuned.apply(cl)
+    # the apps pin batching/data plane per call (and restore after), so the
+    # tuned arm passes those two explicitly; lanes/credit/poll/propagation
+    # stay installed from the profile
+    live_tuned = run(batching=tuned.batching, dataplane=tuned.dataplane())
+
+    live_impr = 100.0 * (1.0 - live_tuned.modeled_us / live_default.modeled_us)
+    row = {
+        "workload": workload,
+        "profile": profile,
+        "trace_events": len(rec),
+        "trace_path": trace_path,
+        "tuned_profile": tuned.as_dict(),
+        "knob_order": list(report.knob_order),
+        "history": list(report.history),
+        "replay": {
+            "default_us": round(report.default_us, 3),
+            "tuned_us": round(report.tuned_us, 3),
+            "improvement_pct": round(report.improvement_pct, 2),
+            "evaluations": report.evaluations,
+            "passes": report.passes,
+        },
+        "live": {
+            "default_us": round(live_default.modeled_us, 3),
+            "tuned_us": round(live_tuned.modeled_us, 3),
+            "improvement_pct": round(live_impr, 2),
+        },
+        "replay_fidelity": True,
+        "oracle_checked": True,
+    }
+    return row
+
+
+def autotune_ab(
+    profiles: tuple[str, ...] = ("thor_xeon", "thor_bf2"),
+    workloads: tuple[str, ...] = ("dapc", "gather"),
+    sizes: dict | None = None,
+    seed: int = 0,
+    trace_dir: str | None = "traces",
+) -> dict:
+    """The full matrix: every profile × workload cell, headline = worst cell."""
+    sizes = sizes or FULL
+    cells = []
+    for profile in profiles:
+        for workload in workloads:
+            cells.append(tune_cell(workload, profile, sizes[workload], seed, trace_dir))
+    return {
+        "config": {
+            "profiles": list(profiles),
+            "workloads": list(workloads),
+            "sizes": {w: dict(sizes[w]) for w in workloads},
+            "seed": seed,
+        },
+        "cells": cells,
+        "min_replay_improvement_pct": min(
+            c["replay"]["improvement_pct"] for c in cells
+        ),
+        "min_live_improvement_pct": min(c["live"]["improvement_pct"] for c in cells),
+        "oracle_checked": all(c["oracle_checked"] for c in cells),
+    }
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ab", action="store_true", help="profile×workload A/B matrix")
+    ap.add_argument("--tiny", action="store_true", help="fast-lane smoke sizes")
+    ap.add_argument("--json", metavar="PATH", help="write the result dict to PATH")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--trace-dir",
+        default="traces",
+        help="directory for trace/profile artifacts ('' disables disk round-trip)",
+    )
+    args = ap.parse_args()
+
+    out = autotune_ab(
+        profiles=("thor_xeon",) if args.tiny else ("thor_xeon", "thor_bf2"),
+        sizes=TINY if args.tiny else FULL,
+        seed=args.seed,
+        trace_dir=args.trace_dir or None,
+    )
+    text = json.dumps(out, indent=1, default=float)
+    print(text)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

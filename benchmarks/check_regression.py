@@ -21,6 +21,7 @@ Guarded metrics — "higher is better" unless marked ``<``:
                         goodput_rel5
   BENCH_tenancy.json    bg_p95_ratio (<), hot_p95_ratio, shed_accuracy
   BENCH_sandbox.json    verify_overhead_pct (<), hostile_contained
+  BENCH_autotune.json   min_replay_improvement_pct, min_live_improvement_pct
 
 ``python -m benchmarks.check_regression`` (run from the repo root after
 regenerating the BENCH files); exits non-zero on any regression.
@@ -79,6 +80,12 @@ GUARDS = {
         ("verify_overhead_pct", False),
         # ... while every hostile scenario stays contained (1.0 or bust)
         ("hostile_contained", True),
+    ],
+    "BENCH_autotune.json": [
+        # the tuner must keep beating the hand-tuned default on every
+        # profile x workload cell — on the replay estimate AND live
+        ("min_replay_improvement_pct", True),
+        ("min_live_improvement_pct", True),
     ],
 }
 

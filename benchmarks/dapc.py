@@ -233,7 +233,34 @@ def main() -> None:
     ap.add_argument("--depth", type=int, default=64)
     ap.add_argument("--servers", type=int, default=8)
     ap.add_argument("--profile", default="thor_xeon", choices=PROFILES)
+    ap.add_argument(
+        "--trace",
+        metavar="PATH",
+        help="capture the A/B run's default arm to a replayable JSONL trace",
+    )
     args = ap.parse_args()
+
+    if args.trace:
+        from repro.analysis import capture, replay_stats, save_trace
+        from repro.core import Cluster, PointerChaseApp, chase_ref
+
+        cl = Cluster(n_servers=args.servers, wire=args.profile)
+        app = PointerChaseApp(cl, n_entries=1 << 14, max_slots=args.chases)
+        rng = np.random.default_rng(1)
+        starts = rng.integers(0, 1 << 14, args.chases).astype(np.int32)
+        app.dapc(starts, args.depth)  # warm: code movement happens off-trace
+        with capture(
+            cl, meta={"workload": "dapc", "profile": args.profile}
+        ) as rec:
+            rep = app.dapc(starts, args.depth)
+        expect = np.array(
+            [chase_ref(app.table, s, args.depth) for s in starts], np.int32
+        )
+        assert np.array_equal(rep.results, expect), "trace run diverged from oracle"
+        st, _ = replay_stats(rec)
+        assert st.as_dict() == cl.fabric.stats.as_dict(), "replay != live"
+        n = save_trace(rec, args.trace)
+        print(f"captured {n} events -> {args.trace} (replay verified)")
 
     ab = batched_ab(
         n_servers=args.servers,

@@ -178,7 +178,33 @@ def main() -> None:
     ap.add_argument("--servers", type=int, default=8)
     ap.add_argument("--slots", type=int, default=64)
     ap.add_argument("--profile", default="thor_xeon", choices=PROFILES)
+    ap.add_argument(
+        "--trace",
+        metavar="PATH",
+        help="capture the A/B run's default arm to a replayable JSONL trace",
+    )
     args = ap.parse_args()
+
+    if args.trace:
+        from repro.analysis import capture, replay_stats, save_trace
+
+        cl = Cluster(n_servers=args.servers, wire=args.profile)
+        svc = EmbedShardService(
+            cl, vocab=4096, dim=args.dim, n_keys=args.keys, max_slots=args.slots
+        )
+        batches = ragged_batches(4096, args.requests, args.keys, 1)
+        want = svc.oracle(batches)
+        svc.gather(batches[:32], batching=False)  # warm off-trace
+        with capture(
+            cl, meta={"workload": "gather", "profile": args.profile}
+        ) as rec:
+            rep = svc.gather(batches, batching=False)
+        for got, w in zip(rep.results, want):
+            assert np.array_equal(got, w), "trace run diverged from oracle"
+        st, _ = replay_stats(rec)
+        assert st.as_dict() == cl.fabric.stats.as_dict(), "replay != live"
+        n = save_trace(rec, args.trace)
+        print(f"captured {n} events -> {args.trace} (replay verified)")
 
     ab = gather_ab(
         n_servers=args.servers,

@@ -1,6 +1,43 @@
-"""Compiled-artifact analysis: HLO cost/collective parsing + roofline."""
+"""Compiled-artifact + runtime analysis: HLO cost/collective parsing,
+roofline, replayable trace capture, and the knob-space autotuner."""
 
+from .autotune import (
+    KNOB_GRID,
+    FlowProfile,
+    ProfileError,
+    ReplayModel,
+    TuneReport,
+    autotune,
+)
 from .hlo import HloCost, analyze_hlo
 from .roofline import HW_V5E, RooflineReport, roofline
+from .trace import (
+    Trace,
+    TraceError,
+    TraceRecorder,
+    capture,
+    load_trace,
+    replay_stats,
+    save_trace,
+)
 
-__all__ = ["HW_V5E", "HloCost", "RooflineReport", "analyze_hlo", "roofline"]
+__all__ = [
+    "HW_V5E",
+    "FlowProfile",
+    "HloCost",
+    "KNOB_GRID",
+    "ProfileError",
+    "ReplayModel",
+    "RooflineReport",
+    "Trace",
+    "TraceError",
+    "TraceRecorder",
+    "TuneReport",
+    "analyze_hlo",
+    "autotune",
+    "capture",
+    "load_trace",
+    "replay_stats",
+    "roofline",
+    "save_trace",
+]

@@ -73,12 +73,54 @@ class Cluster:
         lanes: bool | None = None,
         credit_window: int | None = None,
         poll_budget: int | None = ...,  # type: ignore[assignment]
+        profile: "str | dict | None" = None,
     ) -> None:
         """Install progress-engine/flow-control knobs on every PE: control-
         before-data ``lanes``, the per-peer ``credit_window`` (payloads;
         0 disables), and the per-poll ``poll_budget`` (payloads; ``None``
         drains everything; pass it explicitly to change it — the default
-        leaves it alone)."""
+        leaves it alone).
+
+        ``profile`` loads a whole tuned knob set at once — a mapping (or a
+        path to a JSON file) in the ``FlowProfile.as_dict()`` shape emitted
+        by :mod:`repro.analysis.autotune` — applying batching, the data
+        plane, the propagation tree, the flow knobs above, and tenant
+        budgets in one shot.  Explicit keyword arguments win over the
+        profile's values.  The profile travels as plain JSON so the core
+        never imports the analysis layer.
+        """
+        if profile is not None:
+            if isinstance(profile, str):
+                import json
+
+                with open(profile) as fp:
+                    profile = json.load(fp)
+            if "batching" in profile:
+                self.set_batching(bool(profile["batching"]))
+            if {"eager_max", "rndv_min", "zerocopy"} & profile.keys():
+                self.set_dataplane(
+                    DataPlaneConfig(
+                        eager_max=int(profile.get("eager_max", 256)),
+                        rndv_min=int(profile.get("rndv_min", 1 << 62)),
+                        zerocopy=bool(profile.get("zerocopy", False)),
+                    )
+                )
+            k_code = profile.get("k_code")
+            if k_code is not None:
+                self.set_propagation(
+                    PropagationConfig()
+                    if int(k_code) == 0
+                    else PropagationConfig(topology="kary", k=int(k_code))
+                )
+            if lanes is None and "lanes" in profile:
+                lanes = bool(profile["lanes"])
+            if credit_window is None and "credit_window" in profile:
+                credit_window = int(profile["credit_window"])
+            if poll_budget is ... and "poll_budget" in profile:
+                pb = profile["poll_budget"]
+                poll_budget = None if pb is None else int(pb)
+            if profile.get("tenant_budgets"):
+                self.set_tenant_budgets(dict(profile["tenant_budgets"]))
         for pe in self.pes():
             if lanes is not None:
                 pe.lanes = lanes
@@ -87,10 +129,18 @@ class Cluster:
             if poll_budget is not ...:
                 pe.poll_budget = poll_budget
 
-    def set_tenant_budgets(self, budgets: dict[str, int] | None) -> None:
+    def set_tenant_budgets(self, budgets: "dict[str, int] | str | None") -> None:
         """Install one per-tenant outgoing-credit budget map on every PE's
         wire layer (tenant -> payloads in flight; 0/absent = unbudgeted);
-        ``None`` clears all budgets — the untenanted runtime."""
+        ``None`` clears all budgets — the untenanted runtime.  A string is
+        a path to a JSON file holding the map (or a tuned profile dict
+        with a ``tenant_budgets`` key)."""
+        if isinstance(budgets, str):
+            import json
+
+            with open(budgets) as fp:
+                loaded = json.load(fp)
+            budgets = loaded.get("tenant_budgets", loaded) or {}
         budgets = dict(budgets or {})
         for pe in self.pes():
             pe.wire.tenant_budgets = dict(budgets)

@@ -130,6 +130,12 @@ class CompletionQueue:
         # re-register so the device-resident copy the RETURN fold reads is
         # refreshed with the new generation tag
         self.pe.register_region(self.region, arr)
+        tracer = getattr(getattr(self.pe, "fabric", None), "tracer", None)
+        if tracer is not None:
+            ev = {"src": getattr(self.pe, "name", ""), "slot": slot, "epoch": epoch}
+            if tag is not None:
+                ev["tn"] = tag
+            tracer.emit("cq_alloc", **ev)
         return slot, epoch
 
     def _alloc(self) -> tuple[int, int]:
@@ -154,6 +160,9 @@ class CompletionQueue:
             else:
                 self._tag_inflight.pop(tag, None)
         self._free.append(slot)
+        tracer = getattr(getattr(self.pe, "fabric", None), "tracer", None)
+        if tracer is not None:
+            tracer.emit("cq_free", src=getattr(self.pe, "name", ""), slot=slot)
 
     @property
     def free_slots(self) -> int:

@@ -616,12 +616,27 @@ class PE:
         the requester GETs against.
         """
         ifn = self.resolve_source(target)
+        cached = self.caching_enabled and self.sender_cache.has(dst, ifn.digest.hex())
         proto = self.dataplane.select(
-            int(pay.nbytes),
-            slab=ifn.slab is not None,
-            code_cached=self.caching_enabled
-            and self.sender_cache.has(dst, ifn.digest.hex()),
+            int(pay.nbytes), slab=ifn.slab is not None, code_cached=cached
         )
+        tracer = getattr(self.fabric, "tracer", None)
+        if tracer is not None:
+            # `zc` is what a zero-copy write burst of this RETURN would
+            # carry (data + doorbell words), -1 when the ifunc has no slab
+            # — the counterfactual the autotuner's protocol re-selection
+            # needs even when the live run framed it
+            if ifn.slab is not None:
+                plan = ifn.slab.plan(np.ascontiguousarray(pay, np.int32))
+                zc = sum(len(w.data) for w in plan) + 4 * sum(
+                    1 for w in plan if w.doorbell is not None
+                )
+            else:
+                zc = -1
+            tracer.emit(
+                "ret", src=self.name, dst=dst, name=target,
+                n=int(pay.nbytes), zc=zc, cached=cached, proto=proto,
+            )
         if proto == "zerocopy":
             self.stats.zerocopy_returns += 1
             writes = ifn.slab.plan(np.ascontiguousarray(pay, np.int32))

@@ -399,10 +399,20 @@ class ProgressEngine:
             # entry[2] is nonzero when a previous *batched* poll consumed
             # the frame partially and the mode switched: resume from the
             # recorded offset or the retired payloads would invoke twice
-            used += self._payloads_in(entry[1]) - entry[2]
+            consumed = self._payloads_in(entry[1]) - entry[2]
+            used += consumed
             self.execute_frame(entry[1], start=entry[2], src=entry[0])
             n += 1
             self.stats.msgs += 1
+            tracer = getattr(self.rt.fabric, "tracer", None)
+            if tracer is not None:
+                tracer.emit(
+                    "frame", src=entry[0], dst=self.rt.name, p=consumed, done=True
+                )
+        if n:
+            tracer = getattr(self.rt.fabric, "tracer", None)
+            if tracer is not None:
+                tracer.emit("poll", src=self.rt.name, tick=self.tick, p=used)
         return n
 
     def _poll_batched(self, budget: int | None) -> int:
@@ -414,6 +424,7 @@ class ProgressEngine:
         self._ingest()
         taken: list[tuple[bytes, int, int | None, str]] = []  # (buf, start, stop, src)
         used = 0
+        tracer = getattr(self.rt.fabric, "tracer", None)
         while budget is None or used < budget:
             lane = self._front()
             if lane is None:
@@ -428,7 +439,12 @@ class ProgressEngine:
             # credits are payload-denominated: return exactly what this
             # poll consumed, whether or not the frame is finished
             self.rt.fabric.credit_return(src, self.rt.name, take)
-            if start + take >= n_pay:
+            done = start + take >= n_pay
+            if tracer is not None:
+                tracer.emit(
+                    "frame", src=src, dst=self.rt.name, p=take, done=done
+                )
+            if done:
                 taken.append((raw, start, None, src))
                 lane.popleft()
                 self.stats.msgs += 1
@@ -437,6 +453,8 @@ class ProgressEngine:
                 # at the lane head for the next poll
                 taken.append((raw, start, start + take, src))
                 lane[0][2] = start + take
+        if taken and tracer is not None:
+            tracer.emit("poll", src=self.rt.name, tick=self.tick, p=used)
         if taken:
             try:
                 self._execute_batch(taken)

@@ -149,6 +149,14 @@ class WireLayer:
                     ts = self.fabric.stats.tenant_stalls
                     ts[frame.tenant] = ts.get(frame.tenant, 0) + 1
                     self.stats.bump_tenant("stalls", frame.tenant)
+                tracer = getattr(self.fabric, "tracer", None)
+                if tracer is not None:
+                    ev = {"src": self.name, "dst": dst}
+                    if frame.tenant is not None:
+                        ev["tn"] = frame.tenant
+                    if budget_full:
+                        ev["budget"] = True
+                    tracer.emit("stall", **ev)
                 return 0
         return self._transmit(dst, frame)
 
@@ -194,6 +202,21 @@ class WireLayer:
             ])
         if frame.tenant is not None:
             self.stats.bump_tenant("sends", frame.tenant)
+        tracer = getattr(self.fabric, "tracer", None)
+        if tracer is not None:
+            ev = {
+                "src": self.name, "dst": dst, "n": len(wire),
+                "p": frame.n_payloads, "kind": int(frame.kind),
+                "name": frame.name, "pb": kinds.get("payload", 0),
+                "cb": kinds.get("code", 0), "cached": cached,
+            }
+            if hop:
+                ev["hop"] = True
+            if frame.tenant is not None:
+                ev["tn"] = frame.tenant
+            if tracked:
+                ev["seq"] = frame.seq
+            tracer.emit("send", **ev)
         try:
             self.fabric.put(
                 self.name, dst, wire, n_payloads=frame.n_payloads,
@@ -272,6 +295,11 @@ class WireLayer:
                 e[6] = tick + rel.rto_after(e[7])
                 self.stats.retransmits += 1
                 resent += 1
+                tracer = getattr(self.fabric, "tracer", None)
+                if tracer is not None:
+                    tracer.emit(
+                        "retx", src=self.name, dst=dst, seq=e[0], n=len(e[1])
+                    )
                 try:
                     # the exact bytes of the first flight — same truncation,
                     # same seq, same (now possibly stale, harmlessly lower)
@@ -294,6 +322,9 @@ class WireLayer:
             self._acked_sent[dst] = ack
         wire = frame.wire_bytes(cached=True)
         self.stats.acks_sent += 1
+        tracer = getattr(self.fabric, "tracer", None)
+        if tracer is not None:
+            tracer.emit("ack", src=self.name, dst=dst, ack=ack)
         try:
             # n_payloads=0: an ACK occupies no receive-buffer credit and is
             # consumed at ingest without ever entering a lane

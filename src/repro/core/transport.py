@@ -339,6 +339,10 @@ class Fabric:
         # seeded Bernoulli loss injection (set_loss): 0.0 = lossless
         self._loss_rate = 0.0
         self._loss_rng: np.random.Generator | None = None
+        # optional trace capture (analysis/trace.py): every hook in the
+        # runtime reaches the recorder through this single attach point,
+        # guarded by `is not None` — detached runs pay one attribute load
+        self.tracer = None
 
     # loss injection ---------------------------------------------------------
     def set_loss(self, rate: float, seed: int = 0) -> None:
@@ -494,11 +498,24 @@ class Fabric:
                 tp[tenant] = tp.get(tenant, 0) + 1
                 tb = self.stats.tenant_put_bytes
                 tb[tenant] = tb.get(tenant, 0) + n
-            if self._lose():
+            lost = self._lose()
+            if lost:
                 # the sender paid for the bytes but they never land: no
                 # delivery, no receive-buffer occupancy, no credit consumed
                 self.stats.frames_lost += 1
                 self.stats.lost_bytes += n
+            if self.tracer is not None:
+                ev = {"src": src, "dst": dst, "n": n, "p": n_payloads}
+                if kinds is not None:
+                    ev["by"] = kinds
+                if hop:
+                    ev["hop"] = True
+                if tenant is not None:
+                    ev["tn"] = tenant
+                if lost:
+                    ev["lost"] = True
+                self.tracer.emit("put", **ev)
+            if lost:
                 return t
             if n_payloads:
                 self._credit_out[(src, dst)] = (
@@ -563,6 +580,8 @@ class Fabric:
                 len(writes) - 1
             ) * self.wire.o_us + self.wire.inverse_throughput_us(nbytes)
             self.stats.add_kinds({"region": nbytes})
+            lw0 = self.stats.region_writes_lost
+            gd0 = self.stats.region_guard_drops
             lost = False
             for w in writes:
                 if lost or self._lose():
@@ -585,6 +604,15 @@ class Fabric:
                     cur = ep.read_region_i32(w.region, d_off)
                     new = (cur | d_val) if d_op == "or" else (cur + d_val)
                     ep.write_region(w.region, d_off, struct.pack("<i", new))
+            if self.tracer is not None:
+                ev = {"src": src, "dst": dst, "n": nbytes, "w": len(writes)}
+                lw = self.stats.region_writes_lost - lw0
+                gd = self.stats.region_guard_drops - gd0
+                if lw:
+                    ev["lw"] = lw
+                if gd:
+                    ev["gd"] = gd
+                self.tracer.emit("rput", **ev)
         return t
 
     def get(self, src: str, dst: str, region: str, offset: int, nbytes: int) -> bytes:
@@ -602,6 +630,8 @@ class Fabric:
             self.stats.modeled_us += t
             self.stats.modeled_tput_us += t  # GETs are round-trips; no pipelining
             self.stats.add_kinds({"region": nbytes})
+            if self.tracer is not None:
+                self.tracer.emit("get", src=src, dst=dst, n=nbytes, region=region)
         return data
 
     # fault injection ---------------------------------------------------------

@@ -149,6 +149,95 @@ def test_dapc_conformance_under_loss(seed, mode, batching):
         assert rep.invokes == ref.invokes
 
 
+# -------------------------------------------------- autotuned-profile axis
+#
+# PR 9's tuner emits FlowProfiles that Cluster.set_flow installs wholesale.
+# The conformance claim: no profile the tuner (or a hand) can express may
+# change results — every {mode} x {batching} x {data plane} cell stays
+# oracle-identical with a profile installed, including under 5% loss.
+
+
+@pytest.fixture(scope="module")
+def autotuned_profile():
+    """A genuinely tuned profile (coordinate descent over a captured
+    trace), plus a 'stressed' variant with every flow knob off-default —
+    the corners the tuner is allowed to reach."""
+    from repro.analysis import autotune, capture
+
+    cluster = Cluster(n_servers=4, wire="thor_xeon")
+    app = PointerChaseApp(cluster, n_entries=512, max_slots=16, seed=0)
+    rng = np.random.default_rng(100)
+    starts = rng.integers(0, 512, 8).astype(I32)
+    app.dapc(starts, 16)
+    with capture(cluster) as rec:
+        app.dapc(starts, 16)
+    return autotune(rec, seed=0).profile
+
+
+def _stressed(profile):
+    from dataclasses import replace
+
+    return replace(
+        profile, lanes=True, credit_window=8, poll_budget=8, k_code=2
+    )
+
+
+@pytest.mark.parametrize("variant", ["tuned", "stressed"])
+@pytest.mark.parametrize(
+    "plane",
+    ["framed", "zerocopy", "rendezvous"],
+    ids=["framed", "zerocopy", "rndv"],
+)
+@pytest.mark.parametrize("batching", [False, True], ids=["permsg", "batched"])
+@pytest.mark.parametrize("mode", ["bitcode", "binary", "am"])
+def test_dapc_conformance_under_autotuned_profile(
+    autotuned_profile, mode, batching, plane, variant
+):
+    from dataclasses import replace
+
+    prof = autotuned_profile if variant == "tuned" else _stressed(autotuned_profile)
+    prof = replace(
+        prof,
+        batching=batching,
+        zerocopy=plane == "zerocopy",
+        eager_max=0 if plane == "zerocopy" else 256,
+        rndv_min=0 if plane == "rendezvous" else prof.rndv_min,
+    )
+    cluster = Cluster(n_servers=4, wire="ideal")
+    app = PointerChaseApp(cluster, n_entries=512, max_slots=16, seed=0)
+    rng = np.random.default_rng(100)
+    starts = rng.integers(0, 512, 8).astype(I32)
+    depth = 16
+    want = np.array([chase_ref(app.table, s, depth) for s in starts], I32)
+    prof.apply(cluster)
+    rep = app.dapc(
+        starts, depth, mode=mode, batching=prof.batching, dataplane=prof.dataplane()
+    )
+    np.testing.assert_array_equal(
+        rep.results, want,
+        err_msg=f"mode={mode} batching={batching} plane={plane} variant={variant}",
+    )
+
+
+@pytest.mark.parametrize("batching", [False, True], ids=["permsg", "batched"])
+@pytest.mark.parametrize("mode", ["bitcode", "binary", "am"])
+def test_dapc_autotuned_profile_under_loss(autotuned_profile, mode, batching):
+    """The stressed profile's flow knobs (lanes, credit window, poll
+    budget, k-ary propagation) survive the 5% loss arm bit-identically."""
+    depth = 16
+    app, starts = _lossy_app(0, LOSS_RATE)
+    want = np.array([chase_ref(app.table, s, depth) for s in starts], I32)
+    prof = _stressed(autotuned_profile)
+    prof.apply(app.cluster)
+    rep = app.dapc(
+        starts, depth, mode=mode, batching=batching, dataplane=prof.dataplane()
+    )
+    np.testing.assert_array_equal(
+        rep.results, want, err_msg=f"mode={mode} batching={batching}"
+    )
+    assert app.cluster.fabric.stats.frames_lost > 0  # loss really happened
+
+
 @pytest.mark.parametrize(
     "plane",
     ["framed", "zerocopy", "rendezvous"],

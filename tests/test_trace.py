@@ -1,0 +1,309 @@
+"""Trace capture/replay fidelity suite (PR 9 tentpole hardening).
+
+Three contracts pinned here:
+
+* **Round trip** — capture → serialize (JSONL) → parse → replay reproduces
+  the live run's ``TrafficStats`` bit-identically (float accumulators
+  included) and the trace-visible ``PEStats`` subset as exact deltas,
+  property-tested across seeds/depths/batching.
+* **Typed errors** — a truncated, garbage, or schema-incompatible trace
+  raises :class:`TraceError` and nothing else: no ``KeyError``, no
+  ``json.JSONDecodeError`` escapes ``load_trace``/``parse_trace``.
+* **Zero overhead when off** — with no recorder attached the runtime
+  buffers no events and produces byte-identical results/stats to a
+  captured run (capture is observation, never perturbation).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    Trace,
+    TraceError,
+    TraceRecorder,
+    capture,
+    load_trace,
+    replay_stats,
+    save_trace,
+)
+from repro.analysis.trace import SCHEMA, dump_trace, parse_trace, pe_stats_subset
+from repro.core import Cluster, PointerChaseApp, chase_ref
+
+from _hypothesis_compat import given, settings, st  # hypothesis, or local fallback
+
+I32 = np.int32
+
+
+def _run_captured(seed: int, depth: int, batching: bool):
+    """One small dapc run under capture; returns (cluster, recorder,
+    live TrafficStats dict, per-PE stat deltas)."""
+    cl = Cluster(n_servers=2, wire="thor_xeon")
+    app = PointerChaseApp(cl, n_entries=128, max_slots=8, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    starts = rng.integers(0, 128, 6).astype(I32)
+    app.dapc(starts, depth)  # warm: code movement happens off-trace
+    before = {pe.name: pe_stats_subset(pe.stats) for pe in cl.pes()}
+    with capture(cl, meta={"seed": seed}) as rec:
+        rep = app.dapc(starts, depth, batching=batching)
+    want = np.array([chase_ref(app.table, s, depth) for s in starts], I32)
+    np.testing.assert_array_equal(rep.results, want)
+    deltas = {}
+    for pe in cl.pes():
+        after = pe_stats_subset(pe.stats)
+        deltas[pe.name] = {k: after[k] - before[pe.name][k] for k in after}
+    return cl, rec, cl.fabric.stats.as_dict(), deltas
+
+
+# ------------------------------------------------------------- round trip
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    depth=st.sampled_from([1, 4, 16]),
+    batching=st.sampled_from([False, True]),
+)
+def test_roundtrip_reproduces_live_counters(seed, depth, batching):
+    """capture → JSONL → parse → replay == the live run, bit-identical."""
+    cl, rec, live, deltas = _run_captured(seed % 97, depth, batching)
+    lines = []
+
+    class _Sink:
+        def write(self, s):
+            lines.append(s)
+
+    dump_trace(rec, _Sink())
+    tr = parse_trace("".join(lines).splitlines())
+    assert len(tr) == len(rec)
+    st_, pes = replay_stats(tr)
+    assert st_.as_dict() == live
+    # float accumulators must match exactly, not just to repr precision
+    assert st_.modeled_us == cl.fabric.stats.modeled_us
+    assert st_.modeled_tput_us == cl.fabric.stats.modeled_tput_us
+    # per-PE deltas: everything the trace saw equals what the PEs counted
+    for name, counted in pes.items():
+        assert counted == deltas[name], name
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    events=st.lists(
+        st.sampled_from(
+            [
+                {"k": "put", "src": "a", "dst": "b", "n": 100, "p": 1},
+                {"k": "put", "src": "a", "dst": "b", "n": 64, "p": 3,
+                 "by": {"payload": 24}, "hop": 1, "tn": "t0"},
+                {"k": "rput", "src": "a", "dst": "c", "n": 256, "w": 4},
+                {"k": "get", "src": "c", "dst": "a", "n": 128},
+                {"k": "send", "src": "a", "dst": "b", "n": 90, "p": 1,
+                 "kind": 1, "name": "f", "pb": 8, "cb": 0, "cached": True},
+                {"k": "stall", "src": "a", "dst": "b", "tn": "t1", "budget": True},
+                {"k": "retx", "src": "b", "dst": "a", "seq": 3, "n": 72},
+                {"k": "ack", "src": "b", "dst": "a", "ack": 5},
+                {"k": "poll", "src": "b", "tick": 2, "p": 3},
+                {"k": "frame", "src": "a", "dst": "b", "p": 2, "done": True},
+                {"k": "ret", "src": "b", "dst": "a", "name": "r", "n": 40,
+                 "zc": 44, "cached": True, "proto": "zerocopy"},
+                {"k": "cq_alloc", "src": "a", "slot": 0, "epoch": 1},
+                {"k": "cq_free", "src": "a", "slot": 0},
+            ]
+        ),
+        min_size=0,
+        max_size=24,
+    )
+)
+def test_synthetic_stream_roundtrip(events):
+    """Any valid event stream survives serialize → parse unchanged, and
+    replays to the same counters before and after the trip."""
+    rec = TraceRecorder("thor_bf2", meta={"synthetic": True})
+    for ev in events:
+        ev = dict(ev)
+        ev.pop("k2", None)
+        k = ev.pop("k")
+        rec.emit(k, **ev)
+    lines = []
+
+    class _Sink:
+        def write(self, s):
+            lines.append(s)
+
+    dump_trace(rec, _Sink())
+    tr = parse_trace("".join(lines).splitlines())
+    assert tr.events == Trace.from_recorder(rec).events
+    assert tr.wire_name == "thor_bf2"
+    a, pa = replay_stats(rec)
+    b, pb = replay_stats(tr)
+    assert a.as_dict() == b.as_dict()
+    assert pa == pb
+
+
+def test_save_load_file_roundtrip(tmp_path):
+    _, rec, live, _ = _run_captured(3, 4, True)
+    path = str(tmp_path / "run.jsonl")
+    n = save_trace(rec, path)
+    assert n == len(rec)
+    tr = load_trace(path)
+    assert tr.header["meta"] == {"seed": 3}
+    st_, _ = replay_stats(tr)
+    assert st_.as_dict() == live
+
+
+# ----------------------------------------------------------- typed errors
+def _write(tmp_path, text: str) -> str:
+    p = tmp_path / "t.jsonl"
+    p.write_text(text)
+    return str(p)
+
+
+def test_empty_file_raises_trace_error(tmp_path):
+    with pytest.raises(TraceError, match="no header"):
+        load_trace(_write(tmp_path, ""))
+
+
+def test_missing_file_raises_trace_error(tmp_path):
+    with pytest.raises(TraceError, match="cannot read"):
+        load_trace(str(tmp_path / "absent.jsonl"))
+
+
+def test_garbage_json_raises_trace_error(tmp_path):
+    header = json.dumps({"schema": SCHEMA, "wire": "ideal", "events": 1})
+    with pytest.raises(TraceError, match="invalid JSON"):
+        load_trace(_write(tmp_path, header + "\n{not json@@@\n"))
+
+
+def test_wrong_schema_raises_trace_error(tmp_path):
+    bad = json.dumps({"schema": "xrdma-trace/999", "events": 0})
+    with pytest.raises(TraceError, match="not a xrdma-trace/1"):
+        load_trace(_write(tmp_path, bad + "\n"))
+
+
+def test_non_object_header_raises_trace_error(tmp_path):
+    with pytest.raises(TraceError, match="not a xrdma-trace/1"):
+        load_trace(_write(tmp_path, "[1,2,3]\n"))
+
+
+def test_unknown_kind_raises_trace_error(tmp_path):
+    header = json.dumps({"schema": SCHEMA, "wire": "ideal", "events": 1})
+    ev = json.dumps({"k": "warp", "i": 0, "src": "a"})
+    with pytest.raises(TraceError, match="unknown event kind"):
+        load_trace(_write(tmp_path, header + "\n" + ev + "\n"))
+
+
+def test_missing_field_raises_trace_error(tmp_path):
+    header = json.dumps({"schema": SCHEMA, "wire": "ideal", "events": 1})
+    ev = json.dumps({"k": "put", "i": 0, "src": "a", "dst": "b", "p": 1})  # no n
+    with pytest.raises(TraceError, match="field 'n'"):
+        load_trace(_write(tmp_path, header + "\n" + ev + "\n"))
+
+
+def test_mistyped_field_raises_trace_error(tmp_path):
+    header = json.dumps({"schema": SCHEMA, "wire": "ideal", "events": 1})
+    # bool is an int subclass in Python; the validator must still refuse it
+    ev = json.dumps({"k": "put", "i": 0, "src": "a", "dst": "b", "n": True, "p": 1})
+    with pytest.raises(TraceError, match="field 'n'"):
+        load_trace(_write(tmp_path, header + "\n" + ev + "\n"))
+
+
+def test_truncated_trace_raises_trace_error(tmp_path):
+    """A file cut mid-stream (header promises more events) is detected."""
+    _, rec, _, _ = _run_captured(0, 4, False)
+    full = []
+
+    class _Sink:
+        def write(self, s):
+            full.append(s)
+
+    dump_trace(rec, _Sink())
+    lines = "".join(full).splitlines()
+    truncated = "\n".join(lines[: len(lines) // 2]) + "\n"
+    with pytest.raises(TraceError, match="truncated"):
+        load_trace(_write(tmp_path, truncated))
+
+
+def test_event_not_object_raises_trace_error(tmp_path):
+    header = json.dumps({"schema": SCHEMA, "wire": "ideal", "events": 1})
+    with pytest.raises(TraceError, match="not an object"):
+        load_trace(_write(tmp_path, header + "\n[1,2]\n"))
+
+
+@settings(max_examples=30, deadline=None)
+@given(blob=st.binary(min_size=0, max_size=80))
+def test_fuzzed_garbage_never_escapes_typed_error(blob):
+    """Arbitrary bytes either parse as a valid trace or raise TraceError —
+    never KeyError / JSONDecodeError."""
+    import os
+    import tempfile
+
+    fd, path = tempfile.mkstemp(suffix=".jsonl")
+    try:
+        with os.fdopen(fd, "wb") as fp:
+            fp.write(blob)
+        try:
+            load_trace(path)
+        except TraceError:
+            pass
+    finally:
+        os.unlink(path)
+
+
+# ------------------------------------------------- zero overhead when off
+def test_no_tracer_attached_by_default():
+    cl = Cluster(n_servers=2, wire="ideal")
+    assert cl.fabric.tracer is None
+    app = PointerChaseApp(cl, n_entries=64, max_slots=4, seed=0)
+    starts = np.array([1, 2, 3], I32)
+    app.dapc(starts, 4)
+    # nothing anywhere buffers events when detached
+    assert cl.fabric.tracer is None
+
+
+def test_capture_detaches_on_exit_and_freezes_recorder():
+    cl = Cluster(n_servers=2, wire="ideal")
+    app = PointerChaseApp(cl, n_entries=64, max_slots=4, seed=0)
+    starts = np.array([1, 2, 3], I32)
+    app.dapc(starts, 4)
+    with capture(cl) as rec:
+        app.dapc(starts, 4)
+    n = len(rec)
+    assert n > 0
+    assert cl.fabric.tracer is None
+    app.dapc(starts, 4)  # post-capture run must not grow the recorder
+    assert len(rec) == n
+
+
+def test_capture_nesting_restores_previous_recorder():
+    cl = Cluster(n_servers=2, wire="ideal")
+    app = PointerChaseApp(cl, n_entries=64, max_slots=4, seed=0)
+    starts = np.array([1, 2], I32)
+    app.dapc(starts, 2)
+    with capture(cl) as outer:
+        with capture(cl) as inner:
+            app.dapc(starts, 2)
+        assert cl.fabric.tracer is outer
+    assert len(inner) > 0
+    assert len(outer) == 0
+    assert cl.fabric.tracer is None
+
+
+def test_capture_is_observation_not_perturbation():
+    """Identical seeds with and without the tracer attached produce
+    byte-identical results and TrafficStats — capture changes nothing."""
+
+    def run(with_capture: bool):
+        cl = Cluster(n_servers=2, wire="thor_bf2")
+        app = PointerChaseApp(cl, n_entries=128, max_slots=8, seed=5)
+        rng = np.random.default_rng(6)
+        starts = rng.integers(0, 128, 6).astype(I32)
+        app.dapc(starts, 8)
+        if with_capture:
+            with capture(cl) as rec:
+                rep = app.dapc(starts, 8, batching=True)
+            assert len(rec) > 0
+        else:
+            rep = app.dapc(starts, 8, batching=True)
+        return rep.results, cl.fabric.stats.as_dict()
+
+    res_off, stats_off = run(False)
+    res_on, stats_on = run(True)
+    np.testing.assert_array_equal(res_off, res_on)
+    assert stats_off == stats_on
