@@ -22,6 +22,8 @@ Guarded metrics — "higher is better" unless marked ``<``:
   BENCH_tenancy.json    bg_p95_ratio (<), hot_p95_ratio, shed_accuracy
   BENCH_sandbox.json    verify_overhead_pct (<), hostile_contained
   BENCH_autotune.json   min_replay_improvement_pct, min_live_improvement_pct
+  BENCH_placement.json  min_pushdown_wire_reduction_pct,
+                        optimizer_agrees_with_oracle_cells
 
 ``python -m benchmarks.check_regression`` (run from the repo root after
 regenerating the BENCH files); exits non-zero on any regression.
@@ -86,6 +88,14 @@ GUARDS = {
         # profile x workload cell — on the replay estimate AND live
         ("min_replay_improvement_pct", True),
         ("min_live_improvement_pct", True),
+    ],
+    "BENCH_placement.json": [
+        # pushdown must keep cutting wire payload ~ the selectivity
+        # factor at the lowest selectivity ...
+        ("min_pushdown_wire_reduction_pct", True),
+        # ... and the cost model must keep matching the exhaustive A/B
+        # winner in every {servers} x {selectivity} cell (1.0 or bust)
+        ("optimizer_agrees_with_oracle_cells", True),
     ],
 }
 

@@ -226,7 +226,35 @@ def main() -> None:
     ap.add_argument("--profile", default="thor_bf2", choices=PROFILES)
     ap.add_argument("--tiny", action="store_true",
                     help="smoke-test size (4 servers, one small load)")
+    ap.add_argument(
+        "--trace",
+        metavar="PATH",
+        help="capture the hot-shard request stream (default runtime) to a "
+             "replayable JSONL trace",
+    )
     args = ap.parse_args()
+
+    if args.trace:
+        from repro.analysis import capture, replay_stats, save_trace
+
+        n_servers = 4 if args.tiny else args.servers
+        offered = 32 if args.tiny else 64
+        vocab = 64 * n_servers
+        cl = Cluster(n_servers=n_servers, wire=args.profile)
+        svc = EmbedShardService(cl, vocab=vocab, dim=16, n_keys=8)
+        batches = hot_batches(vocab, svc.rows_per_shard, offered, 8, seed=1)
+        want = svc.oracle(batches)
+        svc.gather(batches[:16], batching=False)  # warm off-trace
+        with capture(
+            cl, meta={"workload": "overload", "profile": args.profile}
+        ) as rec:
+            rep = svc.gather(batches, batching=False)
+        for got, w in zip(rep.results, want):
+            assert np.array_equal(got, w), "trace run diverged from oracle"
+        st, _ = replay_stats(rec)
+        assert st.as_dict() == cl.fabric.stats.as_dict(), "replay != live"
+        n = save_trace(rec, args.trace)
+        print(f"captured {n} events -> {args.trace} (replay verified)")
 
     out = overload_ab(
         n_servers=4 if args.tiny else args.servers,

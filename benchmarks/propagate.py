@@ -142,7 +142,28 @@ def main() -> None:
     ap.add_argument("--topology", default="binomial", choices=("binomial", "kary"))
     ap.add_argument("--k", type=int, default=2)
     ap.add_argument("--tiny", action="store_true", help="smoke-test size (4 servers)")
+    ap.add_argument(
+        "--trace",
+        metavar="PATH",
+        help="capture a cold tree multicast to a replayable JSONL trace",
+    )
     args = ap.parse_args()
+
+    if args.trace:
+        from repro.analysis import capture, replay_stats, save_trace
+
+        cfg = PropagationConfig(topology=args.topology, k=args.k)
+        cl = _fresh_cluster(4 if args.tiny else args.servers, args.profile)
+        with capture(
+            cl, meta={"workload": "propagate", "profile": args.profile}
+        ) as rec:
+            rep = xrdma_bcast(cl, "tsi", np.array([7], np.int32), config=cfg)
+        _check_counters(cl, 7)  # oracle: every counter bumped exactly once
+        assert rep.covered == rep.n_targets
+        st, _ = replay_stats(rec)
+        assert st.as_dict() == cl.fabric.stats.as_dict(), "replay != live"
+        n = save_trace(rec, args.trace)
+        print(f"captured {n} events -> {args.trace} (replay verified)")
 
     out = propagate_ab(
         n_servers=4 if args.tiny else args.servers,

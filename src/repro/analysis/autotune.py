@@ -26,6 +26,14 @@ under a candidate profile:
   cost a framed 16-byte descriptor plus a GET round trip.  The ``zc``
   field captured per RETURN is the counterfactual write-burst size, so the
   re-selection needs no knowledge of the slab layout.
+* **placement** — the heterogeneous placement axis (pushdown vs pull) is
+  carried as a knob so tuned profiles pin a cluster-wide policy via
+  ``Cluster.set_placement``, but it is cost-neutral in the replay (a
+  trace captured under one placement has no counterfactual byte stream
+  for the other — pricing that flip is
+  :class:`repro.sharding.placement.PlacementOptimizer`'s job against the
+  live capability registry), so like ``lanes`` the search keeps the
+  incumbent.
 * **flow knobs** — ``poll_budget`` and ``credit_window`` never reduce
   modeled wire time (they bound memory and latency inversion, not bytes),
   so the estimator charges them honest per-split/per-stall overheads and
@@ -72,6 +80,7 @@ KNOB_GRID: dict[str, tuple] = {
     "credit_window": (0, 8, 16, 32, 64),
     "poll_budget": (None, 8, 16, 32, 64),
     "k_code": (None, 0, 2, 3, 4),
+    "placement": (None, "pushdown", "pull"),
 }
 
 
@@ -103,6 +112,7 @@ class FlowProfile:
     rndv_min: int = RNDV_OFF
     zerocopy: bool = False
     k_code: int | None = None
+    placement: str | None = None
     tenant_budgets: tuple[tuple[str, int], ...] = ()
 
     def dataplane(self) -> DataPlaneConfig:
@@ -129,6 +139,7 @@ class FlowProfile:
             "rndv_min": self.rndv_min,
             "zerocopy": self.zerocopy,
             "k_code": self.k_code,
+            "placement": self.placement,
             "tenant_budgets": dict(self.tenant_budgets),
         }
 
@@ -153,6 +164,9 @@ class FlowProfile:
                 rndv_min=int(d.get("rndv_min", RNDV_OFF)),
                 zerocopy=bool(d.get("zerocopy", False)),
                 k_code=(None if d.get("k_code") is None else int(d["k_code"])),
+                placement=(
+                    None if d.get("placement") is None else str(d["placement"])
+                ),
                 tenant_budgets=tuple(sorted((str(k), int(v)) for k, v in dict(budgets).items())),
             )
         except (TypeError, ValueError) as e:

@@ -77,15 +77,21 @@ from .verify import (
     Verifier,
 )
 from .transport import (
+    Capability,
     Endpoint,
     EndpointDead,
     Fabric,
+    MEM_BW_BUS,
+    MEM_BW_CLASS,
     RegionWrite,
+    TRIPLE_WIRE,
     WIRE_PROFILES,
     WireModel,
 )
 from .xrdma import (
     make_chaser,
+    make_filter,
+    make_filter_return,
     make_gather_return,
     make_gatherer,
     make_gossiper,
@@ -105,6 +111,7 @@ __all__ = [
     "A_SPAWN",
     "BitcodeSlice",
     "CacheStats",
+    "Capability",
     "CapabilityStamp",
     "ChaseReport",
     "Cluster",
@@ -123,6 +130,8 @@ __all__ = [
     "IFunc",
     "ISAMismatch",
     "MAGIC",
+    "MEM_BW_BUS",
+    "MEM_BW_CLASS",
     "PE",
     "PEStats",
     "PointerChaseApp",
@@ -135,6 +144,7 @@ __all__ = [
     "SandboxViolation",
     "SenderCache",
     "SlabLayout",
+    "TRIPLE_WIRE",
     "TargetCodeCache",
     "Toolchain",
     "Verifier",
@@ -147,6 +157,8 @@ __all__ = [
     "local_triple",
     "make_chain",
     "make_chaser",
+    "make_filter",
+    "make_filter_return",
     "make_gather_return",
     "make_gatherer",
     "make_gossiper",

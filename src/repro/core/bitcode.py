@@ -88,19 +88,24 @@ class FatBitcode:
         all the targets supported by the toolchain's Clang compiler".
 
         ``fn_by_platform`` optionally overrides the entry per *platform*
-        (``"cpu"``/``"tpu"``): the toolchain analogue of per-ISA intrinsics
-        behind one source — e.g. the Gatherer ships a Pallas ``embed_lookup``
-        body in its TPU slice and the masked-take reference everywhere else.
-        Every slice must compute the same function; only the lowering
-        differs.  A platform whose override fails to cross-lower (e.g. a
-        Pallas TPU kernel that this JAX build cannot serialize from a
-        CPU-only machine) falls back to the portable ``fn``.
+        (``"cpu"``/``"tpu"``) or per exact *triple* (``"cpu-bf2"``): the
+        toolchain analogue of per-ISA intrinsics behind one source — e.g.
+        the Gatherer ships a Pallas ``embed_lookup`` body in its TPU slice
+        and the masked-take reference everywhere else, and the pushdown
+        Filter ships a masked-take body in its DPU (``cpu-bf2``) slice.
+        A triple key wins over its platform key (both map to the same
+        lowering platform — the BF2's Arm cores are still ``"cpu"`` to
+        XLA, but its slice may carry a different body).  Every slice must
+        compute the same function; only the lowering differs.  A slice
+        whose override fails to cross-lower (e.g. a Pallas TPU kernel that
+        this JAX build cannot serialize from a CPU-only machine) falls
+        back to the portable ``fn``.
         """
         slices: dict[str, bytes] = {}
         overrides = dict(fn_by_platform or {})
         for triple in targets:
             plat = platform_of(triple)
-            entry = overrides.get(plat, fn)
+            entry = overrides.get(triple, overrides.get(plat, fn))
             try:
                 exported = jax.export.export(
                     jax.jit(entry), platforms=[plat]

@@ -17,7 +17,7 @@ from .dataplane import DataPlaneConfig
 from .pe import PE, Toolchain
 from .propagate import PropagationConfig
 from .reliability import ReliabilityConfig
-from .transport import Fabric, WireModel
+from .transport import Capability, Fabric, WireModel
 from .verify import SandboxConfig
 
 
@@ -29,8 +29,14 @@ class Cluster:
         server_triple: str = "cpu-bf2",
         client_triple: str = "cpu-host",
         toolchain: Toolchain | None = None,
+        hetero_wire: bool = False,
     ) -> None:
         self.fabric = Fabric(wire)
+        # hetero_wire=True prices every fabric op with the *initiator's*
+        # advertised capability profile (mixed thor_xeon + thor_bf2
+        # accounting); default off keeps single-profile accounting
+        # bit-identical to prior runs.
+        self.fabric.hetero = hetero_wire
         self.toolchain = toolchain or Toolchain()
         self.n_servers = n_servers
         names = [f"server{i}" for i in range(n_servers)] + ["client"]
@@ -41,10 +47,39 @@ class Cluster:
         self.client = PE(
             "client", self.fabric, triple=client_triple, toolchain=self.toolchain, peers=names
         )
+        # placement optimizers watching this cluster (register_placement):
+        # restart_server tells them to drop cached plans routed to the
+        # restarted PE.  Cluster-level default placement policy, settable
+        # via tuned FlowProfiles (set_flow).
+        self._placements: list = []
+        self.placement_policy: str | None = None
 
     @property
     def client_index(self) -> int:
         return self.n_servers
+
+    # ------------------------------------------------------------ placement
+    def capabilities(self) -> "dict[str, Capability]":
+        """Advertised platform/capability vector per live PE."""
+        return dict(self.fabric.capabilities)
+
+    def register_placement(self, optimizer) -> None:
+        """Attach a placement optimizer whose cached plans must be
+        invalidated when a PE restarts (idempotent)."""
+        if optimizer not in self._placements:
+            self._placements.append(optimizer)
+
+    def placement(self):
+        """The most recently registered placement optimizer, or ``None``."""
+        return self._placements[-1] if self._placements else None
+
+    def set_placement(self, policy: "str | None") -> None:
+        """Cluster-wide default placement policy consumed by services when
+        a call doesn't pin one: ``"pushdown"``, ``"pull"``, ``"auto"``
+        (consult a placement optimizer), or ``None`` (service default)."""
+        if policy is not None and policy not in ("pushdown", "pull", "auto"):
+            raise ValueError(f"unknown placement policy {policy!r}")
+        self.placement_policy = policy
 
     def set_batching(self, enabled: bool) -> None:
         """Flip every PE between the per-message and the batched runtime
@@ -121,6 +156,8 @@ class Cluster:
                 poll_budget = None if pb is None else int(pb)
             if profile.get("tenant_budgets"):
                 self.set_tenant_budgets(dict(profile["tenant_budgets"]))
+            if "placement" in profile:
+                self.set_placement(profile["placement"])
         for pe in self.pes():
             if lanes is not None:
                 pe.lanes = lanes
@@ -350,4 +387,9 @@ class Cluster:
             # its fresh seq stream restarts at 1 — stale windows would
             # swallow both)
             peer.forget_peer_state(name)
+        # the fresh PE re-advertised its capability vector under a new
+        # epoch (PE.__init__); any placement plan priced against the dead
+        # incarnation is garbage — drop it so the next plan() re-prices
+        for optimizer in self._placements:
+            optimizer.invalidate_peer(name)
         return pe

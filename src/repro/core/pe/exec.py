@@ -115,8 +115,31 @@ class ExecLayer:
 
     # --- payload/dep decoding ---------------------------------------------
     @staticmethod
+    def _pad_ragged(aval, payload: bytes) -> bytes:
+        """Zero-extend a ragged payload to the entry's declared aval.
+
+        An xrdma action row's self-describing ``plen`` lets the *send* side
+        ship only the meaningful prefix (e.g. a Filter RETURN carrying just
+        the survivor rows).  The executable's input shape is static, so an
+        entry that declares the ``ragged:`` dep tag opts into receiver-side
+        zero-padding — its semantics must not depend on the padded tail
+        (the Filter fold scatters by position and drops ``-1`` slots).  A
+        payload *longer* than the declared aval is still a protocol error.
+        """
+        want = int(np.prod(aval.shape)) * np.dtype(aval.dtype).itemsize
+        if len(payload) > want:
+            raise ProtocolError(
+                f"ragged payload of {len(payload)} B exceeds declared {want} B"
+            )
+        if len(payload) < want:
+            payload = bytes(payload) + b"\0" * (want - len(payload))
+        return payload
+
+    @staticmethod
     def decode_payload(exe: CachedExecutable, payload: bytes) -> np.ndarray:
         aval = exe.in_avals[0]
+        if dep_named(exe, "ragged") is not None:
+            payload = ExecLayer._pad_ragged(aval, payload)
         arr = np.frombuffer(payload, dtype=aval.dtype)
         return arr.reshape(aval.shape)
 
@@ -132,6 +155,8 @@ class ExecLayer:
         simply discarded.
         """
         aval = exe.in_avals[0]
+        if dep_named(exe, "ragged") is not None:
+            pays = [ExecLayer._pad_ragged(aval, p) for p in pays]
         arr = np.frombuffer(b"".join(pays), dtype=aval.dtype)
         arr = arr.reshape((len(pays), *aval.shape))
         if bucket > len(pays):

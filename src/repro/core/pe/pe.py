@@ -32,7 +32,7 @@ from ..dataplane import DataPlaneConfig
 from ..frame import Frame, FrameFlags, FrameKind, HopHeader, ProtocolError, pack_hop
 from ..propagate import PropagationConfig, tree_children
 from ..reliability import ReliabilityConfig
-from ..transport import EndpointDead, Fabric
+from ..transport import Capability, EndpointDead, Fabric
 from ..verify import SandboxConfig, Verifier
 from .codecache import CodeCacheLayer
 from .cq import CompletionQueue, GatherFuture
@@ -156,6 +156,12 @@ class PE:
         self.triple = triple
         self.fabric = fabric
         self.endpoint = fabric.connect(name)
+        # advertise the platform/capability vector at connect time — the
+        # placement layer and hetero wire pricing read it from the fabric;
+        # a restarted PE re-advertises here with a fresh epoch
+        self.capability = fabric.advertise(
+            name, Capability.for_triple(triple, platform_of(triple))
+        )
         self.toolchain = toolchain
         self.peers: list[str] = list(peers)
         self.target_cache = TargetCodeCache()

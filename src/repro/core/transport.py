@@ -21,7 +21,7 @@ from __future__ import annotations
 import struct
 import threading
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Iterator, Sequence
 
 import numpy as np
@@ -81,6 +81,98 @@ WIRE_PROFILES: dict[str, WireModel] = {
         beta_tput_Bus=float("inf"),
     ),
 }
+
+
+# ------------------------------------------------------------- capabilities
+#: Which calibrated wire profile a PE of a given toolchain triple fronts:
+#: the host Xeon and the BlueField-2 DPU sit on the *same* 100 Gb/s link
+#: but pay very different per-message costs (Tables I-VI), which is the
+#: asymmetry the placement optimizer prices.
+TRIPLE_WIRE: dict[str, str] = {
+    "cpu-host": "thor_xeon",
+    "cpu-a64fx": "ookami",
+    "cpu-bf2": "thor_bf2",
+    "tpu-v5e": "thor_xeon",
+}
+
+#: Memory-bandwidth class per triple — the DPU's weak Arm cores stream a
+#: shard scan far slower than the host (the paper's BF2 caveat, Sec. V).
+MEM_BW_CLASS: dict[str, str] = {
+    "cpu-host": "ddr-host",
+    "cpu-a64fx": "hbm",
+    "cpu-bf2": "ddr-dpu",
+    "tpu-v5e": "hbm",
+}
+
+#: Effective single-core streaming scan rate per class, bytes/us.  Modeled
+#: (this container has one CPU core), calibrated to the qualitative gap the
+#: paper reports: BF2 DDR ~half the host's effective rate, HBM far above.
+MEM_BW_BUS: dict[str, float] = {
+    "ddr-host": 16000.0,
+    "ddr-dpu": 8000.0,
+    "hbm": 60000.0,
+}
+
+
+@dataclass(frozen=True)
+class Capability:
+    """A PE's advertised platform/capability vector.
+
+    Registered in the :class:`Fabric` when the PE connects and consumed by
+    the placement layer (:mod:`repro.sharding.placement`): the wire
+    coefficients are the PE's *own* calibrated profile (what its HCA pays
+    to initiate a message), ``mem_bw_class`` prices operand scans executed
+    next to the data.  ``epoch`` is the advertisement generation — bumped
+    on every (re)advertise so cached placement plans can detect restarts.
+    """
+
+    isa: str  # toolchain triple, e.g. "cpu-bf2"
+    platform: str  # jax lowering platform ("cpu" | "tpu")
+    wire: str  # calibrated WireModel name (TRIPLE_WIRE)
+    alpha_us: float
+    beta_Bus: float
+    o_us: float
+    beta_tput_Bus: float
+    mem_bw_class: str  # see MEM_BW_CLASS / MEM_BW_BUS
+    epoch: int = 0
+
+    @classmethod
+    def for_triple(cls, triple: str, platform: str) -> "Capability":
+        wire = TRIPLE_WIRE.get(triple, "thor_xeon")
+        m = WIRE_PROFILES[wire]
+        return cls(
+            isa=triple,
+            platform=platform,
+            wire=wire,
+            alpha_us=m.alpha_us,
+            beta_Bus=m.beta_Bus,
+            o_us=m.o_us,
+            beta_tput_Bus=m.beta_tput_Bus or m.beta_Bus,
+            mem_bw_class=MEM_BW_CLASS.get(triple, "ddr-host"),
+        )
+
+    def model(self) -> WireModel:
+        return WireModel(
+            self.wire, self.alpha_us, self.beta_Bus, self.o_us, self.beta_tput_Bus
+        )
+
+    @property
+    def scan_Bus(self) -> float:
+        """Effective streaming scan bandwidth, bytes/us."""
+        return MEM_BW_BUS[self.mem_bw_class]
+
+    def as_dict(self) -> dict:
+        return {
+            "isa": self.isa,
+            "platform": self.platform,
+            "wire": self.wire,
+            "alpha_us": self.alpha_us,
+            "beta_Bus": self.beta_Bus,
+            "o_us": self.o_us,
+            "beta_tput_Bus": self.beta_tput_Bus,
+            "mem_bw_class": self.mem_bw_class,
+            "epoch": self.epoch,
+        }
 
 
 # ------------------------------------------------------------------ fabric
@@ -320,6 +412,15 @@ class Fabric:
         self.wire = WIRE_PROFILES[wire] if isinstance(wire, str) else wire
         self.endpoints: dict[str, Endpoint] = {}
         self.stats = TrafficStats()
+        # advertised platform/capability vectors (PE.__init__ advertises on
+        # connect; kill/revive drop the entry until the restarted PE
+        # re-advertises).  ``hetero=True`` makes the fabric price each
+        # operation with the *initiator's* advertised wire profile — off by
+        # default so existing single-profile accounting stays bit-identical.
+        self.capabilities: dict[str, Capability] = {}
+        self._cap_models: dict[str, WireModel] = {}
+        self._cap_epoch = 0
+        self.hetero = False
         # framed payloads in flight per (src, dst): bumped on put (by the
         # frame's packed payload count — credits are payload-denominated so
         # a coalesced burst is accounted at its true size), released as the
@@ -372,6 +473,32 @@ class Fabric:
         self.endpoints[name] = ep
         self._clear_credits(name)
         return ep
+
+    # capability registry -----------------------------------------------------
+    def advertise(self, name: str, cap: Capability) -> Capability:
+        """Register (or refresh) ``name``'s capability vector.
+
+        Every advertisement mints a fresh fabric-wide epoch so consumers
+        (cached placement plans) can tell a restarted PE from the one they
+        priced against.  Returns the epoch-stamped vector.
+        """
+        with self._lock:
+            self._cap_epoch += 1
+            cap = replace(cap, epoch=self._cap_epoch)
+            self.capabilities[name] = cap
+            self._cap_models[name] = cap.model()
+        return cap
+
+    def capability(self, name: str) -> Capability | None:
+        return self.capabilities.get(name)
+
+    def _model_for(self, src: str) -> WireModel:
+        """Wire model pricing an operation initiated by ``src``: the
+        initiator's advertised profile under ``hetero``, else the single
+        fabric-wide profile (legacy accounting, bit-identical)."""
+        if not self.hetero:
+            return self.wire
+        return self._cap_models.get(src, self.wire)
 
     # credit accounting ------------------------------------------------------
     def credit_outstanding(self, src: str, dst: str) -> int:
@@ -480,12 +607,13 @@ class Fabric:
         """
         ep = self._target(dst)
         n = len(wire_bytes)
-        t = self.wire.latency_us(n)
+        model = self._model_for(src)
+        t = model.latency_us(n)
         with self._lock:
             self.stats.puts += 1
             self.stats.put_bytes += n
             self.stats.modeled_us += t
-            self.stats.modeled_tput_us += self.wire.inverse_throughput_us(n)
+            self.stats.modeled_tput_us += model.inverse_throughput_us(n)
             self.stats.add_kinds(kinds if kinds is not None else {"payload": n})
             if n_payloads > 1:
                 self.stats.coalesced_frames += 1
@@ -571,14 +699,15 @@ class Fabric:
         nbytes = sum(len(w.data) for w in writes) + 4 * sum(
             1 for w in writes if w.doorbell is not None
         )
-        t = self.wire.latency_us(nbytes) + (len(writes) - 1) * self.wire.o_us
+        model = self._model_for(src)
+        t = model.latency_us(nbytes) + (len(writes) - 1) * model.o_us
         with self._lock:
             self.stats.region_puts += 1
             self.stats.region_put_bytes += nbytes
             self.stats.modeled_us += t
             self.stats.modeled_tput_us += (
                 len(writes) - 1
-            ) * self.wire.o_us + self.wire.inverse_throughput_us(nbytes)
+            ) * model.o_us + model.inverse_throughput_us(nbytes)
             self.stats.add_kinds({"region": nbytes})
             lw0 = self.stats.region_writes_lost
             gd0 = self.stats.region_guard_drops
@@ -623,7 +752,8 @@ class Fabric:
         """
         ep = self._target(dst)
         data = ep.read_region(region, offset, nbytes)
-        t = 2 * self.wire.alpha_us + nbytes / self.wire.beta_Bus
+        model = self._model_for(src)
+        t = 2 * model.alpha_us + nbytes / model.beta_Bus
         with self._lock:
             self.stats.gets += 1
             self.stats.get_bytes += nbytes
@@ -640,11 +770,19 @@ class Fabric:
         ep = self.endpoints[name]
         ep.alive = False
         ep.inbox.clear()
+        self.capabilities.pop(name, None)
+        self._cap_models.pop(name, None)
         self._clear_credits(name)
 
     def revive(self, name: str) -> Endpoint:
-        """Restarted process: fresh endpoint state (all caches/regions gone)."""
+        """Restarted process: fresh endpoint state (all caches/regions gone).
+
+        The capability vector does NOT survive: the revived process must
+        re-advertise (PE.__init__ does) before hetero pricing or placement
+        sees it again."""
         ep = Endpoint(name)
         self.endpoints[name] = ep
+        self.capabilities.pop(name, None)
+        self._cap_models.pop(name, None)
         self._clear_credits(name)
         return ep

@@ -391,6 +391,233 @@ def make_gather_return(
     )
 
 
+# ----------------------------------------------------------------- Filter
+FILTER_HDR = GATHER_HDR + 2  # [requester, slot, epoch, lo, thresh_bits]
+
+
+def make_filter(
+    rows_per_shard: int,
+    n_servers: int,
+    window: int,
+    dim: int,
+    targets: Sequence[str] = ("cpu-host", "cpu-bf2", "cpu-a64fx", "tpu-v5e"),
+    kind: FrameKind = FrameKind.BITCODE,
+    name: str = "filter",
+    returns: str = "filter_return",
+    pallas_tpu: bool = True,
+) -> IFunc:
+    """The DPU predicate-pushdown op: filter a contiguous row window *next
+    to the shard* and RETURN only the survivors.
+
+    Payload ``[requester, slot, epoch, lo, thresh_bits]``: scan the
+    ``window`` rows at global offset ``lo`` (the service aligns windows
+    inside one shard), keep rows whose first column exceeds the f32
+    threshold (``thresh_bits`` travels bit-cast through the i32 payload),
+    and emit ONE ragged RETURN row::
+
+        [slot, epoch, evalmask, spos(W), rows(nsurv*D)]
+
+    with ``plen = 3 + W + nsurv*D`` — the action row's self-describing
+    ``plen`` means only the survivor rows cross the wire, which is the
+    whole point of pushdown: wire payload bytes scale with selectivity,
+    not with the window.  ``spos`` carries the survivors' window
+    positions packed to the front (-1 beyond ``nsurv``); ``evalmask`` is
+    the full window bitmask, so completion fires after one RETURN even
+    when *nothing* survives.  Dropped positions read as zeros at the
+    requester (CQ slots are zeroed at alloc), matching the masked oracle
+    ``where(pred, rows, 0)``.
+
+    Per-ISA slices via ``fn_by_platform`` (paper Fig. 3): the CPU/TPU
+    slices resolve the window with a dynamic slice (Pallas ``embed_lookup``
+    on TPU when the shard blocking allows), while the DPU (``cpu-bf2``)
+    slice ships a masked-take body — the BF2's Arm cores prefer the
+    branch-free gather over a strided slice.  Every slice computes
+    identical survivors; only the lowering differs.
+    """
+    W, D, S = window, dim, n_servers
+    if W > 31:
+        raise ValueError("window > 31 would overflow the i32 position bitmask")
+    evalmask = (1 << W) - 1
+    ret_hdr = 3  # [slot, epoch, evalmask]
+    width = 3 + ret_hdr + W + W * D  # max plen: every row survives
+
+    def entry_with(resolve):
+        def entry(payload: jax.Array, shard: jax.Array, meta: jax.Array) -> jax.Array:
+            requester, slot, epoch = payload[0], payload[1], payload[2]
+            lo = payload[3]
+            thresh = lax.bitcast_convert_type(payload[4], jnp.float32)
+            shard_id, rows_per = meta[0], meta[1]
+            base = shard_id * rows_per
+            rows = resolve(shard, lo, base)  # (W, D) f32 window
+            passed = rows[:, 0] > thresh
+            nsurv = jnp.sum(passed.astype(I32))
+            # survivors packed to the front, original window order kept
+            order = jnp.argsort(~passed, stable=True).astype(I32)
+            packed = jnp.arange(W, dtype=I32) < nsurv
+            spos = jnp.where(packed, order, -1)
+            srows = jnp.where(packed[:, None], rows[order], 0.0)
+            irows = lax.bitcast_convert_type(
+                srows.astype(jnp.float32), I32
+            ).reshape(-1)
+            plen = ret_hdr + W + nsurv * D  # ragged: survivors only
+            return jnp.concatenate(
+                [
+                    jnp.stack(
+                        [jnp.asarray(A_RETURN, I32), requester.astype(I32), plen]
+                    ),
+                    jnp.stack([slot, epoch, jnp.asarray(evalmask, I32)]),
+                    spos,
+                    irows,
+                ]
+            )  # one self-describing action row of `width` i32 words
+
+        return entry
+
+    def sliced_resolve(shard, lo, base):
+        return lax.dynamic_slice(shard, (lo - base, jnp.asarray(0, I32)), (W, D))
+
+    def masked_take_resolve(shard, lo, base):
+        return _take_rows(shard, lo + jnp.arange(W, dtype=I32), base)
+
+    fn_by_platform: dict = {"cpu-bf2": entry_with(masked_take_resolve)}
+    # the TPU slice carries the Pallas resolver under the same blocking
+    # constraints as the Gatherer; FatBitcode.build falls back to the
+    # portable sliced entry if the kernel cannot cross-lower from here
+    if pallas_tpu and (rows_per_shard <= 512 or rows_per_shard % 512 == 0):
+        try:
+            from repro.kernels.embed_lookup.kernel import embed_lookup
+
+            def pallas_resolve(shard, lo, base):
+                keys = lo + jnp.arange(W, dtype=I32)
+                return embed_lookup(shard, keys, base, bt=min(256, W))
+
+            fn_by_platform["tpu"] = entry_with(pallas_resolve)
+        except Exception:
+            pass
+
+    return IFunc.build(
+        name=name,
+        fn=entry_with(sliced_resolve),
+        payload_aval=jax.ShapeDtypeStruct((FILTER_HDR,), I32),
+        dep_avals=(
+            jax.ShapeDtypeStruct((rows_per_shard, D), jnp.float32),
+            jax.ShapeDtypeStruct((3,), I32),
+        ),
+        deps=("region:embed_shard", "cap:gather_meta", f"returns:{returns}"),
+        abi="xrdma",
+        targets=targets,
+        kind=kind,
+        fn_by_platform=fn_by_platform,
+    )
+
+
+def _filter_slab(window: int, dim: int, region: str = "cq_results") -> SlabLayout:
+    """Zero-copy layout of a Filter RETURN over the gather CQ slot row
+    ``[posmask, epoch, data(W*D)]``: survivor rows become contiguous-run
+    WRITE segments at their window-position offsets and the doorbell ORs
+    the *evalmask* (whole window observed) — so the chain stays
+    proportional to survivors while completion still fires, even with an
+    empty survivor set (doorbell-only write).  Ragged-aware: the payload
+    the sender hands over carries ``3 + W + nsurv*D`` words."""
+    W, D = window, dim
+    stride = (2 + W * D) * 4  # slot row bytes
+
+    def plan(pay: np.ndarray) -> list[RegionWrite]:
+        slot, epoch, evalmask = int(pay[0]), int(pay[1]), int(pay[2])
+        spos = pay[3 : 3 + W]
+        nsurv = int(np.sum(spos >= 0))
+        rows = pay[3 + W : 3 + W + nsurv * D].reshape(nsurv, D)
+        base = slot * stride
+        guard = (base + 4, epoch)
+        writes = []
+        if nsurv:
+            pos = spos[:nsurv].astype(np.int64)
+            # survivors are packed; split only on window-position gaps
+            breaks = np.where(np.diff(pos) != 1)[0] + 1
+            for run in np.split(np.arange(nsurv), breaks):
+                i0, i1 = int(run[0]), int(run[-1])
+                writes.append(
+                    RegionWrite(
+                        region,
+                        base + (2 + int(pos[i0]) * D) * 4,
+                        rows[i0 : i1 + 1].tobytes(),
+                        guard=guard,
+                    )
+                )
+        if writes:
+            last = writes[-1]
+            writes[-1] = RegionWrite(
+                last.region, last.offset, last.data,
+                doorbell=(base, evalmask, "or"), guard=guard,
+            )
+        else:
+            # nothing survived: the doorbell alone completes the window
+            writes.append(
+                RegionWrite(
+                    region, base, b"", doorbell=(base, evalmask, "or"), guard=guard
+                )
+            )
+        return writes
+
+    return SlabLayout(region=region, plan=plan)
+
+
+def make_filter_return(
+    max_slots: int,
+    window: int,
+    dim: int,
+    region: str = "cq_results",
+    targets: Sequence[str] = ("cpu-host", "cpu-bf2", "cpu-a64fx", "tpu-v5e"),
+    kind: FrameKind = FrameKind.BITCODE,
+    name: str = "filter_return",
+) -> IFunc:
+    """Fold one Filter RETURN into the requester's completion queue.
+
+    Same idempotent position-scatter discipline as ``gather_return`` —
+    OR the arrived bits, scatter rows by position with ``mode="drop"``,
+    drop stale-epoch returns whole — with two filter-specific twists.
+    The bits come from the payload's ``evalmask`` word: the whole window
+    was *observed* even where nothing survived (unobserved is different
+    from empty), so one RETURN completes the window regardless of the
+    survivor count.  And the payload is **ragged**: only ``nsurv`` rows
+    travel behind the always-full ``spos`` vector, and the
+    ``ragged:zeros`` dep tag tells the exec layer to zero-extend to the
+    declared aval — safe because the ``-1`` sentinels in ``spos`` arrive
+    intact and mask off exactly the zero-padded row slots.
+
+    Region row layout: ``[posmask, epoch, data(W*D)]``."""
+    W, D = window, dim
+    if W > 31:
+        raise ValueError("window > 31 would overflow the i32 position bitmask")
+
+    def entry(payload: jax.Array, results: jax.Array) -> jax.Array:
+        slot, epoch, evalmask = payload[0], payload[1], payload[2]
+        spos = payload[3 : 3 + W]
+        rows = payload[3 + W :].reshape(W, D)
+        cur = results[slot]
+        live = cur[1] == epoch  # stale-generation RETURNs drop whole
+        valid = spos >= 0  # packed survivor prefix; -1 beyond nsurv
+        bits = evalmask  # the whole window was observed
+        safe = jnp.where(valid, spos, W)  # W = out of bounds -> dropped
+        block = cur[2:].reshape(W, D).at[safe].set(rows, mode="drop")
+        newrow = jnp.concatenate(
+            [(cur[0] | bits)[None], cur[1][None], block.reshape(-1)]
+        )
+        return results.at[slot].set(jnp.where(live, newrow, cur))
+
+    return IFunc.build(
+        name=name,
+        fn=entry,
+        payload_aval=jax.ShapeDtypeStruct((3 + W + W * D,), I32),
+        dep_avals=(jax.ShapeDtypeStruct((max_slots, 2 + W * D), I32),),
+        deps=(f"region:{region}", "ragged:zeros"),
+        abi="update",
+        targets=targets,
+        kind=kind,
+        slab=_filter_slab(window, dim, region),
+    )
+
+
 # --------------------------------------------------------------------- TSI
 def tsi_entry(payload: jax.Array, counter: jax.Array) -> jax.Array:
     """Target-Side Increment (paper Sec. IV-B): counter += payload[0]."""

@@ -1,12 +1,18 @@
 """Fault-tolerant distributed runtime: heartbeats, stragglers, elastic
 restart-from-checkpoint."""
 
-from .embed_service import EmbedShardService, GatherReport, GatherRequest
+from .embed_service import (
+    EmbedShardService,
+    FilterShardService,
+    GatherReport,
+    GatherRequest,
+)
 from .monitor import HeartbeatMonitor, StepTimer, StragglerPolicy
 from .driver import TrainDriver, TrainReport
 
 __all__ = [
     "EmbedShardService",
+    "FilterShardService",
     "GatherReport",
     "GatherRequest",
     "HeartbeatMonitor",

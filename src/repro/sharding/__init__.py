@@ -1,5 +1,6 @@
 """Distribution layer: logical-axis partition rules, compute-to-data
-collective programs, and distributed-optimization collectives."""
+collective programs, heterogeneous placement pricing, and
+distributed-optimization collectives."""
 
 from .compute_to_data import (
     chase_oracle,
@@ -8,6 +9,7 @@ from .compute_to_data import (
     gather_shard_map,
     gbpc_reference,
 )
+from .placement import PlacementDecision, PlacementOptimizer
 from .partition import (
     DATA_AXES,
     batch_shardings,
@@ -28,6 +30,8 @@ __all__ = [
     "gather_ref",
     "gather_shard_map",
     "gbpc_reference",
+    "PlacementDecision",
+    "PlacementOptimizer",
     "cache_shardings",
     "data_axes",
     "divisible",

@@ -262,3 +262,76 @@ def test_gather_conformance_under_loss(plane):
     rep = svc.gather(batches, dataplane=dataplane)
     for got, want in zip(rep.results, svc.oracle(batches)):
         np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------------- placement axis
+#
+# PR 10's heterogeneous placement layer routes the same logical filter
+# through the pushdown ifunc, the pull GET baseline, or whatever the cost
+# model picks.  The conformance claim: placement is invisible to results —
+# every {batching} x {data plane} x {placement} cell is oracle-identical,
+# including at 5% loss and under the per-tenant sandbox (whose verifier
+# must admit the DPU filter entry's ABI: ragged RETURN payloads included).
+
+PLACEMENTS = ("pushdown", "pull", "auto")
+PLANES = ("framed", "zerocopy", "rendezvous")
+
+
+def _filter_cell(loss: float = 0.0, sandbox: bool = False):
+    from repro.core import SandboxConfig
+    from repro.runtime.embed_service import FilterShardService
+
+    cl = Cluster(n_servers=4, wire="ideal", hetero_wire=True)
+    svc = FilterShardService(cl, vocab=512, dim=16, window=8, max_slots=8, seed=5)
+    if sandbox:
+        cl.set_sandbox(SandboxConfig.on())
+    if loss:
+        cl.set_reliability(ReliabilityConfig.on())
+        cl.fabric.set_loss(loss, seed=11)
+    los = svc.windows(12, seed=6)
+    th = svc.thresh_for_selectivity(0.4)
+    return svc, los, th, svc.oracle_filter(los, th)
+
+
+@pytest.mark.parametrize("placement", PLACEMENTS)
+@pytest.mark.parametrize("plane", PLANES, ids=["framed", "zerocopy", "rndv"])
+@pytest.mark.parametrize("batching", [False, True], ids=["permsg", "batched"])
+def test_filter_placement_conformance(batching, plane, placement):
+    svc, los, th, want = _filter_cell()
+    dataplane = {
+        "framed": None,
+        "zerocopy": DataPlaneConfig.zero_copy(eager_max=0),
+        "rendezvous": DataPlaneConfig.rendezvous(rndv_min=1),
+    }[plane]
+    rep = svc.filter(
+        los, th, batching=batching, dataplane=dataplane, placement=placement
+    )
+    for got, w in zip(rep.results, want):
+        np.testing.assert_array_equal(
+            got, w,
+            err_msg=f"batching={batching} plane={plane} placement={placement}",
+        )
+
+
+@pytest.mark.parametrize("placement", PLACEMENTS)
+def test_filter_placement_conformance_under_loss(placement):
+    svc, los, th, want = _filter_cell(loss=LOSS_RATE)
+    rep = svc.filter(los, th, placement=placement)
+    for got, w in zip(rep.results, want):
+        np.testing.assert_array_equal(got, w, err_msg=f"placement={placement}")
+    if placement == "pushdown":  # the GET path never frames — nothing to lose
+        assert svc.cluster.fabric.stats.frames_lost > 0  # loss really happened
+
+
+@pytest.mark.parametrize("placement", PLACEMENTS)
+def test_filter_placement_conformance_under_sandbox(placement):
+    """The install-time verifier must admit the filter pair's ABI —
+    including the ragged survivor RETURN — and the runtime sandbox must
+    not refuse the per-tenant submission path."""
+    svc, los, th, want = _filter_cell(sandbox=True)
+    rep = svc.filter(los, th, placement=placement)
+    for got, w in zip(rep.results, want):
+        np.testing.assert_array_equal(got, w, err_msg=f"placement={placement}")
+    assert sum(svc.cluster.refusals().values()) == 0, (
+        "verifier/sandbox refused the filter ABI"
+    )
